@@ -1,0 +1,84 @@
+"""Kernel + train-step microbenchmarks (CPU wall clock).
+
+NOTE: Pallas kernels run in interpret mode on CPU -- the timings validate
+plumbing and give a *relative* CPU baseline; TPU performance is modeled by
+the roofline (the kernel's BlockSpec tiling is sized for v5e VMEM/MXU).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.data import PipelineConfig, SyntheticLM
+from repro.kernels.flash_attention import flash_attention_fwd
+from repro.kernels.ref import flash_attention_ref
+from repro.kernels.rmsnorm import rms_norm_fused
+from repro.models import build_model
+from repro.models.layers import flash_attention as jnp_flash
+from repro.optim import AdamW
+from repro.runtime.train import init_state, make_train_step
+
+
+def _time(fn, *args, n=5):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else jax.block_until_ready(fn(*args))
+    t0 = time.time()
+    for _ in range(n):
+        jax.block_until_ready(fn(*args))
+    return (time.time() - t0) / n * 1e6  # us
+
+
+def bench_flash_kernel():
+    b, h, s, hd = 1, 4, 512, 64
+    ks = jax.random.split(jax.random.key(0), 3)
+    q = jax.random.normal(ks[0], (b, h, s, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (b, h, s, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (b, h, s, hd), jnp.float32)
+
+    pallas_us = _time(lambda a, b2, c: flash_attention_fwd(a, b2, c, interpret=True), q, k, v)
+    ref_us = _time(lambda a, b2, c: flash_attention_ref(a, b2, c), q, k, v)
+    err = float(jnp.abs(
+        flash_attention_fwd(q, k, v, interpret=True) - flash_attention_ref(q, k, v)
+    ).max())
+    return [
+        ("flash_kernel_interp_512", pallas_us, f"maxerr={err:.1e}"),
+        ("flash_ref_jnp_512", ref_us, "oracle"),
+    ]
+
+
+def bench_rmsnorm_kernel():
+    x = jax.random.normal(jax.random.key(0), (512, 1024), jnp.float32)
+    w = jnp.ones((1024,))
+    us = _time(lambda a: rms_norm_fused(a, w, interpret=True), x)
+    return [("rmsnorm_kernel_interp", us, "fused 1-pass")]
+
+
+def bench_train_step_tiny():
+    """Tokens/s of the full jitted train step on a tiny dense model (CPU)."""
+    cfg = get_config("qwen2-1.5b", smoke=True)
+    model = build_model(cfg)
+    opt = AdamW(learning_rate=1e-3)
+    step = jax.jit(make_train_step(model, opt), donate_argnums=(0,))
+    pipe = SyntheticLM(PipelineConfig(cfg.vocab_size, 64, 8))
+    state = init_state(model, opt, jax.random.key(0))
+    batch = {k: jnp.asarray(v) for k, v in pipe.global_batch(0).items()}
+    state, _ = step(state, batch)  # compile
+    t0 = time.time()
+    n = 10
+    for i in range(n):
+        state, m = step(state, batch)
+    jax.block_until_ready(m["loss"])
+    dt = (time.time() - t0) / n
+    toks = 8 * 64 / dt
+    return [("train_step_tiny", dt * 1e6, f"{toks:.0f} tokens/s CPU")]
+
+
+def run_all():
+    rows = []
+    rows.extend(bench_flash_kernel())
+    rows.extend(bench_rmsnorm_kernel())
+    rows.extend(bench_train_step_tiny())
+    return rows

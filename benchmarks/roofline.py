@@ -1,0 +1,186 @@
+"""Roofline derivation from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+For every single-pod cell:
+    compute term    = flops_per_device / 197 TFLOP/s       (bf16 MXU peak)
+    memory term     = hbm_bytes_per_device / 819 GB/s
+    collective term = ici_wire_bytes_per_device / 50 GB/s
+                      (+ dcn bytes / 25 GB/s on multi-pod cells)
+    MODEL_FLOPS     = {6,2} * N(_active) * tokens  (train / inference)
+    usefulness      = MODEL_FLOPS / (flops_per_device * n_devices)
+
+All per-device quantities are loop-weighted (launch/hlo_stats.py).  The
+dominant term is the bottleneck; `roofline_fraction` = dominant-term share
+of an ideal perfectly-overlapped step (model_compute_time / dominant_term).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import pathlib
+from typing import Dict, List, Optional
+
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # bytes/s / chip
+ICI_BW = 50e9  # bytes/s / link
+DCN_BW = 25e9  # bytes/s / host (pod axis)
+
+ART = pathlib.Path(__file__).resolve().parent / "artifacts"
+DRYRUN = ART / "dryrun"
+
+
+def _kind_factor(kind: str) -> int:
+    return 6 if kind == "train" else 2
+
+
+# arch metadata for the kernel-adjustment (padded heads on the 16-wide TP axis)
+_ATTN = {
+    # arch: (n_layers, padded_heads, window_or_None)
+    "qwen2-1.5b": (28, 16, None),
+    "yi-9b": (48, 32, None),
+    "gemma-7b": (28, 16, None),
+    "starcoder2-3b": (30, 32, None),
+    "hubert-xlarge": (48, 16, None),
+    "recurrentgemma-2b": (9, 16, 2048),  # attention layers only (1 in 3)
+    "qwen2-vl-7b": (28, 32, None),
+    "dbrx-132b": (40, 48, None),
+    "qwen3-moe-235b-a22b": (94, 64, None),
+    "mamba2-2.7b": (0, 0, None),
+}
+
+
+def _attn_score_traffic_per_dev(r: Dict) -> float:
+    """HBM bytes the jnp attention path spends materializing score blocks.
+
+    The Pallas flash kernel keeps s/p in VMEM, so the TPU-target memory term
+    subtracts this: ~16 B per (query token x key pos x local head) per pass
+    (s and p, fp32, written+read) x 3 passes for train (fwd/remat/bwd), 1
+    for prefill; decode is negligible.
+    """
+    arch = r["arch"]
+    layers, heads_pad, window = _ATTN.get(arch, (0, 0, None))
+    if not layers or r["kind"] == "decode":
+        return 0.0
+    seq = {"train_4k": 4096, "prefill_32k": 32768, "long_500k": 524288}[r["shape"]]
+    s_kv = min(seq, window) if window else seq
+    tokens_dev = r["tokens_per_step"] / r["n_devices"]
+    heads_local = max(heads_pad // 16, 1)
+    passes = 3 if r["kind"] == "train" else 1
+    return 16.0 * tokens_dev * s_kv * heads_local * layers * passes
+
+
+def load_cells(mesh_prefix: str = "singlepod", pattern: str = "*") -> List[Dict]:
+    cells = []
+    for f in sorted(glob.glob(str(DRYRUN / f"{mesh_prefix}_{pattern}.json"))):
+        r = json.loads(pathlib.Path(f).read_text())
+        # exact mesh match: exclude tagged §Perf variant cells from the
+        # baseline table (they load via explicit pattern instead)
+        if r.get("ok") and r.get("mesh") == mesh_prefix:
+            cells.append(r)
+    return cells
+
+
+def roofline_row(r: Dict) -> Dict:
+    hs = r["hlo_stats"]
+    n_dev = r["n_devices"]
+    flops_dev = hs["flops"]
+    compute_t = flops_dev / PEAK_FLOPS
+    memory_raw_t = hs["hbm_bytes"] / HBM_BW
+    # TPU-target adjustment: flash-kernel keeps attention scores in VMEM
+    adj_bytes = min(_attn_score_traffic_per_dev(r), hs["hbm_bytes"] * 0.9)
+    memory_t = (hs["hbm_bytes"] - adj_bytes) / HBM_BW
+    ici = sum(c["ici_bytes"] for c in hs["collectives"].values())
+    dcn = sum(c["dcn_bytes"] for c in hs["collectives"].values())
+    collective_t = ici / ICI_BW + dcn / DCN_BW
+
+    n_params = (
+        r["active_params_estimate"] if r["kind"] != "train" else r["params_estimate"]
+    )
+    if r["kind"] == "train":
+        # MoE models train on active params only
+        n_params = r["active_params_estimate"]
+    model_flops = _kind_factor(r["kind"]) * n_params * r["tokens_per_step"]
+    hlo_flops_global = flops_dev * n_dev
+    usefulness = model_flops / hlo_flops_global if hlo_flops_global else 0.0
+
+    terms = {"compute": compute_t, "memory": memory_t, "collective": collective_t}
+    dominant = max(terms, key=terms.get)
+    ideal_compute = model_flops / (n_dev * PEAK_FLOPS)
+    step_time = max(terms.values())  # perfectly-overlapped bound
+    return {
+        "arch": r["arch"],
+        "shape": r["shape"],
+        "mesh": r["mesh"],
+        "microbatches": r.get("microbatches"),
+        "compute_s": compute_t,
+        "memory_s": memory_t,
+        "memory_raw_s": memory_raw_t,  # before the flash-kernel VMEM adjustment
+        "collective_s": collective_t,
+        "dcn_s": dcn / DCN_BW,
+        "dominant": dominant,
+        "model_flops": model_flops,
+        "hlo_flops_global": hlo_flops_global,
+        "usefulness": usefulness,
+        "roofline_fraction": ideal_compute / step_time if step_time else 0.0,
+        "hbm_gb_per_dev": (
+            r["memory_analysis"].get("argument_size_in_bytes", 0)
+            + r["memory_analysis"].get("temp_size_in_bytes", 0)
+            + r["memory_analysis"].get("output_size_in_bytes", 0)
+            - r["memory_analysis"].get("alias_size_in_bytes", 0)
+        ) / 1e9,
+    }
+
+
+def suggestion(row: Dict) -> str:
+    d = row["dominant"]
+    if d == "collective":
+        return (
+            "cut collective bytes: fewer grad-accumulation param re-gathers "
+            "(SP/ZeRO stage change) or rebalance TP vs DP for this model size"
+        )
+    if d == "memory":
+        return (
+            "cut HBM traffic: KV-cache aliasing/sharding (decode) or "
+            "larger fused blocks / fewer remat re-reads (train)"
+        )
+    return "compute-bound: reduce padded-head / causal-mask waste, fuse attention"
+
+
+def table(mesh_prefix: str = "singlepod", pattern: str = "*") -> List[Dict]:
+    return [roofline_row(r) for r in load_cells(mesh_prefix, pattern)]
+
+
+def markdown(rows: List[Dict]) -> str:
+    hdr = (
+        "| arch | shape | mb | compute s | memory s | collective s | dominant | "
+        "MODEL/HLO flops | roofline frac | HBM GB/dev |\n|---|---|---|---|---|---|---|---|---|---|\n"
+    )
+    lines = []
+    for r in rows:
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['microbatches'] or '-'} "
+            f"| {r['compute_s']:.3f} | {r['memory_s']:.3f} | {r['collective_s']:.3f} "
+            f"| **{r['dominant']}** | {r['usefulness']:.2f} "
+            f"| {r['roofline_fraction']:.3f} | {r['hbm_gb_per_dev']:.1f} |"
+        )
+    return hdr + "\n".join(lines) + "\n"
+
+
+def run_all():
+    rows = table()
+    out = ART / "roofline_singlepod.json"
+    out.write_text(json.dumps(rows, indent=2))
+    (ART / "roofline_singlepod.md").write_text(markdown(rows))
+    worst = min(rows, key=lambda r: r["roofline_fraction"]) if rows else None
+    bench_rows = []
+    for r in rows:
+        bench_rows.append((
+            f"roofline_{r['arch']}_{r['shape']}",
+            max(r["compute_s"], r["memory_s"], r["collective_s"]) * 1e6,
+            f"dom={r['dominant']};frac={r['roofline_fraction']:.3f}",
+        ))
+    if worst:
+        bench_rows.append((
+            "roofline_worst_cell", 0.0,
+            f"{worst['arch']}/{worst['shape']} frac={worst['roofline_fraction']:.4f}",
+        ))
+    return bench_rows

@@ -1,0 +1,33 @@
+"""Benchmark aggregator: one function per paper table/figure + roofline.
+
+Prints ``name,us_per_call,derived`` CSV.  The 512-device dry-run itself is a
+separate (long-running) launcher: ``python -m repro.launch.dryrun``; here we
+consume its artifacts for the roofline rows if present.
+"""
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
+
+
+def main() -> None:
+    from benchmarks import kernel_bench, paper_figs, roofline, technique_bench, traces_bench
+
+    rows = []
+    rows.extend(paper_figs.run_all())
+    rows.extend(traces_bench.run_all())
+    rows.extend(kernel_bench.run_all())
+    rows.extend(technique_bench.run_all())
+    try:
+        rows.extend(roofline.run_all())
+    except Exception as e:  # artifacts absent: dry-run not yet executed
+        rows.append(("roofline", 0.0, f"skipped: {type(e).__name__}: {e}"))
+
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

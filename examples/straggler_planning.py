@@ -1,0 +1,39 @@
+"""Reproduce the paper's §VII experiment end-to-end on trace-like jobs:
+
+  1. build per-job task service-time datasets (Google-trace stand-ins),
+  2. classify tails (Fig 11),
+  3. sweep redundancy level B and estimate normalized E[T] (Figs 12-13),
+  4. report the planned speedup per job.
+
+Run:  PYTHONPATH=src python examples/straggler_planning.py
+"""
+import numpy as np
+
+from repro.core import traces
+from repro.core.planner import RedundancyPlanner
+
+N = 100  # worker budget, as in the paper's figures
+
+
+def main():
+    jobs = traces.synthetic_google_jobs()
+    planner = RedundancyPlanner(N)
+    print(f"{'job':8s} {'family':12s} {'tasks':>6s} {'B*':>4s} {'r*':>4s} "
+          f"{'E[T]/E[T_B=N]':>14s} {'speedup':>8s}")
+    for j in jobs:
+        fam = traces.tail_family(j.task_times)
+        plan = planner.plan_empirical(j.task_times, "mean", n_mc=6000, seed=0)
+        means = np.asarray(plan.frontier_mean)
+        base = means[plan.frontier_B.index(N)]  # full parallelism = no redundancy
+        best = means.min()
+        print(
+            f"{j.name:8s} {fam:12s} {j.n_tasks:6d} {plan.n_batches:4d} "
+            f"{plan.replication:4d} {best / base:14.3f} {base / best:7.1f}x"
+        )
+    print("\nheavy-tail jobs gain up to an order of magnitude from planned "
+          "replication; exponential-tail jobs with large shifts prefer full "
+          "parallelism -- the paper's Figs 12-13 conclusion.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+"""The paper's primary contribution: efficient replication planning.
+
+Public surface:
+  * batching / assignment  -- §III-§IV schemes and majorization tools
+  * service_time           -- Exp / SExp / Pareto / Empirical models
+  * analysis               -- closed-form E[T], CoV[T] and regime boundaries
+  * coupon                 -- Lemma 1 coverage probability of random placement
+  * simulator              -- vectorized Monte-Carlo job-time oracle
+  * planner                -- RedundancyPlanner -> (B, r) for the runtime
+  * traces                 -- Google-trace-like workload generator (§VII)
+"""
+from . import analysis, assignment, batching, coupon, simulator, traces
+from .planner import RedundancyPlan, RedundancyPlanner, fit_service_time
+from .service_time import (
+    Empirical,
+    Exponential,
+    Pareto,
+    ServiceTime,
+    ShiftedExponential,
+    min_of,
+)
+
+__all__ = [
+    "analysis",
+    "assignment",
+    "batching",
+    "coupon",
+    "simulator",
+    "traces",
+    "RedundancyPlan",
+    "RedundancyPlanner",
+    "fit_service_time",
+    "Empirical",
+    "Exponential",
+    "Pareto",
+    "ServiceTime",
+    "ShiftedExponential",
+    "min_of",
+]

@@ -1,0 +1,186 @@
+"""RedundancyPlanner: the paper's §VI-§VII results as a control-plane service.
+
+Given a worker budget N and knowledge of the task/step service-time behaviour
+(a fitted distribution or raw trace samples), the planner returns the
+operating point on the diversity-parallelism spectrum:
+
+    B  = number of distinct (non-overlapping) batches / data shards
+    r  = N / B = replication factor per batch
+
+optimizing either average job time (paper Thms 3/5/8), predictability
+(CoV, Thms 4/7/10), or a weighted blend -- the paper's "system administrator
+middle point" (§VI-A closing remark).
+
+The distributed runtime (repro.distributed) consumes the plan to factorize
+the data mesh axis into ("replica", "shard"), and the elastic controller
+replans on membership changes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Iterable, Sequence
+
+import numpy as np
+
+from . import analysis
+from .service_time import (
+    Empirical,
+    Exponential,
+    Pareto,
+    ServiceTime,
+    ShiftedExponential,
+)
+
+__all__ = ["RedundancyPlan", "RedundancyPlanner", "fit_service_time"]
+
+
+@dataclasses.dataclass(frozen=True)
+class RedundancyPlan:
+    n_workers: int
+    n_batches: int  # B: distinct data shards
+    replication: int  # r = N / B
+    objective: str  # 'mean' | 'cov' | 'blend'
+    predicted_mean: float
+    predicted_cov: float
+    # full frontier for observability dashboards
+    frontier_B: tuple
+    frontier_mean: tuple
+    frontier_cov: tuple
+    source: str  # 'closed_form:<dist>' | 'empirical_bootstrap'
+
+    @property
+    def diversity(self) -> float:
+        """0 = full parallelism (B=N), 1 = full diversity (B=1)."""
+        if self.n_workers == 1:
+            return 1.0
+        return 1.0 - (self.n_batches - 1) / (self.n_workers - 1)
+
+
+def fit_service_time(samples: Sequence[float]) -> ServiceTime:
+    """Fit Exp / SExp / Pareto by maximum likelihood and pick by log-lik.
+
+    Mirrors §VII: classify a job's tasks as exponential-tail or heavy-tail
+    from its service-time records, then plan with the matching closed form.
+    """
+    x = np.asarray(samples, dtype=np.float64)
+    x = x[x > 0]
+    if x.size < 2:
+        raise ValueError("need at least 2 positive samples")
+    n = x.size
+    xmin, xbar = float(x.min()), float(x.mean())
+
+    fits: list[tuple[float, ServiceTime]] = []
+
+    # Exponential(mu): MLE mu = 1/mean
+    mu = 1.0 / xbar
+    ll_exp = n * math.log(mu) - mu * x.sum()
+    fits.append((ll_exp, Exponential(mu=mu)))
+
+    # ShiftedExponential(delta, mu): MLE delta = min, mu = 1/(mean - min)
+    if xbar > xmin:
+        delta = xmin
+        mu_s = 1.0 / (xbar - xmin)
+        ll_sexp = n * math.log(mu_s) - mu_s * float((x - delta).sum())
+        fits.append((ll_sexp, ShiftedExponential(delta=delta, mu=mu_s)))
+
+    # Pareto(sigma, alpha): MLE sigma = min, alpha = n / sum log(x/sigma)
+    logs = np.log(x / xmin)
+    s_logs = float(logs.sum())
+    if s_logs > 0:
+        alpha = n / s_logs
+        ll_par = n * math.log(alpha) + n * alpha * math.log(xmin) - (alpha + 1.0) * float(
+            np.log(x).sum()
+        )
+        fits.append((ll_par, Pareto(sigma=xmin, alpha=alpha)))
+
+    fits.sort(key=lambda p: p[0], reverse=True)
+    return fits[0][1]
+
+
+class RedundancyPlanner:
+    """Plans (B, r) for a worker budget from closed forms or traces."""
+
+    def __init__(self, n_workers: int, candidates: Iterable[int] | None = None):
+        self.n_workers = int(n_workers)
+        self.candidates = (
+            list(candidates) if candidates is not None else analysis.feasible_B(self.n_workers)
+        )
+
+    # -- closed-form path ---------------------------------------------------
+
+    def plan(
+        self, dist: ServiceTime, objective: str = "mean", blend: float = 0.5
+    ) -> RedundancyPlan:
+        if isinstance(dist, Empirical):
+            return self.plan_empirical(np.asarray(dist.samples), objective, blend=blend)
+        n = self.n_workers
+        means = np.array([analysis.mean_T(dist, n, b) for b in self.candidates])
+        covs = np.array([analysis.cov_T(dist, n, b) for b in self.candidates])
+        b = self._select(means, covs, objective, blend)
+        return self._mk_plan(b, means, covs, objective, f"closed_form:{type(dist).__name__}")
+
+    # -- trace/empirical path (bootstrap over the §VI size model) -----------
+
+    def plan_empirical(
+        self,
+        samples: np.ndarray,
+        objective: str = "mean",
+        n_mc: int = 20_000,
+        seed: int = 0,
+        blend: float = 0.5,
+    ) -> RedundancyPlan:
+        """Estimate E[T](B) and CoV(B) by resampling task times from the trace.
+
+        This is the experiment of Figs. 12-13: for each feasible B, draw task
+        service times, form batch times (N/B)*tau, take max-min.
+        """
+        x = np.asarray(samples, dtype=np.float64)
+        rng = np.random.default_rng(seed)
+        n = self.n_workers
+        means, covs = [], []
+        for b in self.candidates:
+            r = n // b
+            draws = rng.choice(x, size=(n_mc, b, r), replace=True) * (n / b)
+            t = draws.min(axis=2).max(axis=1)
+            means.append(float(t.mean()))
+            covs.append(float(t.std() / t.mean()))
+        means, covs = np.array(means), np.array(covs)
+        b = self._select(means, covs, objective, blend)
+        return self._mk_plan(b, means, covs, objective, "empirical_bootstrap")
+
+    def plan_auto(self, samples: np.ndarray, objective: str = "mean") -> RedundancyPlan:
+        """§VII methodology: fit the tail family, then use its closed form."""
+        dist = fit_service_time(samples)
+        return self.plan(dist, objective=objective)
+
+    # -- helpers -------------------------------------------------------------
+
+    def _select(self, means, covs, objective, blend) -> int:
+        if objective == "mean":
+            idx = int(np.argmin(means))
+        elif objective == "cov":
+            idx = int(np.argmin(covs))
+        elif objective == "blend":
+            # normalized blend: the administrator's middle point
+            mn = (means - means.min()) / max(float(np.ptp(means)), 1e-12)
+            cn = (covs - covs.min()) / max(float(np.ptp(covs)), 1e-12)
+            idx = int(np.argmin(blend * mn + (1 - blend) * cn))
+        else:
+            raise ValueError(f"unknown objective {objective!r}")
+        return self.candidates[idx]
+
+    def _mk_plan(self, b, means, covs, objective, source) -> RedundancyPlan:
+        i = self.candidates.index(b)
+        return RedundancyPlan(
+            n_workers=self.n_workers,
+            n_batches=b,
+            replication=self.n_workers // b,
+            objective=objective,
+            predicted_mean=float(means[i]),
+            predicted_cov=float(covs[i]),
+            frontier_B=tuple(self.candidates),
+            frontier_mean=tuple(float(m) for m in means),
+            frontier_cov=tuple(float(c) for c in covs),
+            source=source,
+        )

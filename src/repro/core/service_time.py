@@ -1,0 +1,205 @@
+"""Service-time models from §II-D of the paper.
+
+Three families, all "stochastically decreasing and convex" in the sense the
+paper needs for the majorization results:
+
+  * ``Exp(mu)``            -- memoryless baseline (Eq. 3)
+  * ``SExp(delta, mu)``    -- shifted exponential, minimum service time delta (Eq. 4)
+  * ``Pareto(sigma, alpha)`` -- heavy tail, scale sigma / shape alpha (Eq. 5)
+
+Two usage modes mirror the paper:
+
+  * §IV (batch-level model): the service time of *batch i at worker j*,
+    ``T_ij``, is drawn i.i.d. from the distribution directly.
+  * §VI (size-dependent model, from Gardner et al. [71]): a *task* has service
+    time ``tau`` and a batch of ``s`` tasks takes ``s * tau``.  This is what
+    the optimal-redundancy-level results use; ``scaled_by`` implements it.
+
+Everything is a small frozen dataclass so it can be passed around configs and
+hashed into jit static args.  Sampling works with both numpy Generators and
+jax PRNG keys (the Monte-Carlo simulator uses jax, the planner's bootstrap
+uses numpy).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+ArrayLike = Union[np.ndarray, jax.Array]
+
+
+@dataclasses.dataclass(frozen=True)
+class ServiceTime:
+    """Base class: a positive random variable with a CCDF and samplers."""
+
+    def ccdf(self, t: ArrayLike) -> ArrayLike:
+        raise NotImplementedError
+
+    def mean(self) -> float:
+        raise NotImplementedError
+
+    def var(self) -> float:
+        raise NotImplementedError
+
+    def sample(self, key: jax.Array, shape: tuple) -> jax.Array:
+        """jax sampler (traceable)."""
+        raise NotImplementedError
+
+    def sample_np(self, rng: np.random.Generator, shape: tuple) -> np.ndarray:
+        """numpy sampler (host-side planning)."""
+        raise NotImplementedError
+
+    def scaled_by(self, s: float) -> "ServiceTime":
+        """Distribution of ``s * tau`` (size-dependent batch model, §VI)."""
+        raise NotImplementedError
+
+    def cov(self) -> float:
+        m = self.mean()
+        return math.sqrt(self.var()) / m
+
+
+@dataclasses.dataclass(frozen=True)
+class Exponential(ServiceTime):
+    mu: float  # rate
+
+    def ccdf(self, t):
+        xp = jnp if isinstance(t, jax.Array) else np
+        t = xp.asarray(t)
+        return xp.where(t >= 0.0, xp.exp(-self.mu * t), 1.0)
+
+    def mean(self):
+        return 1.0 / self.mu
+
+    def var(self):
+        return 1.0 / self.mu**2
+
+    def sample(self, key, shape):
+        return jax.random.exponential(key, shape) / self.mu
+
+    def sample_np(self, rng, shape):
+        return rng.exponential(scale=1.0 / self.mu, size=shape)
+
+    def scaled_by(self, s):
+        # s * Exp(mu) ~ Exp(mu / s)
+        return Exponential(mu=self.mu / s)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShiftedExponential(ServiceTime):
+    delta: float  # minimum service time (shift)
+    mu: float  # rate of the random part
+
+    def ccdf(self, t):
+        xp = jnp if isinstance(t, jax.Array) else np
+        t = xp.asarray(t)
+        return xp.where(t >= self.delta, xp.exp(-self.mu * (t - self.delta)), 1.0)
+
+    def mean(self):
+        return self.delta + 1.0 / self.mu
+
+    def var(self):
+        return 1.0 / self.mu**2
+
+    def sample(self, key, shape):
+        return self.delta + jax.random.exponential(key, shape) / self.mu
+
+    def sample_np(self, rng, shape):
+        return self.delta + rng.exponential(scale=1.0 / self.mu, size=shape)
+
+    def scaled_by(self, s):
+        # s * SExp(delta, mu) ~ SExp(s * delta, mu / s)
+        return ShiftedExponential(delta=self.delta * s, mu=self.mu / s)
+
+
+@dataclasses.dataclass(frozen=True)
+class Pareto(ServiceTime):
+    sigma: float  # scale (minimum value)
+    alpha: float  # shape (tail index); mean finite iff alpha > 1
+
+    def ccdf(self, t):
+        xp = jnp if isinstance(t, jax.Array) else np
+        t = xp.asarray(t)
+        return xp.where(t >= self.sigma, (t / self.sigma) ** (-self.alpha), 1.0)
+
+    def mean(self):
+        if self.alpha <= 1.0:
+            return math.inf
+        return self.alpha * self.sigma / (self.alpha - 1.0)
+
+    def var(self):
+        if self.alpha <= 2.0:
+            return math.inf
+        a = self.alpha
+        return self.sigma**2 * a / ((a - 1.0) ** 2 * (a - 2.0))
+
+    def sample(self, key, shape):
+        u = jax.random.uniform(key, shape, minval=jnp.finfo(jnp.float32).tiny, maxval=1.0)
+        return self.sigma * u ** (-1.0 / self.alpha)
+
+    def sample_np(self, rng, shape):
+        u = rng.uniform(low=np.finfo(np.float64).tiny, high=1.0, size=shape)
+        return self.sigma * u ** (-1.0 / self.alpha)
+
+    def scaled_by(self, s):
+        # s * Pareto(sigma, alpha) ~ Pareto(s * sigma, alpha)  (alpha unchanged)
+        return Pareto(sigma=self.sigma * s, alpha=self.alpha)
+
+
+@dataclasses.dataclass(frozen=True)
+class Empirical(ServiceTime):
+    """Trace-driven service time: resample (with replacement) from observations.
+
+    ``samples`` is a tuple so the dataclass stays hashable; the paper's §VII
+    experiments draw task service times straight from the Google-trace-derived
+    per-job datasets, which is exactly this.
+    """
+
+    samples: tuple
+
+    def _arr(self):
+        return np.asarray(self.samples, dtype=np.float64)
+
+    def ccdf(self, t):
+        s = self._arr()
+        t = np.asarray(t, dtype=np.float64)
+        # P(X > t) estimated from the empirical distribution.
+        return (s[None, ...] > np.expand_dims(t, -1)).mean(axis=-1)
+
+    def mean(self):
+        return float(self._arr().mean())
+
+    def var(self):
+        return float(self._arr().var())
+
+    def sample(self, key, shape):
+        s = jnp.asarray(self._arr())
+        idx = jax.random.randint(key, shape, 0, s.shape[0])
+        return s[idx]
+
+    def sample_np(self, rng, shape):
+        s = self._arr()
+        return rng.choice(s, size=shape, replace=True)
+
+    def scaled_by(self, s):
+        return Empirical(samples=tuple(float(x) * s for x in self.samples))
+
+
+def min_of(dist: ServiceTime, n: int) -> ServiceTime:
+    """Distribution of min of n i.i.d. draws, where closed under the family.
+
+    Used in §IV: the compute time of a batch hosted by n workers is the first
+    order statistic.  Exp(mu) -> Exp(n mu); SExp(d, mu) -> SExp(d, n mu);
+    Pareto(s, a) -> Pareto(s, n a).
+    """
+    if isinstance(dist, Exponential):
+        return Exponential(mu=dist.mu * n)
+    if isinstance(dist, ShiftedExponential):
+        return ShiftedExponential(delta=dist.delta, mu=dist.mu * n)
+    if isinstance(dist, Pareto):
+        return Pareto(sigma=dist.sigma, alpha=dist.alpha * n)
+    raise TypeError(f"min_of not closed for {type(dist).__name__}")

@@ -1,0 +1,161 @@
+"""Monte-Carlo job compute-time simulator (oracle for §IV-§VI, engine for §VII).
+
+Semantics: every worker w computes its batch and delivers at time ``T_w``;
+the job completes at the earliest time when the union of delivered batches
+covers all N tasks.  For balanced non-overlapping batches this reduces to the
+paper's ``T = max_i min_j T_ij``; for overlapping schemes (Fig. 5) it equals
+the min-over-covers expressions (12)-(15).
+
+All samplers are jax so that millions of samples vectorize; chunked ``lax.map``
+keeps the (samples x workers x tasks) cover tensor inside memory.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .service_time import ServiceTime
+
+__all__ = [
+    "simulate_balanced",
+    "simulate_counts",
+    "simulate_membership",
+    "JobTimeStats",
+    "stats_from_samples",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class JobTimeStats:
+    mean: float
+    std: float
+    cov: float  # coefficient of variation -- the paper's predictability metric
+    p50: float
+    p95: float
+    p99: float
+    n_samples: int
+
+    @staticmethod
+    def empty() -> "JobTimeStats":
+        return JobTimeStats(np.nan, np.nan, np.nan, np.nan, np.nan, np.nan, 0)
+
+
+def stats_from_samples(samples: np.ndarray) -> JobTimeStats:
+    s = np.asarray(samples, dtype=np.float64)
+    m = float(s.mean())
+    sd = float(s.std())
+    return JobTimeStats(
+        mean=m,
+        std=sd,
+        cov=sd / m if m > 0 else np.inf,
+        p50=float(np.percentile(s, 50)),
+        p95=float(np.percentile(s, 95)),
+        p99=float(np.percentile(s, 99)),
+        n_samples=int(s.size),
+    )
+
+
+# --------------------------------------------------------------------------
+# balanced non-overlapping fast path:  T = max_{i<=B} min_{j<=r} s * tau_ij
+# --------------------------------------------------------------------------
+
+
+def simulate_balanced(
+    key: jax.Array,
+    dist: ServiceTime,
+    n_workers: int,
+    n_batches: int,
+    n_samples: int,
+    size_dependent: bool = True,
+) -> np.ndarray:
+    """Job times under the balanced non-overlapping policy.
+
+    size_dependent=True uses the §VI model (batch time = (N/B) * tau);
+    False uses the §IV model (batch times drawn from ``dist`` directly).
+    """
+    if n_workers % n_batches:
+        raise ValueError("B must divide N")
+    r = n_workers // n_batches
+    scale = n_workers / n_batches if size_dependent else 1.0
+    draws = dist.sample(key, (n_samples, n_batches, r)) * scale
+    t = jnp.max(jnp.min(draws, axis=2), axis=1)
+    return np.asarray(t)
+
+
+# --------------------------------------------------------------------------
+# general counts vector (possibly unbalanced; §IV Lemma 2 experiments)
+# --------------------------------------------------------------------------
+
+
+def simulate_counts(
+    key: jax.Array,
+    dist: ServiceTime,
+    counts: np.ndarray,
+    n_samples: int,
+    size_dependent: bool = False,
+    n_tasks: int | None = None,
+) -> np.ndarray:
+    """T = max_i min over N_i hosts, for an arbitrary host-count vector.
+
+    Batches with zero hosts make the job incomplete; we return inf for those
+    samples (the paper's "inaccurate result" failure of random assignment).
+    """
+    counts = np.asarray(counts)
+    n_batches = counts.shape[0]
+    max_c = int(counts.max())
+    scale = 1.0
+    if size_dependent:
+        if n_tasks is None:
+            raise ValueError("size_dependent requires n_tasks")
+        scale = n_tasks / n_batches
+    draws = dist.sample(key, (n_samples, n_batches, max_c)) * scale
+    # mask out slots beyond each batch's host count
+    mask = jnp.arange(max_c)[None, :] < jnp.asarray(counts)[:, None]  # (B, max_c)
+    draws = jnp.where(mask[None], draws, jnp.inf)
+    batch_t = jnp.min(draws, axis=2)  # (S, B); inf where count == 0
+    return np.asarray(jnp.max(batch_t, axis=1))
+
+
+# --------------------------------------------------------------------------
+# general membership matrix (overlapping schemes; earliest-cover semantics)
+# --------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def _cover_times(times: jax.Array, membership: jax.Array, chunk: int = 4096) -> jax.Array:
+    """times: (S, W); membership: (W, T) bool -> (S,) job completion times."""
+
+    def one(ts):
+        order = jnp.argsort(ts)
+        m = membership[order]  # (W, T)
+        covered = jnp.all(jnp.cumsum(m, axis=0) > 0, axis=1)  # (W,)
+        idx = jnp.argmax(covered)  # first worker index at which cover completes
+        complete = covered[-1]
+        t = jnp.sort(ts)[idx]
+        return jnp.where(complete, t, jnp.inf)
+
+    s = times.shape[0]
+    pad = (-s) % chunk
+    padded = jnp.pad(times, ((0, pad), (0, 0)))
+    out = jax.lax.map(jax.vmap(one), padded.reshape(-1, chunk, times.shape[1]))
+    return out.reshape(-1)[:s]
+
+
+def simulate_membership(
+    key: jax.Array,
+    dist: ServiceTime,
+    membership: np.ndarray,
+    n_samples: int,
+    size_dependent: bool = True,
+) -> np.ndarray:
+    """Job times for any batching scheme (Fig. 5 schemes 1/2/3, random, ...)."""
+    membership = np.asarray(membership, dtype=bool)
+    n_workers, _ = membership.shape
+    batch_sizes = membership.sum(axis=1)
+    scale = jnp.asarray(batch_sizes, dtype=jnp.float32) if size_dependent else 1.0
+    draws = dist.sample(key, (n_samples, n_workers)) * scale
+    return np.asarray(_cover_times(draws, jnp.asarray(membership)))

@@ -1,0 +1,3 @@
+from .pipeline import Batch, PipelineConfig, SyntheticLM
+
+__all__ = ["Batch", "PipelineConfig", "SyntheticLM"]

@@ -1,0 +1,3 @@
+from . import collectives, rdp, sharding
+
+__all__ = ["collectives", "rdp", "sharding"]

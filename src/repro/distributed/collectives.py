@@ -1,0 +1,60 @@
+"""Gradient-compression collectives (cross-pod reduction path).
+
+``compressed_allreduce_mean`` implements int8 error-feedback all-reduce for
+use under ``jax.shard_map`` on a slow axis (the DCN "pod" axis): each member
+quantizes its tensor to int8 with a per-member fp32 scale, all-gathers the
+int8 payloads + scales (1 byte/element/member on the wire vs 4), and
+dequant-sums locally.  The quantization residual is returned as the error-
+feedback buffer to be added to the *next* step's input, so the compression
+error telescopes instead of accumulating (Seide et al. / 1-bit SGD lineage).
+
+For a 2-pod mesh this moves ~4x fewer DCN bytes than an fp32 ring
+all-reduce; the intra-pod reductions stay in XLA's native fp32/bf16 path.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Symmetric per-tensor int8 quantization.  Returns (q, scale)."""
+    xf = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(xf)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compressed_allreduce_mean(
+    x: jax.Array,
+    ef: jax.Array,
+    axis_name: str,
+) -> Tuple[jax.Array, jax.Array]:
+    """Mean over ``axis_name`` with int8 payload + error feedback.
+
+    Must be called inside shard_map/pmap with ``axis_name`` bound.
+    Returns (mean estimate, new error-feedback buffer).
+    """
+    y = x.astype(jnp.float32) + ef
+    q, scale = quantize_int8(y)
+    # wire format: int8 payload + fp32 scalar per member
+    qs = jax.lax.all_gather(q, axis_name)  # (n, ...) int8
+    scales = jax.lax.all_gather(scale, axis_name)  # (n,)
+    n = qs.shape[0]
+    total = jnp.tensordot(
+        scales, qs.astype(jnp.float32).reshape(n, -1), axes=1
+    ).reshape(x.shape)
+    mean = total / n
+    new_ef = y - dequantize_int8(q, scale)  # my own residual
+    return mean, new_ef
+
+
+def allreduce_mean(x: jax.Array, axis_name: str) -> jax.Array:
+    """Uncompressed reference path."""
+    return jax.lax.pmean(x, axis_name)

@@ -1,0 +1,52 @@
+"""jit'd public wrappers over the Pallas kernels.
+
+``interpret`` defaults to True off-TPU so the kernels run (and are tested)
+on CPU; on a real TPU backend the compiled kernel path is taken.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .flash_attention import flash_attention_fwd
+from .rmsnorm import rms_norm_fused
+
+
+@functools.cache
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def attention(
+    q: jax.Array,  # model layout: (B, S, H, hd)
+    k: jax.Array,  # (B, S, KH, hd)
+    v: jax.Array,
+    causal: bool = True,
+    window: int | None = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Flash-attention with the model's (B, S, H, hd) layout."""
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    qt = jnp.swapaxes(q, 1, 2)
+    kt = jnp.swapaxes(k, 1, 2)
+    vt = jnp.swapaxes(v, 1, 2)
+    out = flash_attention_fwd(
+        qt, kt, vt, causal=causal, window=window,
+        block_q=block_q, block_k=block_k, interpret=interpret,
+    )
+    return jnp.swapaxes(out, 1, 2)
+
+
+def rmsnorm(
+    x: jax.Array,
+    weight: jax.Array,
+    eps: float = 1e-6,
+    plus_one: bool = False,
+    interpret: bool | None = None,
+) -> jax.Array:
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    return rms_norm_fused(x, weight, eps=eps, plus_one=plus_one, interpret=interpret)

@@ -1,0 +1,238 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede any jax-importing import: jax locks the device count on init.
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each applicable cell this lowers the real step function (train_step for
+``train_*``, prefill for ``prefill_*``, serve_step -- one token against a
+seq_len KV cache -- for ``decode_*``/``long_*``) with production shardings
+onto the 16x16 single-pod and 2x16x16 multi-pod mesh, compiles it, and
+records:
+
+  * memory_analysis()   -- per-device bytes (proves the cell fits HBM)
+  * cost_analysis()     -- per-device FLOPs / bytes accessed
+  * a collective parse of the partitioned HLO: bytes per collective kind,
+    split ICI vs DCN (groups crossing the pod boundary), with ring-model
+    wire-byte estimates
+
+into benchmarks/artifacts/dryrun/<mesh>_<arch>_<shape>.json, which
+benchmarks/roofline.py turns into the three roofline terms.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch all --mesh both
+  PYTHONPATH=src python -m repro.launch.dryrun --arch yi-9b --shape train_4k
+"""
+import argparse
+import json
+import pathlib
+import time
+import traceback
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import SHAPES, applicable_shapes, get_config, skipped_shapes, ARCH_IDS
+from ..models import build_model
+from ..optim import AdamW, cosine_with_warmup
+from ..runtime.serve import jit_prefill, jit_serve_step
+from ..runtime.train import default_microbatches, init_state, jit_train_step
+from . import hlo_stats
+from .mesh import make_production_mesh
+
+ARTIFACTS = pathlib.Path(__file__).resolve().parents[3] / "benchmarks" / "artifacts" / "dryrun"
+
+# dry-run numerics: bf16 params + fp32 Adam moments, TP padding for the
+# 16-wide model axis, vocab padded to 16*128 (DESIGN.md §4)
+DRYRUN_OVERRIDES = dict(
+    param_dtype="bfloat16",
+    compute_dtype="bfloat16",
+    pad_heads_to=16,
+    pad_vocab_to_multiple=2048,
+)
+
+def _mem_fields(compiled) -> Dict:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception:
+        return {"available": False}
+    if ma is None:
+        return {"available": False}
+    fields = [
+        "generated_code_size_in_bytes",
+        "argument_size_in_bytes",
+        "output_size_in_bytes",
+        "temp_size_in_bytes",
+        "alias_size_in_bytes",
+        "host_generated_code_size_in_bytes",
+        "host_argument_size_in_bytes",
+        "host_output_size_in_bytes",
+        "host_temp_size_in_bytes",
+    ]
+    out = {"available": True}
+    for f in fields:
+        v = getattr(ma, f, None)
+        if v is not None:
+            out[f] = int(v)
+    return out
+
+
+def _cost_fields(compiled) -> Dict:
+    try:
+        ca = compiled.cost_analysis()
+    except Exception:
+        return {}
+    if not ca:
+        return {}
+    keep = {}
+    for k, v in ca.items():
+        if isinstance(v, (int, float)) and k in (
+            "flops", "transcendentals", "bytes accessed", "optimal_seconds"
+        ):
+            keep[k] = float(v)
+    return keep
+
+
+def run_cell(
+    arch: str,
+    shape_name: str,
+    multi_pod: bool,
+    out_dir: pathlib.Path,
+    skip_existing: bool = True,
+    overrides: Optional[dict] = None,
+    tag: str = "",
+    mesh_override=None,  # e.g. the RDP ("replica","shard","model") mesh
+) -> Dict:
+    mesh_name = ("multipod" if multi_pod else "singlepod") + tag
+    out_path = out_dir / f"{mesh_name}_{arch}_{shape_name}.json"
+    if skip_existing and out_path.exists():
+        return json.loads(out_path.read_text())
+
+    shape = SHAPES[shape_name]
+    ov = dict(DRYRUN_OVERRIDES)
+    ov.update(overrides or {})
+    mb_override = ov.pop("microbatches", None)
+    mesh_axes_name = ov.pop("mesh_axes", None)
+    cfg = get_config(arch, **ov)
+    model = build_model(cfg)
+    mesh = mesh_override if mesh_override is not None else make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.devices.size
+    pod_stride = 256 if multi_pod else None
+
+    record: Dict = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": mesh_name,
+        "mesh_shape": dict(zip(mesh.axis_names, [int(mesh.shape[a]) for a in mesh.axis_names])),
+        "n_devices": int(n_dev),
+        "kind": shape.kind,
+        "params_estimate": int(cfg.param_count_estimate()),
+        "active_params_estimate": int(cfg.active_param_count_estimate()),
+        "tokens_per_step": int(
+            shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
+        ),
+        "overrides": {k: str(v) for k, v in ov.items()},
+        "ok": False,
+    }
+
+    t0 = time.time()
+    try:
+        with mesh:
+            if shape.kind == "train":
+                optimizer = AdamW(cosine_with_warmup(3e-4, 100, 10_000))
+                mb = mb_override or default_microbatches(model, shape)
+                record["microbatches"] = int(mb)
+                mesh_axes = None
+                if mesh_axes_name == "dp_over_model":
+                    from ..distributed.sharding import MeshAxes
+
+                    mesh_axes = MeshAxes.dp_over_model(mesh)
+                    record["mesh_axes"] = mesh_axes_name
+                step_fn, st_sh, b_sh = jit_train_step(
+                    mesh, model, optimizer, shape, microbatches=mb, mesh_axes=mesh_axes
+                )
+                state_spec = jax.eval_shape(
+                    lambda: init_state(model, optimizer, jax.random.key(0))
+                )
+                lowered = step_fn.lower(state_spec, model.input_specs(shape))
+            elif shape.kind == "prefill":
+                fn, p_sh, b_sh, c_sh = jit_prefill(mesh, model, shape)
+                lowered = fn.lower(model.param_specs(), model.input_specs(shape))
+            else:  # decode
+                fn, p_sh, c_sh, tok_sh = jit_serve_step(mesh, model, shape)
+                lowered = fn.lower(
+                    model.param_specs(),
+                    model.cache_specs(shape),
+                    jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32),
+                    jax.ShapeDtypeStruct((), jnp.int32),
+                )
+            record["lower_s"] = round(time.time() - t0, 2)
+            t1 = time.time()
+            compiled = lowered.compile()
+            record["compile_s"] = round(time.time() - t1, 2)
+            record["memory_analysis"] = _mem_fields(compiled)
+            record["cost_analysis"] = _cost_fields(compiled)
+            t2 = time.time()
+            hlo = compiled.as_text()
+            record["hlo_bytes"] = len(hlo)
+            # loop-aware per-device stats (cost_analysis counts scan bodies once)
+            st = hlo_stats.analyze(hlo, pod_stride=pod_stride)
+            record["hlo_stats"] = hlo_stats.stats_to_dict(st)
+            record["parse_s"] = round(time.time() - t2, 2)
+            del hlo
+            record["ok"] = True
+    except Exception as e:  # recorded, not raised: failures are report items
+        record["error"] = f"{type(e).__name__}: {e}"
+        record["traceback"] = traceback.format_exc()[-4000:]
+
+    out_dir.mkdir(parents=True, exist_ok=True)
+    out_path.write_text(json.dumps(record, indent=2))
+    status = "ok" if record["ok"] else "FAIL"
+    print(
+        f"[{status}] {mesh_name} {arch} {shape_name} "
+        f"lower={record.get('lower_s', '-')}s compile={record.get('compile_s', '-')}s",
+        flush=True,
+    )
+    return record
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="all", help="arch id or 'all'")
+    ap.add_argument("--shape", default="all", help="shape name or 'all'")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default=str(ARTIFACTS))
+    ap.add_argument("--force", action="store_true", help="recompute existing cells")
+    args = ap.parse_args(argv)
+
+    out_dir = pathlib.Path(args.out)
+    archs = ARCH_IDS if args.arch == "all" else [args.arch]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    n_ok = n_fail = 0
+    for arch in archs:
+        shapes = applicable_shapes(arch)
+        if args.shape != "all":
+            if args.shape not in shapes:
+                print(f"[skip] {arch} {args.shape}: {skipped_shapes(arch).get(args.shape, 'n/a')}")
+                continue
+            shapes = {args.shape: shapes[args.shape]}
+        for shape_name in shapes:
+            for mp in meshes:
+                rec = run_cell(arch, shape_name, mp, out_dir, skip_existing=not args.force)
+                n_ok += rec["ok"]
+                n_fail += not rec["ok"]
+        for shape_name, reason in skipped_shapes(arch).items():
+            if args.shape in ("all", shape_name):
+                p = out_dir / f"skipped_{arch}_{shape_name}.json"
+                out_dir.mkdir(parents=True, exist_ok=True)
+                p.write_text(json.dumps({
+                    "arch": arch, "shape": shape_name, "skipped": True, "reason": reason,
+                }, indent=2))
+    print(f"dry-run complete: {n_ok} ok, {n_fail} failed")
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,114 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ must precede any jax import (see dryrun.py)
+
+"""EXPERIMENTS.md §Perf: the hillclimbed variants of the three chosen cells.
+
+Each variant re-lowers the cell with one optimization applied and writes a
+tagged artifact next to the baseline, so the before/after table is
+reproducible from artifacts alone:
+
+  cell A (most collective-bound): qwen3-moe-235b train_4k
+      A1 _sp      sequence parallelism -> microbatches 16 -> 1
+      A2 _spbig   A1 + remat-friendly bigger microbatch split if A1 fits
+  cell B (serving/memory):        qwen2-1.5b decode_32k
+      B1 _carry   KV cache in the layer-scan carry (in-place ring buffer)
+  cell C (paper cell / worst train fraction): qwen2-1.5b train_4k
+      C1 _dpom    TP axis repurposed as data parallelism (DP=256)
+      C2 _dpomsp  C1 with microbatches=4 (logit-memory guard)
+  technique cell: qwen2-1.5b train_4k on the RDP mesh (r=2 replication) --
+      the paper's diversity end quantified in FLOPs (not an optimization;
+      the fault-tolerance/straggler benefit is quantified by the simulator).
+
+Usage: PYTHONPATH=src python -m repro.launch.perf_cells [--only TAG]
+"""
+import argparse
+
+from .dryrun import ARTIFACTS, run_cell
+
+
+VARIANTS = [
+    # (arch, shape, tag, overrides)
+    ("qwen3-moe-235b-a22b", "train_4k", "_sp",
+     {"sequence_parallel": True, "microbatches": 1}),
+    ("qwen2-1.5b", "decode_32k", "_carry", {"cache_in_carry": True}),
+    ("qwen2-1.5b", "train_4k", "_dpom",
+     {"mesh_axes": "dp_over_model", "microbatches": 2}),
+    ("qwen2-1.5b", "train_4k", "_dpom_mb4",
+     {"mesh_axes": "dp_over_model", "microbatches": 4}),
+    # second-iteration combinations
+    ("qwen3-moe-235b-a22b", "train_4k", "_sp_mb2",
+     {"sequence_parallel": True, "microbatches": 2}),
+    ("qwen2-1.5b", "decode_32k", "_carry_nomat",
+     {"cache_in_carry": True, "remat": False}),
+    # iteration 3: backward must not re-run the TP psums (remat policy) --
+    # SP makes saving the block outputs affordable (they are seq-sharded)
+    ("qwen3-moe-235b-a22b", "train_4k", "_sp_saveouts",
+     {"sequence_parallel": True, "microbatches": 1, "remat_policy": "block_outs"}),
+    ("qwen2-1.5b", "train_4k", "_saveouts",
+     {"remat_policy": "block_outs", "microbatches": 4}),
+    # iteration 3 for cell C: dp-over-model needs microbatch rows >= 256
+    # (the earlier mb=2 run exposed the forced-replication bug; see axes.py)
+    ("qwen2-1.5b", "train_4k", "_dpom_mb1",
+     {"mesh_axes": "dp_over_model", "microbatches": 1}),
+    # iteration 4 for cell C: combine DP=256 with the recompute-avoiding
+    # remat policy (block outputs are tiny at 1 row/device)
+    ("qwen2-1.5b", "train_4k", "_dpom_saveouts",
+     {"mesh_axes": "dp_over_model", "microbatches": 1, "remat_policy": "block_outs"}),
+    # iteration 4 for cell B: true-KV ring sharded by sequence over TP
+    # (shard_map flash-combine): -Rx cache footprint/reads for kv<16 archs
+    ("qwen2-1.5b", "decode_32k", "_kvseq",
+     {"cache_in_carry": True, "decode_kv_seq_sharded": True}),
+    # the same two decode levers applied across the zoo (kv=4 -> 4x, kv=2 -> 8x)
+    ("yi-9b", "decode_32k", "_kvseq",
+     {"cache_in_carry": True, "decode_kv_seq_sharded": True}),
+    ("starcoder2-3b", "decode_32k", "_kvseq",
+     {"cache_in_carry": True, "decode_kv_seq_sharded": True}),
+    ("dbrx-132b", "decode_32k", "_kvseq",
+     {"cache_in_carry": True, "decode_kv_seq_sharded": True}),
+    ("gemma-7b", "decode_32k", "_carry", {"cache_in_carry": True}),  # kv=16: carry only
+]
+
+
+def run_technique_cell(force: bool = False):
+    """The paper's own operating point on the mesh: r=2 replication.
+
+    Mesh (replica=2, shard=8, model=16) = 256 chips; batch shards over
+    "shard" only, so each microbatch is computed by 2 replica groups --
+    full diversity cost is visible as ~2x per-device FLOPs vs the plain
+    (16,16) baseline, and buys first-of-r straggler latency + shard-loss
+    tolerance (quantified by core.simulator; EXPERIMENTS §Technique).
+    """
+    from .mesh import make_replicated_mesh
+
+    mesh = make_replicated_mesh(replication=2, n_shards=8, model_parallel=16)
+    return run_cell(
+        "qwen2-1.5b", "train_4k", multi_pod=False, out_dir=ARTIFACTS,
+        skip_existing=not force, overrides={"microbatches": 4}, tag="_rdp_r2",
+        mesh_override=mesh,
+    )
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--only", default=None, help="run one tag only")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--technique", action="store_true", help="run the RDP r=2 cell")
+    args = ap.parse_args(argv)
+    n_fail = 0
+    if args.technique:
+        rec = run_technique_cell(force=args.force)
+        return 0 if rec["ok"] else 1
+    for arch, shape, tag, overrides in VARIANTS:
+        if args.only and args.only != tag:
+            continue
+        rec = run_cell(
+            arch, shape, multi_pod=False, out_dir=ARTIFACTS,
+            skip_existing=not args.force, overrides=overrides, tag=tag,
+        )
+        n_fail += not rec["ok"]
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,111 @@
+"""Unified model API over the zoo: build_model(cfg) -> Model.
+
+Model methods take/return explicit pytrees so the runtime can jit/pjit them
+with sharding annotations; ``input_specs`` produces ShapeDtypeStruct
+stand-ins for every input of the requested shape cell (dry-run contract).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig, ShapeConfig
+from . import hybrid, mamba, transformer
+
+Params = Dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ArchConfig
+    init: Callable
+    train_loss: Callable  # (params, batch) -> (loss, metrics)
+    prefill: Callable  # (params, batch, max_len) -> (last_logits, cache, t)
+    decode_step: Callable  # (params, cache, tokens, t) -> (logits, cache, t+1)
+    init_cache: Callable  # (batch, max_len) -> cache pytree
+
+    # ---------------------------------------------------------------- specs
+
+    def input_specs(self, shape: ShapeConfig) -> Dict[str, jax.ShapeDtypeStruct]:
+        """ShapeDtypeStruct batch stand-ins for a shape cell (no allocation)."""
+        cfg = self.cfg
+        b, s = shape.global_batch, shape.seq_len
+        f32 = jnp.float32
+        i32 = jnp.int32
+        cdt = cfg.dtype("compute")
+        if shape.kind == "decode":
+            return {"tokens": jax.ShapeDtypeStruct((b, 1), i32)}
+        stubbed = cfg.family in ("vlm", "encoder")  # modality frontend is a stub
+        specs: Dict[str, jax.ShapeDtypeStruct] = {}
+        if stubbed:
+            specs["embeds"] = jax.ShapeDtypeStruct((b, s, cfg.d_model), cdt)
+        else:
+            specs["tokens"] = jax.ShapeDtypeStruct((b, s), i32)
+        if cfg.family == "vlm":
+            specs["mrope_positions"] = jax.ShapeDtypeStruct((b, s, 3), i32)
+        if shape.kind == "train":
+            specs["labels"] = jax.ShapeDtypeStruct((b, s), i32)
+            specs["loss_mask"] = jax.ShapeDtypeStruct((b, s), f32)
+        return specs
+
+    def cache_specs(self, shape: ShapeConfig) -> Any:
+        """ShapeDtypeStruct pytree of the decode cache for a shape cell."""
+        b = shape.global_batch
+        dummy = {"tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32)}
+        return jax.eval_shape(lambda: self.init_cache(dummy, shape.seq_len))
+
+    def param_specs(self, seed: int = 0) -> Any:
+        return jax.eval_shape(lambda: self.init(jax.random.key(seed)))
+
+
+def _transformer_model(cfg: ArchConfig) -> Model:
+    return Model(
+        cfg=cfg,
+        init=lambda key: transformer.init_params(key, cfg),
+        train_loss=lambda p, b: transformer.train_loss(p, cfg, b),
+        prefill=lambda p, b, max_len: transformer.prefill(p, cfg, b, max_len),
+        decode_step=lambda p, c, tok, t: transformer.decode_step(p, cfg, c, tok, t),
+        init_cache=lambda b, max_len: transformer.init_cache(cfg, _batch_size(b), max_len),
+    )
+
+
+def _hybrid_model(cfg: ArchConfig) -> Model:
+    return Model(
+        cfg=cfg,
+        init=lambda key: hybrid.init_params(key, cfg),
+        train_loss=lambda p, b: hybrid.train_loss(p, cfg, b),
+        prefill=lambda p, b, max_len: hybrid.prefill(p, cfg, b, max_len),
+        decode_step=lambda p, c, tok, t: hybrid.decode_step(p, cfg, c, tok, t),
+        init_cache=lambda b, max_len: hybrid.init_cache(cfg, _batch_size(b), max_len),
+    )
+
+
+def _mamba_model(cfg: ArchConfig) -> Model:
+    return Model(
+        cfg=cfg,
+        init=lambda key: mamba.init_params(key, cfg),
+        train_loss=lambda p, b: mamba.train_loss(p, cfg, b),
+        prefill=lambda p, b, max_len: mamba.prefill(p, cfg, b, max_len),
+        decode_step=lambda p, c, tok, t: mamba.decode_step(p, cfg, c, tok, t),
+        init_cache=lambda b, max_len: mamba.init_cache(cfg, _batch_size(b), max_len),
+    )
+
+
+def _batch_size(batch) -> int:
+    for k in ("tokens", "embeds"):
+        if k in batch:
+            return batch[k].shape[0]
+    raise ValueError("batch has no tokens/embeds")
+
+
+def build_model(cfg: ArchConfig) -> Model:
+    if cfg.family in ("dense", "moe", "vlm", "encoder"):
+        return _transformer_model(cfg)
+    if cfg.family == "hybrid":
+        return _hybrid_model(cfg)
+    if cfg.family == "ssm":
+        return _mamba_model(cfg)
+    raise ValueError(f"unknown family {cfg.family!r}")

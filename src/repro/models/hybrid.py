@@ -1,0 +1,232 @@
+"""RecurrentGemma-style hybrid model: (RG-LRU, RG-LRU, local-attn) pattern.
+
+Layers follow ``cfg.block_pattern`` repeated; the trailing ``L % len(pattern)``
+layers take the pattern prefix (recurrentgemma-2b: 26 = 8x(R,R,A) + (R,R)).
+Full pattern groups are stacked and scanned; the tail is unrolled.  Each
+layer = pre-norm temporal mixing + pre-norm gated MLP, gemma conventions
+((1+w) RMSNorm, sqrt(d) embedding scale, GeGLU).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from .common import cast_for_compute, cross_entropy_loss, dense_init
+from .layers import gated_mlp, init_gated_mlp
+from .rglru import (
+    init_rglru_block,
+    recurrent_block_apply,
+    recurrent_block_step,
+)
+from .transformer import (
+    HeadLayout,
+    _embed,
+    _norm,
+    _unembed,
+    attention_apply,
+    init_attention,
+    init_norm,
+)
+
+Params = Dict[str, Any]
+
+
+def _pattern_layers(cfg: ArchConfig):
+    pat = cfg.block_pattern or ("rglru", "rglru", "attn")
+    n_groups = cfg.n_layers // len(pat)
+    tail = tuple(pat[: cfg.n_layers % len(pat)])
+    return pat, n_groups, tail
+
+
+def _init_layer(key, cfg: ArchConfig, kind: str, layout: HeadLayout, dtype) -> Params:
+    ks = jax.random.split(key, 2)
+    p: Params = {}
+    p.update(init_norm(cfg, cfg.d_model, dtype, "norm1"))
+    p.update(init_norm(cfg, cfg.d_model, dtype, "norm2"))
+    if kind == "attn":
+        p["attn"] = init_attention(ks[0], cfg, layout, dtype)
+    else:
+        p["rglru"] = init_rglru_block(ks[0], cfg.d_model, cfg.d_model, 4, dtype)
+    p["mlp"] = init_gated_mlp(ks[1], cfg.d_model, cfg.d_ff, dtype)
+    return p
+
+
+def init_params(key, cfg: ArchConfig) -> Params:
+    dtype = cfg.dtype("param")
+    layout = HeadLayout.make(cfg.n_heads, cfg.n_kv_heads, cfg.pad_heads_to)
+    pat, n_groups, tail = _pattern_layers(cfg)
+    ks = jax.random.split(key, n_groups + len(tail) + 2)
+    groups = []
+    for gi in range(n_groups):
+        gks = jax.random.split(ks[gi], len(pat))
+        groups.append(
+            {f"{kind}_{i}": _init_layer(gks[i], cfg, kind, layout, dtype)
+             for i, kind in enumerate(pat)}
+        )
+    params: Params = {
+        "embed": dense_init(ks[-1], (cfg.padded_vocab, cfg.d_model), cfg.d_model, dtype),
+        "groups": jax.tree.map(lambda *xs: jnp.stack(xs), *groups),
+        "tail": [
+            _init_layer(ks[n_groups + i], cfg, kind, layout, dtype)
+            for i, kind in enumerate(tail)
+        ],
+    }
+    params.update(init_norm(cfg, cfg.d_model, dtype, "final_norm"))
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(ks[-2], (cfg.d_model, cfg.padded_vocab), cfg.d_model, dtype)
+    return params
+
+
+# -- caches ------------------------------------------------------------------
+# attention layers: ring-buffer KV (window) like transformer.init_cache;
+# rglru layers: conv tail (B,3,D) + hidden state (B,D) fp32.
+
+
+def _layer_cache(cfg: ArchConfig, kind: str, batch: int, max_len: int) -> Params:
+    if kind == "attn":
+        layout = HeadLayout.make(cfg.n_heads, cfg.n_kv_heads, cfg.pad_heads_to)
+        w = min(max_len, cfg.window) if cfg.window else max_len
+        dt = cfg.dtype("compute")
+        return {
+            "k": jnp.zeros((batch, w, layout.k_pad, cfg.head_dim), dt),
+            "v": jnp.zeros((batch, w, layout.k_pad, cfg.head_dim), dt),
+            "pos": jnp.full((w,), -1, jnp.int32),
+        }
+    return {
+        "conv": jnp.zeros((batch, 3, cfg.d_model), cfg.dtype("compute")),
+        "h": jnp.zeros((batch, cfg.d_model), jnp.float32),
+    }
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int) -> Params:
+    pat, n_groups, tail = _pattern_layers(cfg)
+    group = {
+        f"{kind}_{i}": _layer_cache(cfg, kind, batch, max_len) for i, kind in enumerate(pat)
+    }
+    return {
+        "groups": jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (n_groups,) + x.shape), group
+        ),
+        "tail": [_layer_cache(cfg, kind, batch, max_len) for i, kind in enumerate(tail)],
+    }
+
+
+# -- forward -----------------------------------------------------------------
+
+
+def _apply_layer(
+    p: Params,
+    cfg: ArchConfig,
+    kind: str,
+    layout: HeadLayout,
+    x: jax.Array,
+    positions: jax.Array,
+    cache: Optional[Params],
+    decode: bool,
+) -> Tuple[jax.Array, Optional[Params]]:
+    h_in = _norm(p, cfg, x, "norm1")
+    new_cache = cache
+    if kind == "attn":
+        h, new_cache = attention_apply(
+            p["attn"], cfg, layout, h_in, positions, None, cache, cfg.window
+        )
+    else:
+        if decode:
+            h, conv, hid = recurrent_block_step(
+                p["rglru"], h_in, cfg.rglru_c, cache["conv"], cache["h"]
+            )
+            new_cache = {"conv": conv, "h": hid}
+        else:
+            h0 = None if cache is None else cache["h"]
+            tail_in = None if cache is None else cache["conv"]
+            h, (conv, hid) = recurrent_block_apply(
+                p["rglru"], h_in, cfg.rglru_c, tail_in, h0, return_state=True
+            )
+            if cache is not None:
+                new_cache = {"conv": conv.astype(cache["conv"].dtype), "h": hid}
+    x = x + h
+    y = gated_mlp(p["mlp"], _norm(p, cfg, x, "norm2"), cfg.act)
+    return x + y, new_cache
+
+
+def forward(
+    params: Params,
+    cfg: ArchConfig,
+    tokens: jax.Array,
+    positions: Optional[jax.Array] = None,
+    cache: Optional[Params] = None,
+) -> Tuple[jax.Array, Optional[Params]]:
+    pat, n_groups, tail = _pattern_layers(cfg)
+    layout = HeadLayout.make(cfg.n_heads, cfg.n_kv_heads, cfg.pad_heads_to)
+    x = _embed(params, cfg, tokens)
+    b, s = x.shape[:2]
+    decode = s == 1 and cache is not None
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+
+    def group_fn(x, group_p, group_cache):
+        group_p = cast_for_compute(group_p, cfg.dtype("compute"))
+        new_gc = {} if group_cache is not None else None
+        for i, kind in enumerate(pat):
+            name = f"{kind}_{i}"
+            lc = None if group_cache is None else group_cache[name]
+            x, nc = _apply_layer(group_p[name], cfg, kind, layout, x, positions, lc, decode)
+            if new_gc is not None:
+                new_gc[name] = nc
+        return x, new_gc
+
+    if cfg.remat:
+        group_fn = jax.checkpoint(group_fn, policy=jax.checkpoint_policies.nothing_saveable)
+
+    if cache is None:
+        def body(x, gp):
+            x, _ = group_fn(x, gp, None)
+            return x, None
+
+        x, _ = jax.lax.scan(body, x, params["groups"])
+        new_group_cache = None
+    else:
+        def body(x, xs):
+            gp, gc = xs
+            x, ngc = group_fn(x, gp, gc)
+            return x, ngc
+
+        x, new_group_cache = jax.lax.scan(body, x, (params["groups"], cache["groups"]))
+
+    new_tail = []
+    for i, kind in enumerate(tail):
+        lc = None if cache is None else cache["tail"][i]
+        tp = cast_for_compute(params["tail"][i], cfg.dtype("compute"))
+        x, nc = _apply_layer(tp, cfg, kind, layout, x, positions, lc, decode)
+        new_tail.append(nc)
+
+    logits = _unembed(params, cfg, x)
+    new_cache = None
+    if cache is not None:
+        new_cache = {"groups": new_group_cache, "tail": new_tail}
+    return logits, new_cache
+
+
+def train_loss(params: Params, cfg: ArchConfig, batch: Dict[str, jax.Array]):
+    logits, _ = forward(params, cfg, batch["tokens"])
+    loss = cross_entropy_loss(
+        logits, batch["labels"], batch.get("loss_mask"), real_vocab=cfg.vocab_size
+    )
+    return loss, {"loss": loss}
+
+
+def prefill(params: Params, cfg: ArchConfig, batch, max_len: int):
+    tokens = batch["tokens"]
+    cache = init_cache(cfg, tokens.shape[0], max_len)
+    logits, cache = forward(params, cfg, tokens, cache=cache)
+    return logits[:, -1], cache, jnp.asarray(tokens.shape[1], jnp.int32)
+
+
+def decode_step(params: Params, cfg: ArchConfig, cache, tokens, t):
+    b = tokens.shape[0]
+    positions = jnp.broadcast_to(t[None, None], (b, 1)).astype(jnp.int32)
+    logits, cache = forward(params, cfg, tokens, positions=positions, cache=cache)
+    return logits[:, -1], cache, t + 1

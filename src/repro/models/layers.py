@@ -1,0 +1,260 @@
+"""Core layers: norms, RoPE / M-RoPE, GQA flash-style attention, gated MLPs.
+
+Attention is implemented blockwise over the KV axis (the flash-attention
+recurrence in pure jnp with fp32 running max/sum).  This keeps 32k-sequence
+prefill at O(S * block) memory instead of O(S^2) and is what the dry-run
+lowers; the Pallas kernel in repro.kernels implements the same contract for
+real TPU execution and is validated against `attention_reference`.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.axes import shard
+from .common import dense_init
+
+NEG_INF = float(jnp.finfo(jnp.float32).min / 2)
+
+
+# --------------------------------------------------------------------------
+# norms
+# --------------------------------------------------------------------------
+
+
+def rms_norm(x: jax.Array, weight: jax.Array, eps: float = 1e-6, plus_one: bool = False):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    w = weight.astype(jnp.float32)
+    if plus_one:  # gemma convention: scale = (1 + w)
+        w = 1.0 + w
+    return (x * w).astype(dtype)
+
+
+def layer_norm(x: jax.Array, weight: jax.Array, bias: jax.Array, eps: float = 1e-5):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = x.mean(axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (x * weight.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dtype)
+
+
+# --------------------------------------------------------------------------
+# rotary embeddings
+# --------------------------------------------------------------------------
+
+
+def _rope_inv_freq(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim)
+
+
+def _rotate_half(x):
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate([-x2, x1], axis=-1)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float = 10000.0) -> jax.Array:
+    """Llama-style rotary embedding.  x: (B,S,H,hd); positions: (B,S) int."""
+    hd = x.shape[-1]
+    inv = _rope_inv_freq(hd, theta)  # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * inv  # (B,S,hd/2)
+    cos = jnp.concatenate([jnp.cos(ang)] * 2, axis=-1)[..., None, :]  # (B,S,1,hd)
+    sin = jnp.concatenate([jnp.sin(ang)] * 2, axis=-1)[..., None, :]
+    xf = x.astype(jnp.float32)
+    return (xf * cos + _rotate_half(xf) * sin).astype(x.dtype)
+
+
+def apply_mrope(
+    x: jax.Array,
+    positions: jax.Array,
+    sections: Sequence[int],
+    theta: float = 10000.0,
+) -> jax.Array:
+    """Qwen2-VL multimodal RoPE.  positions: (B,S,3) = (temporal,h,w) ids.
+
+    The hd/2 frequency slots are partitioned into `sections` (t,h,w); each slot
+    rotates by its own position stream.  Text tokens have t==h==w so M-RoPE
+    degenerates to 1-D RoPE there (the paper's property).
+    """
+    hd = x.shape[-1]
+    assert sum(sections) == hd // 2, (sections, hd)
+    inv = _rope_inv_freq(hd, theta)
+    sec_ids = jnp.repeat(
+        jnp.arange(len(sections)), jnp.asarray(sections), total_repeat_length=hd // 2
+    )  # (hd/2,) in {0,1,2}
+    pos_sel = jnp.take_along_axis(
+        positions.astype(jnp.float32), sec_ids[None, None, :], axis=-1
+    )  # (B,S,hd/2): position stream per freq slot
+    ang = pos_sel * inv
+    cos = jnp.concatenate([jnp.cos(ang)] * 2, axis=-1)[..., None, :]
+    sin = jnp.concatenate([jnp.sin(ang)] * 2, axis=-1)[..., None, :]
+    xf = x.astype(jnp.float32)
+    return (xf * cos + _rotate_half(xf) * sin).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# attention (blockwise flash recurrence, GQA grouped, causal/window masks)
+# --------------------------------------------------------------------------
+
+
+def attention_reference(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    q_positions: jax.Array,
+    kv_positions: jax.Array,
+    causal: bool = True,
+    window: Optional[int] = None,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    """Naive O(S^2)-memory oracle.  q:(B,Sq,H,hd) k/v:(B,Sk,K,hd)."""
+    b, sq, h, hd = q.shape
+    kh = k.shape[2]
+    g = h // kh
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    qg = q.reshape(b, sq, kh, g, hd)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qg.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    mask = kv_positions[:, None, :] >= 0  # (B,1,Sk): valid slots
+    if causal:
+        mask &= kv_positions[:, None, :] <= q_positions[:, :, None]
+    if window is not None:
+        mask &= q_positions[:, :, None] - kv_positions[:, None, :] < window
+    s = jnp.where(mask[:, None, None, :, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", p, v.astype(jnp.float32))
+    return o.reshape(b, sq, h, hd).astype(q.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "window", "block_k", "scale")
+)
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    q_positions: jax.Array,
+    kv_positions: jax.Array,
+    causal: bool = True,
+    window: Optional[int] = None,
+    block_k: int = 1024,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    """Blockwise-KV attention with fp32 flash recurrence.
+
+    Shapes: q (B,Sq,H,hd), k/v (B,Sk,K,hd) with H % K == 0 (GQA grouped --
+    KV is never materialized repeated).  ``kv_positions < 0`` marks invalid
+    (unwritten cache) slots.  Works for training (Sq == Sk), prefill and
+    single-token decode (Sq == 1, Sk == cache length).
+    """
+    b, sq, h, hd = q.shape
+    sk, kh = k.shape[1], k.shape[2]
+    g = h // kh
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    qg = q.reshape(b, sq, kh, g, hd)
+
+    bk = min(block_k, sk)
+    pad = (-sk) % bk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kv_positions = jnp.pad(kv_positions, ((0, 0), (0, pad)), constant_values=-1)
+    nb = (sk + pad) // bk
+    # blocks are dynamic-sliced inside the scan body: pre-transposing KV into
+    # (nb, B, bk, ...) xs copies the whole cache per step (EXPERIMENTS §Perf)
+    k = shard(k, "batch", None, "model", None)
+    v = shard(v, "batch", None, "model", None)
+
+    # explicit carry shardings: scan-carry propagation from zeros-inits is
+    # what otherwise replicates attention over the model axis
+    m0 = shard(jnp.full((b, kh, g, sq), NEG_INF, dtype=jnp.float32),
+               "batch", "model", None, None)
+    l0 = shard(jnp.zeros((b, kh, g, sq), dtype=jnp.float32),
+               "batch", "model", None, None)
+    o0 = shard(jnp.zeros((b, kh, g, sq, hd), dtype=jnp.float32),
+               "batch", "model", None, None, None)
+
+    def body(carry, i):
+        m, l, o = carry
+        kblk = jax.lax.dynamic_slice_in_dim(k, i * bk, bk, axis=1)
+        vblk = jax.lax.dynamic_slice_in_dim(v, i * bk, bk, axis=1)
+        posblk = jax.lax.dynamic_slice_in_dim(kv_positions, i * bk, bk, axis=1)
+        s = (
+            jnp.einsum(
+                "bqkgd,bskd->bkgqs", qg, kblk, preferred_element_type=jnp.float32
+            )
+            * scale
+        )  # (B,K,G,Sq,bk)
+        mask = posblk[:, None, :] >= 0
+        if causal:
+            mask = mask & (posblk[:, None, :] <= q_positions[:, :, None])
+        if window is not None:
+            mask = mask & (q_positions[:, :, None] - posblk[:, None, :] < window)
+        s = jnp.where(mask[:, None, None, :, :], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l_new = l * alpha + p.sum(axis=-1)
+        pv = jnp.einsum("bkgqs,bskd->bkgqd", p, vblk, preferred_element_type=jnp.float32)
+        o_new = o * alpha[..., None] + pv
+        m_new = shard(m_new, "batch", "model", None, None)
+        l_new = shard(l_new, "batch", "model", None, None)
+        o_new = shard(o_new, "batch", "model", None, None, None)
+        return (m_new, l_new, o_new), None
+
+    (m, l, o), _ = jax.lax.scan(body, (m0, l0, o0), jnp.arange(nb))
+    o = o / jnp.maximum(l[..., None], 1e-30)
+    o = jnp.moveaxis(o, 3, 1).reshape(b, sq, h, hd)  # (B,K,G,Sq,hd)->(B,Sq,H,hd)
+    return o.astype(q.dtype)
+
+
+# --------------------------------------------------------------------------
+# MLPs
+# --------------------------------------------------------------------------
+
+
+def init_gated_mlp(key, d_model: int, d_ff: int, dtype):
+    ks = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(ks[0], (d_model, d_ff), d_model, dtype),
+        "w_up": dense_init(ks[1], (d_model, d_ff), d_model, dtype),
+        "w_down": dense_init(ks[2], (d_ff, d_model), d_ff, dtype),
+    }
+
+
+def gated_mlp(params, x, act: str = "silu"):
+    """SwiGLU (silu) / GeGLU (gelu) feed-forward."""
+    fn = jax.nn.silu if act == "silu" else functools.partial(jax.nn.gelu, approximate=True)
+    g = fn(shard(x @ params["w_gate"], "batch", None, "model"))
+    u = shard(x @ params["w_up"], "batch", None, "model")
+    return shard((g * u) @ params["w_down"], "batch", "residual", None)
+
+
+def init_mlp(key, d_model: int, d_ff: int, dtype, bias: bool = True):
+    ks = jax.random.split(key, 2)
+    p = {
+        "w_in": dense_init(ks[0], (d_model, d_ff), d_model, dtype),
+        "w_out": dense_init(ks[1], (d_ff, d_model), d_ff, dtype),
+    }
+    if bias:
+        p["b_in"] = jnp.zeros((d_ff,), dtype)
+        p["b_out"] = jnp.zeros((d_model,), dtype)
+    return p
+
+
+def mlp(params, x, act: str = "gelu"):
+    fn = functools.partial(jax.nn.gelu, approximate=True) if act == "gelu" else jax.nn.relu
+    h = shard(x @ params["w_in"], "batch", None, "model")
+    if "b_in" in params:
+        h = h + params["b_in"]
+    h = fn(h)
+    y = h @ params["w_out"]
+    if "b_out" in params:
+        y = y + params["b_out"]
+    return shard(y, "batch", "residual", None)

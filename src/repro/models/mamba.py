@@ -1,0 +1,117 @@
+"""Mamba-2 language model (attention-free SSD stack)."""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from .common import cast_for_compute, cross_entropy_loss, dense_init
+from .ssm import SSMDims, init_ssm_layer, ssm_decode_step, ssm_layer_apply
+from .transformer import _embed, _norm, _unembed, init_norm
+
+Params = Dict[str, Any]
+
+
+def init_params(key, cfg: ArchConfig) -> Params:
+    dtype = cfg.dtype("param")
+    dims = SSMDims.from_config(cfg)
+    ks = jax.random.split(key, cfg.n_layers + 3)
+    layers = []
+    for i in range(cfg.n_layers):
+        p = {"mixer": init_ssm_layer(ks[i], dims, dtype)}
+        p.update(init_norm(cfg, cfg.d_model, dtype, "norm1"))
+        layers.append(p)
+    params: Params = {
+        "embed": dense_init(ks[-1], (cfg.padded_vocab, cfg.d_model), cfg.d_model, dtype),
+        "layers": jax.tree.map(lambda *xs: jnp.stack(xs), *layers),
+    }
+    params.update(init_norm(cfg, cfg.d_model, dtype, "final_norm"))
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(ks[-2], (cfg.d_model, cfg.padded_vocab), cfg.d_model, dtype)
+    return params
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int) -> Params:
+    del max_len  # SSM state is O(1) in sequence length
+    dims = SSMDims.from_config(cfg)
+    cdt = cfg.dtype("compute")
+    one = {
+        "conv_x": jnp.zeros((batch, dims.d_conv - 1, dims.d_inner), cdt),
+        "conv_bc": jnp.zeros((batch, dims.d_conv - 1, 2 * dims.d_state), cdt),
+        "h": jnp.zeros((batch, dims.n_heads, dims.d_state, dims.headdim), jnp.float32),
+    }
+    return jax.tree.map(lambda x: jnp.broadcast_to(x[None], (cfg.n_layers,) + x.shape), one)
+
+
+def forward(
+    params: Params,
+    cfg: ArchConfig,
+    tokens: jax.Array,
+    cache: Optional[Params] = None,
+    decode: bool = False,
+) -> Tuple[jax.Array, Optional[Params]]:
+    dims = SSMDims.from_config(cfg)
+    x = _embed(params, cfg, tokens)
+
+    def layer_fn(x, p, lc):
+        p = cast_for_compute(p, cfg.dtype("compute"))
+        h_in = _norm(p, cfg, x, "norm1")
+        if decode:
+            y, cx, cbc, h = ssm_decode_step(
+                p["mixer"], dims, h_in, lc["conv_x"], lc["conv_bc"], lc["h"]
+            )
+            return x + y, {"conv_x": cx, "conv_bc": cbc, "h": h}
+        if lc is None:
+            y = ssm_layer_apply(p["mixer"], dims, h_in)
+            return x + y, None
+        y, (cx, cbc, h) = ssm_layer_apply(
+            p["mixer"], dims, h_in, lc["conv_x"], lc["conv_bc"], lc["h"], return_state=True
+        )
+        return x + y, {
+            "conv_x": cx.astype(lc["conv_x"].dtype),
+            "conv_bc": cbc.astype(lc["conv_bc"].dtype),
+            "h": h,
+        }
+
+    if cfg.remat:
+        layer_fn = jax.checkpoint(layer_fn, policy=jax.checkpoint_policies.nothing_saveable)
+
+    if cache is None:
+        def body(x, p):
+            x, _ = layer_fn(x, p, None)
+            return x, None
+
+        x, _ = jax.lax.scan(body, x, params["layers"])
+        new_cache = None
+    else:
+        def body(x, xs):
+            p, lc = xs
+            x, nc = layer_fn(x, p, lc)
+            return x, nc
+
+        x, new_cache = jax.lax.scan(body, x, (params["layers"], cache))
+
+    logits = _unembed(params, cfg, x)
+    return logits, new_cache
+
+
+def train_loss(params: Params, cfg: ArchConfig, batch: Dict[str, jax.Array]):
+    logits, _ = forward(params, cfg, batch["tokens"])
+    loss = cross_entropy_loss(
+        logits, batch["labels"], batch.get("loss_mask"), real_vocab=cfg.vocab_size
+    )
+    return loss, {"loss": loss}
+
+
+def prefill(params: Params, cfg: ArchConfig, batch, max_len: int):
+    tokens = batch["tokens"]
+    cache = init_cache(cfg, tokens.shape[0], max_len)
+    logits, cache = forward(params, cfg, tokens, cache=cache)
+    return logits[:, -1], cache, jnp.asarray(tokens.shape[1], jnp.int32)
+
+
+def decode_step(params: Params, cfg: ArchConfig, cache, tokens, t):
+    logits, cache = forward(params, cfg, tokens, cache=cache, decode=True)
+    return logits[:, -1], cache, t + 1

@@ -1,0 +1,148 @@
+"""RecurrentGemma / Griffin blocks: RG-LRU recurrence + local attention (1:2).
+
+The RG-LRU (real-gated linear recurrent unit):
+
+    r_t = sigmoid(W_a x_t + b_a)          recurrence gate
+    i_t = sigmoid(W_x x_t + b_x)          input gate
+    log a_t = -c * softplus(Lambda) * r_t
+    h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+is a diagonal first-order recurrence, evaluated in parallel over the sequence
+with ``jax.lax.associative_scan`` (fp32).  The temporal-mixing block is
+Griffin's: out = W_o( GeLU(W_y x) (*) RGLRU(conv4(W_x x)) ).
+
+Attention layers use the shared GQA machinery with a sliding window (2048),
+so the KV cache is bounded and the ``long_500k`` decode shape is O(window).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.axes import shard
+from .common import dense_init
+
+
+def init_rglru_block(
+    key, d_model: int, d_rnn: int, d_conv: int, dtype, n_gate_blocks: int = 16
+):
+    if d_rnn % n_gate_blocks:
+        n_gate_blocks = 1
+    db = d_rnn // n_gate_blocks
+    ks = jax.random.split(key, 7)
+    # Lambda init so a^c in ~(0.9, 0.999) (griffin appendix)
+    u = jax.random.uniform(ks[5], (d_rnn,), minval=0.9, maxval=0.999)
+    lam = jnp.log(jnp.expm1(-jnp.log(u)))  # softplus^-1(-log u)
+    return {
+        "w_y": dense_init(ks[0], (d_model, d_rnn), d_model, dtype),
+        "w_x": dense_init(ks[1], (d_model, d_rnn), d_model, dtype),
+        "conv_w": dense_init(ks[2], (d_conv, d_rnn), d_conv, dtype),
+        "conv_b": jnp.zeros((d_rnn,), dtype),
+        # Griffin uses block-diagonal gate matrices; besides being faithful,
+        # blocks shard over the TP axis with no collective.
+        "w_a": dense_init(ks[3], (n_gate_blocks, db, db), db, dtype),
+        "b_a": jnp.zeros((d_rnn,), jnp.float32),
+        "w_i": dense_init(ks[4], (n_gate_blocks, db, db), db, dtype),
+        "b_i": jnp.zeros((d_rnn,), jnp.float32),
+        "lam": lam.astype(jnp.float32),
+        "w_out": dense_init(ks[6], (d_rnn, d_model), d_rnn, dtype),
+    }
+
+
+def _block_diag_matmul(x, w):
+    """x: (..., D) with D = nb*db; w: (nb, db, db) block-diagonal weights."""
+    nb, db, _ = w.shape
+    xb = x.reshape(*x.shape[:-1], nb, db)
+    yb = jnp.einsum("...nd,ndk->...nk", xb, w)
+    return yb.reshape(*x.shape[:-1], nb * db)
+
+
+def _rglru_gates(params, x, c: float):
+    """x: (..., d_rnn) fp32 -> (a, b) of the recurrence h = a h_ + b."""
+    r = jax.nn.sigmoid(_block_diag_matmul(x, params["w_a"].astype(jnp.float32)) + params["b_a"])
+    i = jax.nn.sigmoid(_block_diag_matmul(x, params["w_i"].astype(jnp.float32)) + params["b_i"])
+    log_a = -c * jax.nn.softplus(params["lam"]) * r
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (i * x)
+    return a, b
+
+
+def rglru_scan(params, x: jax.Array, c: float, h0: jax.Array | None = None):
+    """Parallel evaluation over the sequence.  x: (B,S,D) -> (y, h_last)."""
+    xf = x.astype(jnp.float32)
+    a, b = _rglru_gates(params, xf, c)
+    a = shard(a, "batch", None, "model")
+    b = shard(b, "batch", None, "model")
+    if h0 is not None:
+        # fold the carried state into the first step: h_1 = a_1 h0 + b_1
+        b = b.at[:, 0].add(a[:, 0] * h0.astype(jnp.float32))
+
+    def combine(left, right):
+        a_l, b_l = left
+        a_r, b_r = right
+        return a_l * a_r, a_r * b_l + b_r
+
+    a_cum, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    del a_cum
+    return h.astype(x.dtype), h[:, -1]
+
+
+def rglru_step(params, x_t: jax.Array, h: jax.Array, c: float):
+    """Single decode step.  x_t: (B,D); h: (B,D) fp32."""
+    xf = x_t.astype(jnp.float32)
+    a, b = _rglru_gates(params, xf, c)
+    h_new = a * h.astype(jnp.float32) + b
+    return h_new.astype(x_t.dtype), h_new
+
+
+def rglru_reference(params, x, c: float, h0=None):
+    """Sequential oracle."""
+    xf = x.astype(jnp.float32)
+    a, b = _rglru_gates(params, xf, c)
+    h = jnp.zeros_like(xf[:, 0]) if h0 is None else h0.astype(jnp.float32)
+    ys = []
+    for t in range(x.shape[1]):
+        h = a[:, t] * h + b[:, t]
+        ys.append(h)
+    return jnp.stack(ys, axis=1).astype(x.dtype), h
+
+
+def recurrent_block_apply(
+    params,
+    x: jax.Array,  # (B,S,d_model)
+    c: float,
+    conv_tail: jax.Array | None = None,
+    h0: jax.Array | None = None,
+    return_state: bool = False,
+):
+    """Griffin temporal-mixing block (the RG-LRU branch x gated GeLU branch)."""
+    y_branch = jax.nn.gelu(shard(x @ params["w_y"], "batch", None, "model"), approximate=True)
+    xr = shard(x @ params["w_x"], "batch", None, "model")
+    # causal depthwise conv, kernel d_conv
+    k = params["conv_w"].shape[0]
+    if conv_tail is None:
+        conv_tail = jnp.zeros((x.shape[0], k - 1, xr.shape[-1]), xr.dtype)
+    xp = jnp.concatenate([conv_tail, xr], axis=1)
+    xr = sum(xp[:, i : i + x.shape[1]] * params["conv_w"][i] for i in range(k))
+    xr = xr + params["conv_b"]
+    new_tail = xp[:, -(k - 1) :] if k > 1 else conv_tail
+    rec, h_last = rglru_scan(params, xr, c, h0)
+    out = shard((rec * y_branch) @ params["w_out"], "batch", None, None)
+    if return_state:
+        return out, (new_tail, h_last)
+    return out
+
+
+def recurrent_block_step(params, x_t: jax.Array, c: float, conv_tail: jax.Array, h: jax.Array):
+    """Decode step.  x_t: (B,1,d_model)."""
+    y_branch = jax.nn.gelu(x_t @ params["w_y"], approximate=True)
+    xr = x_t @ params["w_x"]  # (B,1,D)
+    k = params["conv_w"].shape[0]
+    xp = jnp.concatenate([conv_tail, xr], axis=1)  # (B,k,D)
+    xc = sum(xp[:, -(k - i)] * params["conv_w"][i] for i in range(k)) + params["conv_b"]
+    new_tail = xp[:, 1:]
+    rec, h_new = rglru_step(params, xc, h, c)
+    out = (rec[:, None] * y_branch) @ params["w_out"]
+    return out, new_tail, h_new

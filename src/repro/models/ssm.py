@@ -1,0 +1,232 @@
+"""Mamba-2 (SSD -- state-space duality) blocks, pure JAX.
+
+Training/prefill uses the chunked SSD algorithm: the sequence is split into
+chunks of ``Q`` steps; within a chunk the recurrence is evaluated in its
+quadratic "attention-like" dual form (per-head Q x Q decay-masked scores),
+and chunk-boundary states are propagated with a first-order scan.  This is
+the TPU-friendly formulation: all chunk-local work is dense matmul (MXU
+food), the sequential dependency collapses to S/Q scan steps, and the per
+-step working set (B, Q, Q, nh) stays small and VMEM-tileable.
+
+Decode is the O(1) recurrent update on the cached state.
+
+Model layout follows mamba2-2.7b: d_inner = 2*d_model, scalar-per-head A,
+shared B/C across heads (n_groups=1), causal conv (k=4), gated RMSNorm
+before out_proj.
+
+Sharding note: the projections are stored *separately* (w_z/w_x column-
+parallel over the TP axis, w_bc/conv_bc replicated -- B/C are shared across
+heads so every shard needs them in full, and they are tiny) so that the
+jnp.split boundaries of a fused in_proj never cut across shard tiles.
+Heads (and the per-head A/dt/D vectors) shard with the d_inner columns.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.axes import shard
+from .common import dense_init
+from .layers import rms_norm
+
+
+class SSMDims(NamedTuple):
+    d_model: int
+    d_inner: int
+    n_heads: int
+    headdim: int
+    d_state: int
+    d_conv: int
+    chunk: int
+
+    @staticmethod
+    def from_config(cfg) -> "SSMDims":
+        d_inner = cfg.ssm_expand * cfg.d_model
+        return SSMDims(
+            d_model=cfg.d_model,
+            d_inner=d_inner,
+            n_heads=d_inner // cfg.ssm_headdim,
+            headdim=cfg.ssm_headdim,
+            d_state=cfg.ssm_state,
+            d_conv=cfg.ssm_conv,
+            chunk=cfg.ssm_chunk,
+        )
+
+
+def init_ssm_layer(key, dims: SSMDims, dtype):
+    ks = jax.random.split(key, 8)
+    # dt bias initialized so softplus(dt_bias) spans ~[1e-3, 1e-1] (mamba init)
+    u = jax.random.uniform(ks[0], (dims.n_heads,), minval=math.log(1e-3), maxval=math.log(1e-1))
+    dt_init = jnp.log(jnp.expm1(jnp.exp(u)))  # inverse softplus
+    return {
+        "w_z": dense_init(ks[1], (dims.d_model, dims.d_inner), dims.d_model, dtype),
+        "w_x": dense_init(ks[2], (dims.d_model, dims.d_inner), dims.d_model, dtype),
+        "w_bc": dense_init(ks[3], (dims.d_model, 2 * dims.d_state), dims.d_model, dtype),
+        "w_dt": dense_init(ks[4], (dims.d_model, dims.n_heads), dims.d_model, dtype),
+        "conv_x": dense_init(ks[5], (dims.d_conv, dims.d_inner), dims.d_conv, dtype),
+        "conv_x_b": jnp.zeros((dims.d_inner,), dtype),
+        "conv_bc": dense_init(ks[6], (dims.d_conv, 2 * dims.d_state), dims.d_conv, dtype),
+        "conv_bc_b": jnp.zeros((2 * dims.d_state,), dtype),
+        "A_log": jnp.log(
+            jax.random.uniform(ks[7], (dims.n_heads,), minval=1.0, maxval=16.0)
+        ).astype(jnp.float32),
+        "dt_bias": dt_init.astype(jnp.float32),
+        "D": jnp.ones((dims.n_heads,), jnp.float32),
+        "norm_w": jnp.ones((dims.d_inner,), dtype),
+        "out_proj": dense_init(ks[0], (dims.d_inner, dims.d_model), dims.d_inner, dtype),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array, tail: jax.Array | None = None):
+    """Depthwise causal conv.  x: (B,S,C); w: (K,C); tail: (B,K-1,C) history."""
+    k = w.shape[0]
+    if tail is None:
+        tail = jnp.zeros((x.shape[0], k - 1, x.shape[-1]), x.dtype)
+    xp = jnp.concatenate([tail, x], axis=1)  # (B, S+K-1, C)
+    out = sum(xp[:, i : i + x.shape[1]] * w[i] for i in range(k)) + b
+    new_tail = xp[:, -(k - 1) :] if k > 1 else tail
+    return jax.nn.silu(out), new_tail
+
+
+def ssd_chunked(
+    x: jax.Array,  # (B,S,nh,hp)
+    dt: jax.Array,  # (B,S,nh) post-softplus, fp32
+    a_neg: jax.Array,  # (nh,) negative A, fp32
+    bmat: jax.Array,  # (B,S,N)
+    cmat: jax.Array,  # (B,S,N)
+    d_skip: jax.Array,  # (nh,)
+    chunk: int,
+    h0: jax.Array | None = None,  # (B,nh,N,hp) initial state
+) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD scan.  Returns (y (B,S,nh,hp), final state (B,nh,N,hp))."""
+    b, s, nh, hp = x.shape
+    n = bmat.shape[-1]
+    q = min(chunk, s)
+    pad = (-s) % q
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        bmat = jnp.pad(bmat, ((0, 0), (0, pad), (0, 0)))
+        cmat = jnp.pad(cmat, ((0, 0), (0, pad), (0, 0)))
+    nc = (s + pad) // q
+
+    xc = jnp.moveaxis(x.reshape(b, nc, q, nh, hp), 1, 0).astype(jnp.float32)
+    dtc = jnp.moveaxis(dt.reshape(b, nc, q, nh), 1, 0)
+    bc = jnp.moveaxis(bmat.reshape(b, nc, q, n), 1, 0).astype(jnp.float32)
+    cc = jnp.moveaxis(cmat.reshape(b, nc, q, n), 1, 0).astype(jnp.float32)
+    xc = shard(xc, None, "batch", None, "model", None)
+    dtc = shard(dtc, None, "batch", None, "model")
+
+    h_init = (
+        jnp.zeros((b, nh, n, hp), jnp.float32)
+        if h0 is None
+        else h0.astype(jnp.float32)
+    )
+    h_init = shard(h_init, "batch", "model", None, None)
+    tri = jnp.tril(jnp.ones((q, q), jnp.bool_))  # i >= j
+
+    def body(h, blk):
+        xq, dtq, bq, cq = blk  # (B,Q,nh,hp), (B,Q,nh), (B,Q,N), (B,Q,N)
+        a = dtq * a_neg  # (B,Q,nh) log-decay per step (negative)
+        cum = jnp.cumsum(a, axis=1)  # inclusive
+        # intra-chunk dual form
+        cb = jnp.einsum("bqn,bkn->bqk", cq, bq)  # (B,Q,Q)
+        decay = jnp.exp(cum[:, :, None, :] - cum[:, None, :, :])  # (B,Q,Q,nh): i,j
+        decay = jnp.where(tri[None, :, :, None], decay, 0.0)
+        dtx = dtq[..., None] * xq  # (B,Q,nh,hp)
+        y = jnp.einsum("bqk,bqkh,bkhp->bqhp", cb, decay, dtx)
+        # inter-chunk contribution from carried state
+        y = y + jnp.einsum("bqn,bhnp->bqhp", cq, h) * jnp.exp(cum)[..., None]
+        # state update for next chunk: S_c = sum_j exp(cum_Q - cum_j) dt_j B_j x_j^T
+        w = jnp.exp(cum[:, -1:, :] - cum) * dtq  # (B,Q,nh)
+        s_new = jnp.einsum("bqn,bqh,bqhp->bhnp", bq, w, xq)
+        h_new = jnp.exp(cum[:, -1])[:, :, None, None] * h + s_new
+        h_new = shard(h_new, "batch", "model", None, None)
+        y = y + d_skip[None, None, :, None] * xq
+        return h_new, shard(y, "batch", None, "model", None)
+
+    h_final, yc = jax.lax.scan(body, h_init, (xc, dtc, bc, cc))
+    y = jnp.moveaxis(yc, 0, 1).reshape(b, nc * q, nh, hp)[:, :s]
+    return y, h_final
+
+
+def ssd_reference(x, dt, a_neg, bmat, cmat, d_skip, h0=None):
+    """Naive sequential recurrence oracle."""
+    b, s, nh, hp = x.shape
+    n = bmat.shape[-1]
+    h = jnp.zeros((b, nh, n, hp), jnp.float32) if h0 is None else h0.astype(jnp.float32)
+    ys = []
+    for t in range(s):
+        a_t = jnp.exp(dt[:, t] * a_neg)  # (B,nh)
+        upd = jnp.einsum("bn,bh,bhp->bhnp", bmat[:, t], dt[:, t], x[:, t].astype(jnp.float32))
+        h = a_t[:, :, None, None] * h + upd
+        y = jnp.einsum("bn,bhnp->bhp", cmat[:, t], h) + d_skip[None, :, None] * x[:, t]
+        ys.append(y)
+    return jnp.stack(ys, axis=1), h
+
+
+def _project(params, dims: SSMDims, x_in: jax.Array):
+    z = shard(x_in @ params["w_z"], "batch", None, "model")
+    xr = shard(x_in @ params["w_x"], "batch", None, "model")
+    bcmat = x_in @ params["w_bc"]  # shared across heads: replicated over model
+    dt_raw = shard(x_in @ params["w_dt"], "batch", None, "model")
+    return z, xr, bcmat, dt_raw
+
+
+def ssm_layer_apply(
+    params,
+    dims: SSMDims,
+    x_in: jax.Array,  # (B,S,d_model)
+    conv_tail_x: jax.Array | None = None,
+    conv_tail_bc: jax.Array | None = None,
+    h0: jax.Array | None = None,
+    return_state: bool = False,
+):
+    """Full mamba2 mixer.  Returns y (B,S,d) [+ (tails, h) if requested]."""
+    z, xr, bcmat, dt_raw = _project(params, dims, x_in)
+    xr, new_tail_x = _causal_conv(xr, params["conv_x"], params["conv_x_b"], conv_tail_x)
+    bcmat, new_tail_bc = _causal_conv(
+        bcmat, params["conv_bc"], params["conv_bc_b"], conv_tail_bc
+    )
+    bmat, cmat = jnp.split(bcmat, 2, axis=-1)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])
+    a_neg = -jnp.exp(params["A_log"])
+    xh = xr.reshape(*xr.shape[:-1], dims.n_heads, dims.headdim)
+    y, h = ssd_chunked(xh, dt, a_neg, bmat, cmat, params["D"], dims.chunk, h0)
+    y = y.reshape(*y.shape[:-2], dims.d_inner).astype(x_in.dtype)
+    y = rms_norm(y * jax.nn.silu(z), params["norm_w"])
+    out = y @ params["out_proj"]
+    if return_state:
+        return out, (new_tail_x, new_tail_bc, h)
+    return out
+
+
+def ssm_decode_step(
+    params,
+    dims: SSMDims,
+    x_in: jax.Array,  # (B,1,d)
+    conv_tail_x: jax.Array,
+    conv_tail_bc: jax.Array,
+    h: jax.Array,
+):
+    """Single-token update.  Returns (y (B,1,d), new tails, new_h)."""
+    z, xr, bcmat, dt_raw = _project(params, dims, x_in)
+    xr, new_tail_x = _causal_conv(xr, params["conv_x"], params["conv_x_b"], conv_tail_x)
+    bcmat, new_tail_bc = _causal_conv(
+        bcmat, params["conv_bc"], params["conv_bc_b"], conv_tail_bc
+    )
+    bmat, cmat = jnp.split(bcmat, 2, axis=-1)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])[:, 0]  # (B,nh)
+    a_neg = -jnp.exp(params["A_log"])
+    xh = xr[:, 0].reshape(x_in.shape[0], dims.n_heads, dims.headdim).astype(jnp.float32)
+    a_t = jnp.exp(dt * a_neg)  # (B,nh)
+    upd = jnp.einsum("bn,bh,bhp->bhnp", bmat[:, 0].astype(jnp.float32), dt, xh)
+    h = a_t[:, :, None, None] * h + upd
+    y = jnp.einsum("bn,bhnp->bhp", cmat[:, 0].astype(jnp.float32), h)
+    y = y + params["D"][None, :, None] * xh
+    y = y.reshape(x_in.shape[0], 1, dims.d_inner).astype(x_in.dtype)
+    y = rms_norm(y * jax.nn.silu(z), params["norm_w"])
+    return y @ params["out_proj"], new_tail_x, new_tail_bc, h

@@ -1,0 +1,18 @@
+"""Optimizer substrate: AdamW + schedules + global-norm clipping.
+
+Self-contained (no optax).  Optimizer state is a pytree congruent with the
+params, so the sharding rules for parameters apply verbatim to ``m``/``v``
+(ZeRO-style sharded optimizer state under FSDP).
+"""
+from .adamw import AdamW, OptState, apply_updates, global_norm
+from .schedule import constant, cosine_with_warmup, linear_with_warmup
+
+__all__ = [
+    "AdamW",
+    "OptState",
+    "apply_updates",
+    "global_norm",
+    "constant",
+    "cosine_with_warmup",
+    "linear_with_warmup",
+]

@@ -1,0 +1,32 @@
+"""Learning-rate schedules (step -> lr, traceable)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def linear_with_warmup(peak: float, warmup: int, total: int, floor: float = 0.0):
+    def fn(step):
+        step = step.astype(jnp.float32)
+        warm = peak * step / max(warmup, 1)
+        frac = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        decay = peak + (floor - peak) * frac
+        return jnp.where(step < warmup, warm, decay)
+
+    return fn
+
+
+def cosine_with_warmup(peak: float, warmup: int, total: int, floor_frac: float = 0.1):
+    floor = peak * floor_frac
+
+    def fn(step):
+        step = step.astype(jnp.float32)
+        warm = peak * step / max(warmup, 1)
+        frac = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        decay = floor + 0.5 * (peak - floor) * (1.0 + jnp.cos(jnp.pi * frac))
+        return jnp.where(step < warmup, warm, decay)
+
+    return fn

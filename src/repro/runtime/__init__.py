@@ -1,0 +1,11 @@
+from . import serve, train
+from .train import TrainState, init_state, jit_train_step, make_train_step
+
+__all__ = [
+    "serve",
+    "train",
+    "TrainState",
+    "init_state",
+    "jit_train_step",
+    "make_train_step",
+]

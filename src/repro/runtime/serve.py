@@ -1,0 +1,73 @@
+"""Serving-step construction: prefill + batched single-token decode.
+
+``serve_step`` is the function the ``decode_*`` dry-run cells lower: one new
+token against a KV cache of ``seq_len`` (NOT a train_step).
+"""
+from __future__ import annotations
+
+from typing import Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+
+from ..configs.base import ShapeConfig
+from ..distributed import sharding
+from ..distributed.axes import logical_axes
+from ..models import Model
+
+
+def make_prefill_step(model: Model, max_len: int) -> Callable:
+    def prefill_step(params, batch):
+        return model.prefill(params, batch, max_len)
+
+    return prefill_step
+
+
+def make_serve_step(model: Model) -> Callable:
+    def serve_step(params, cache, tokens, t):
+        return model.decode_step(params, cache, tokens, t)
+
+    return serve_step
+
+
+def jit_prefill(mesh: Mesh, model: Model, shape: ShapeConfig):
+    p_sh = sharding.param_shardings(mesh, model.param_specs())
+    b_sh = sharding.batch_shardings(mesh, model.input_specs(shape))
+    c_sh = sharding.cache_shardings(mesh, model.cache_specs(shape))
+    axes = sharding.MeshAxes.infer(mesh)
+    inner = make_prefill_step(model, shape.seq_len)
+
+    def prefill_step(params, batch):
+        with logical_axes(mesh, axes.batch, axes.model, seq=model.cfg.sequence_parallel):
+            return inner(params, batch)
+
+    fn = jax.jit(
+        prefill_step,
+        in_shardings=(p_sh, b_sh),
+        out_shardings=(None, c_sh, sharding.scalar_sharding(mesh)),
+    )
+    return fn, p_sh, b_sh, c_sh
+
+
+def jit_serve_step(mesh: Mesh, model: Model, shape: ShapeConfig, donate: bool = True):
+    p_sh = sharding.param_shardings(mesh, model.param_specs())
+    c_sh = sharding.cache_shardings(mesh, model.cache_specs(shape))
+    tok_sh = sharding.batch_shardings(
+        mesh, {"tokens": jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)}
+    )["tokens"]
+    t_sh = sharding.scalar_sharding(mesh)
+    axes = sharding.MeshAxes.infer(mesh)
+    inner = make_serve_step(model)
+
+    def serve_step(params, cache, tokens, t):
+        with logical_axes(mesh, axes.batch, axes.model, seq=model.cfg.sequence_parallel):
+            return inner(params, cache, tokens, t)
+
+    fn = jax.jit(
+        serve_step,
+        in_shardings=(p_sh, c_sh, tok_sh, t_sh),
+        out_shardings=(None, c_sh, t_sh),
+        donate_argnums=(1,) if donate else (),
+    )
+    return fn, p_sh, c_sh, tok_sh

@@ -1,0 +1,84 @@
+"""Per-arch smoke tests: reduced config, one forward/train step on CPU,
+asserting output shapes + finiteness (assignment requirement (f))."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config
+from repro.models import build_model
+
+B, S = 2, 16
+
+
+def _make_batch(cfg, key):
+    ks = jax.random.split(key, 4)
+    batch = {}
+    if cfg.family in ("vlm", "encoder"):
+        batch["embeds"] = jax.random.normal(ks[0], (B, S, cfg.d_model), cfg.dtype("compute"))
+    else:
+        batch["tokens"] = jax.random.randint(ks[0], (B, S), 0, cfg.vocab_size)
+    if cfg.family == "vlm":
+        pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None, :, None], (B, S, 3))
+        batch["mrope_positions"] = pos
+    batch["labels"] = jax.random.randint(ks[1], (B, S), 0, cfg.vocab_size)
+    batch["loss_mask"] = jnp.ones((B, S), jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_train_step(arch):
+    cfg = get_config(arch, smoke=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    batch = _make_batch(cfg, jax.random.key(1))
+
+    (loss, metrics), grads = jax.value_and_grad(model.train_loss, has_aux=True)(params, batch)
+    assert jnp.isfinite(loss), f"{arch}: non-finite loss"
+    assert float(loss) > 0.0
+    gnorms = [float(jnp.linalg.norm(g.astype(jnp.float32))) for g in jax.tree.leaves(grads)]
+    assert all(np.isfinite(g) for g in gnorms), f"{arch}: non-finite grads"
+    assert any(g > 0 for g in gnorms), f"{arch}: all-zero grads"
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_forward_shapes(arch):
+    cfg = get_config(arch, smoke=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    batch = _make_batch(cfg, jax.random.key(1))
+    if cfg.family == "encoder":
+        # encoders expose train_loss only; logits checked via loss finiteness
+        loss, _ = model.train_loss(params, batch)
+        assert jnp.isfinite(loss)
+        return
+    logits, cache, t = model.prefill(params, batch, max_len=S + 8)
+    assert logits.shape == (B, cfg.padded_vocab)
+    assert jnp.isfinite(logits).all()
+    assert int(t) == S
+
+
+@pytest.mark.parametrize(
+    "arch", [a for a in ARCH_IDS if get_config(a).family != "encoder"]
+)
+def test_smoke_decode_steps(arch):
+    cfg = get_config(arch, smoke=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    batch = _make_batch(cfg, jax.random.key(1))
+    logits, cache, t = model.prefill(params, batch, max_len=S + 8)
+    tok = jnp.argmax(logits[:, : cfg.vocab_size], axis=-1)[:, None].astype(jnp.int32)
+    for _ in range(3):
+        logits, cache, t = model.decode_step(params, cache, tok, t)
+        assert logits.shape == (B, cfg.padded_vocab)
+        assert jnp.isfinite(logits).all()
+        tok = jnp.argmax(logits[:, : cfg.vocab_size], axis=-1)[:, None].astype(jnp.int32)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_full_config_constructs(arch):
+    """The exact published config must at least construct + report params."""
+    cfg = get_config(arch)
+    assert cfg.n_layers >= 26 or cfg.family == "ssm" or arch == "qwen2-1.5b"
+    n = cfg.param_count_estimate()
+    assert n > 1e8  # every assigned arch is >100M params

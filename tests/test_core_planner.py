@@ -1,0 +1,94 @@
+"""RedundancyPlanner + distribution fitting + trace workloads (§VI-§VII)."""
+import numpy as np
+import pytest
+
+from repro.core import analysis, traces
+from repro.core.planner import RedundancyPlanner, fit_service_time
+from repro.core.service_time import Empirical, Exponential, Pareto, ShiftedExponential
+
+
+def test_plan_exponential_endpoints():
+    p = RedundancyPlanner(16)
+    plan_mean = p.plan(Exponential(mu=2.0), "mean")
+    plan_cov = p.plan(Exponential(mu=2.0), "cov")
+    assert plan_mean.n_batches == 1 and plan_mean.replication == 16
+    assert plan_cov.n_batches == 16 and plan_cov.replication == 1
+    assert plan_mean.diversity == 1.0 and plan_cov.diversity == 0.0
+
+
+def test_plan_sexp_middle():
+    n, delta, mu = 100, 0.05, 5.0  # N*delta*mu = 25 -> middle point
+    plan = RedundancyPlanner(n).plan(ShiftedExponential(delta, mu), "mean")
+    assert 1 < plan.n_batches < n
+    assert plan.n_batches == analysis.argmin_B(ShiftedExponential(delta, mu), n, "mean")
+
+
+def test_plan_blend_between_endpoints():
+    p = RedundancyPlanner(16)
+    d = Exponential(mu=1.0)
+    b_mean = p.plan(d, "mean").n_batches
+    b_cov = p.plan(d, "cov").n_batches
+    b_blend = p.plan(d, "blend", blend=0.5).n_batches
+    assert min(b_mean, b_cov) <= b_blend <= max(b_mean, b_cov)
+
+
+def test_fit_recovers_families():
+    rng = np.random.default_rng(0)
+    x_exp = rng.exponential(2.0, size=4000)
+    x_sexp = 5.0 + rng.exponential(0.5, size=4000)
+    x_par = 2.0 * rng.uniform(size=4000) ** (-1 / 1.5)
+    assert isinstance(fit_service_time(x_exp), (Exponential, ShiftedExponential))
+    f = fit_service_time(x_sexp)
+    assert isinstance(f, ShiftedExponential) and f.delta == pytest.approx(5.0, rel=0.05)
+    f = fit_service_time(x_par)
+    assert isinstance(f, Pareto) and f.alpha == pytest.approx(1.5, rel=0.1)
+
+
+def test_empirical_plan_matches_closed_form_when_exponential():
+    rng = np.random.default_rng(1)
+    samples = rng.exponential(1.0, size=8000)
+    p = RedundancyPlanner(8)
+    emp = p.plan_empirical(samples, "mean", n_mc=8000)
+    # closed form says full diversity for exponential tasks
+    assert emp.n_batches in (1, 2)  # MC noise may pick the neighbour
+    assert emp.frontier_mean[0] < emp.frontier_mean[-1]
+
+
+def test_plan_auto_on_heavy_tail_prefers_redundancy():
+    rng = np.random.default_rng(2)
+    samples = 1.0 * rng.uniform(size=6000) ** (-1 / 1.3)  # Pareto alpha=1.3
+    plan = RedundancyPlanner(100).plan_auto(samples, "mean")
+    assert plan.n_batches < 100  # some replication chosen
+    assert plan.source.startswith("closed_form:Pareto")
+
+
+def test_empirical_dist_plan_path():
+    samples = tuple(np.random.default_rng(3).exponential(1.0, size=2000).tolist())
+    plan = RedundancyPlanner(8).plan(Empirical(samples=samples), "mean")
+    assert plan.source == "empirical_bootstrap"
+
+
+def test_trace_jobs_families_and_planning():
+    jobs = traces.synthetic_google_jobs(seed=7)
+    assert len(jobs) == 10
+    fams = {j.name: traces.tail_family(j.task_times) for j in jobs}
+    # generator families should mostly agree with the classifier
+    agree = sum(fams[j.name] == j.family for j in jobs)
+    assert agree >= 7
+    # heavy-tail jobs should plan more redundancy than exp-tail large-shift jobs
+    p = RedundancyPlanner(100)
+    heavy = [j for j in jobs if j.family == "heavy"][0]
+    exp4 = [j for j in jobs if j.name == "job4"][0]  # shift 1000 job
+    b_heavy = p.plan_empirical(heavy.task_times, "mean", n_mc=4000).n_batches
+    b_exp = p.plan_empirical(exp4.task_times, "mean", n_mc=4000).n_batches
+    assert b_heavy <= b_exp  # more redundancy (smaller B) for heavy tails
+
+
+def test_trace_roundtrip(tmp_path):
+    jobs = traces.synthetic_google_jobs(seed=9)
+    traces.save_jobs(jobs, tmp_path / "jobs")
+    loaded = traces.load_jobs(tmp_path / "jobs")
+    assert {j.name for j in loaded} == {j.name for j in jobs}
+    by_name = {j.name: j for j in loaded}
+    for j in jobs:
+        np.testing.assert_allclose(by_name[j.name].task_times, j.task_times)

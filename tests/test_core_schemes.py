@@ -1,0 +1,191 @@
+"""Batching schemes, assignment majorization, coverage (§III-§V) + properties."""
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import analysis, assignment, batching, coupon, simulator
+from repro.core.service_time import Exponential, ShiftedExponential
+
+# --------------------------------------------------------------------------
+# batching construction invariants
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n,b", [(6, 3), (12, 4), (24, 6), (8, 8), (8, 1)])
+def test_non_overlapping_valid_and_balanced(n, b):
+    m = batching.non_overlapping(n, b)
+    diag = batching.validate_scheme(m)
+    assert diag["balanced"] and diag["batch_size"] == n // b
+    assert diag["min_replication"] == n // b  # each task hosted by r workers
+
+
+@pytest.mark.parametrize("n,b", [(6, 3), (12, 4), (24, 6)])
+def test_cyclic_valid_and_fair(n, b):
+    m = batching.cyclic(n, b)
+    diag = batching.validate_scheme(m)
+    assert diag["balanced"]  # every task in exactly batch_size windows
+    assert diag["min_replication"] == n // b
+
+
+@pytest.mark.parametrize("n,b", [(6, 3), (12, 4), (24, 6)])
+def test_hybrid_valid_and_fair(n, b):
+    m = batching.hybrid(n, b)
+    diag = batching.validate_scheme(m)
+    assert diag["min_replication"] >= 1
+    assert m.shape == (n, n)
+
+
+def test_cyclic_overlap_counts_match_paper():
+    # §V: cyclic -> each batch shares tasks with 2(N/B - 1) others;
+    # non-overlapping -> N/B - 1 others.
+    n, b = 12, 4
+    size = n // b
+    mc = batching.cyclic(n, b)
+    overlaps = ((mc @ mc.T) > 0) & ~np.eye(n, dtype=bool)
+    assert (overlaps.sum(axis=1) == 2 * (size - 1)).all()
+    mn = batching.non_overlapping(n, b)
+    overlapsn = ((mn @ mn.T) > 0) & ~np.eye(n, dtype=bool)
+    assert (overlapsn.sum(axis=1) == size - 1).all()
+
+
+# --------------------------------------------------------------------------
+# §V scheme ordering: E[T3] < E[T2] < E[T1]  (Fig. 6)
+# --------------------------------------------------------------------------
+
+
+def _scheme_mean(m, dist, seed, n_samples=150_000):
+    t = simulator.simulate_membership(jax.random.key(seed), dist, m, n_samples)
+    return float(np.mean(t))
+
+
+@pytest.mark.parametrize("dist", [Exponential(mu=1.0), ShiftedExponential(0.2, 2.0)])
+def test_scheme_ordering_n6_b3(dist):
+    n, b = 6, 3
+    e1 = _scheme_mean(batching.cyclic(n, b), dist, 1)
+    e2 = _scheme_mean(batching.hybrid(n, b), dist, 2)
+    e3 = _scheme_mean(batching.non_overlapping(n, b), dist, 3)
+    assert e3 < e2 < e1
+
+
+def test_scheme_ordering_larger_n():
+    n, b = 12, 4
+    dist = Exponential(mu=1.0)
+    e1 = _scheme_mean(batching.cyclic(n, b), dist, 4)
+    e3 = _scheme_mean(batching.non_overlapping(n, b), dist, 5)
+    assert e3 < e1
+
+
+# --------------------------------------------------------------------------
+# majorization (Lemmas 2-3)
+# --------------------------------------------------------------------------
+
+
+def test_balanced_majorized_by_all():
+    n, b = 12, 3
+    bal = assignment.balanced_counts(n, b)
+    rng = np.random.default_rng(0)
+    for _ in range(200):
+        c = assignment.random_counts(n, b, rng)
+        if (c == 0).any():
+            continue
+        assert assignment.majorizes(c, bal)
+
+
+def test_lemma2_majorization_implies_slower():
+    # exact means via inclusion-exclusion (batch-level Exp model)
+    mu = 1.0
+    v1, v2 = np.array([4, 1, 1]), np.array([3, 2, 1])
+    v3 = np.array([2, 2, 2])
+    assert assignment.majorizes(v1, v2) and assignment.majorizes(v2, v3)
+    e1 = analysis.batch_model_exp_mean_T(v1, mu)
+    e2 = analysis.batch_model_exp_mean_T(v2, mu)
+    e3 = analysis.batch_model_exp_mean_T(v3, mu)
+    assert e1 > e2 > e3
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.lists(st.integers(1, 6), min_size=2, max_size=5))
+def test_property_balanced_is_minimal(counts):
+    """Property: any integer composition with the same (sum, length) that is
+    balanced-or-flatter gives smaller exact E[T] under Exp batch times."""
+    counts = np.array(counts)
+    n, b = int(counts.sum()), len(counts)
+    if n % b:
+        n = b * (n // b + 1)
+        counts[0] += n - counts.sum()
+    bal = assignment.balanced_counts(n, b)
+    e_any = analysis.batch_model_exp_mean_T(counts, 1.0)
+    e_bal = analysis.batch_model_exp_mean_T(bal, 1.0)
+    assert e_bal <= e_any + 1e-12
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    st.integers(2, 5).flatmap(
+        lambda b: st.tuples(st.just(b), st.integers(1, 4), st.permutations(range(b)))
+    )
+)
+def test_property_majorization_transfer(args):
+    """Robin-Hood transfer (take 1 from a larger coord, give to a smaller one)
+    never increases exact E[T] -- the Schur-convexity of Lemma 2."""
+    b, r, perm = args
+    base = np.full(b, r + 1)
+    base[list(perm)[0]] += 2  # unbalance one coordinate
+    donor = int(np.argmax(base))
+    recv = int(np.argmin(base))
+    if donor == recv:
+        return
+    transferred = base.copy()
+    transferred[donor] -= 1
+    transferred[recv] += 1
+    if not assignment.majorizes(base, transferred):
+        return
+    assert analysis.batch_model_exp_mean_T(base, 1.0) >= analysis.batch_model_exp_mean_T(
+        transferred, 1.0
+    ) - 1e-12
+
+
+# --------------------------------------------------------------------------
+# coupon coverage (Lemma 1)
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n,b", [(10, 3), (20, 5), (50, 10), (100, 10)])
+def test_coverage_exact_vs_mc(n, b):
+    want = coupon.coverage_probability(n, b)
+    got = coupon.coverage_probability_mc(n, b, n_samples=60_000, seed=1)
+    assert got == pytest.approx(want, abs=0.01)
+
+
+def test_coverage_paper_fig3_shape():
+    # Fig 3: with N=100, B=10 is covered w.h.p. but large B is not.
+    assert coupon.coverage_probability(100, 10) > 0.99
+    assert coupon.coverage_probability(100, 50) < 0.5
+    # monotone decreasing in B
+    ps = [coupon.coverage_probability(100, b) for b in (2, 5, 10, 20, 25, 50, 100)]
+    assert all(a >= b for a, b in zip(ps, ps[1:]))
+
+
+def test_coverage_edge_cases():
+    assert coupon.coverage_probability(5, 1) == 1.0
+    assert coupon.coverage_probability(3, 5) == 0.0
+    n99 = coupon.min_workers_for_coverage(10, 0.99)
+    assert coupon.coverage_probability(n99, 10) >= 0.99
+    assert coupon.coverage_probability(n99 - 1, 10) < 0.99
+
+
+def test_random_assignment_risk_vs_balanced():
+    """End-to-end: random placement leaves batches uncovered => infinite job
+    time with positive probability; balanced never does (Fig 3's lesson)."""
+    rng = np.random.default_rng(3)
+    n, b = 12, 6
+    m_rand = batching.random_nonoverlapping(n, b, rng)
+    with pytest.raises(ValueError):
+        # not guaranteed to raise for every seed; seed 3 leaves a gap
+        for _ in range(50):
+            m_rand = batching.random_nonoverlapping(n, b, rng)
+            batching.validate_scheme(m_rand)
+    m_bal = batching.non_overlapping(n, b)
+    batching.validate_scheme(m_bal)  # never raises

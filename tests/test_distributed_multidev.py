@@ -1,0 +1,233 @@
+"""Multi-device semantics tests (run in subprocesses with 8 fake CPU devices).
+
+Covers:
+  * sharded train step == single-device train step (bitwise-ish)
+  * replicated-DP (replica x shard mesh) == plain DP gradients
+  * int8 error-feedback compressed all-reduce: accuracy + telescoping EF
+  * elastic restart: checkpoint from an 8-device mesh restores on 4 devices
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(code: str, devices: int = 8) -> subprocess.CompletedProcess:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    return subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(code)],
+        capture_output=True, text=True, env=env, cwd=REPO, timeout=900,
+    )
+
+
+def _check(r):
+    assert r.returncode == 0, f"STDOUT:\n{r.stdout[-2000:]}\nSTDERR:\n{r.stderr[-4000:]}"
+    assert "PASS" in r.stdout, r.stdout[-2000:]
+
+
+PRELUDE = """
+import jax, jax.numpy as jnp, numpy as np
+from repro.configs import get_config
+from repro.configs.base import ShapeConfig
+from repro.models import build_model
+from repro.optim import AdamW
+from repro.runtime.train import init_state, jit_train_step, make_train_step
+from repro.launch.mesh import make_mesh
+
+cfg = get_config("qwen2-1.5b", smoke=True, param_dtype="float32", compute_dtype="float32")
+model = build_model(cfg)
+opt = AdamW(learning_rate=1e-2, weight_decay=0.0)
+B, S = 8, 16
+key = jax.random.key(0)
+batch = {
+    "tokens": jax.random.randint(jax.random.key(1), (B, S), 0, cfg.vocab_size),
+    "labels": jax.random.randint(jax.random.key(2), (B, S), 0, cfg.vocab_size),
+    "loss_mask": jnp.ones((B, S), jnp.float32),
+}
+state0 = init_state(model, opt, key)
+ref_step = jax.jit(make_train_step(model, opt))
+ref_state, ref_metrics = ref_step(state0, batch)
+ref_loss = float(ref_metrics["loss"])
+"""
+
+
+def test_sharded_step_matches_single_device():
+    code = PRELUDE + """
+shape = ShapeConfig("t", S, B, "train")
+mesh = make_mesh((4, 2), ("data", "model"))
+with mesh:
+    fn, st_sh, b_sh = jit_train_step(mesh, model, opt, shape, donate=False)
+    st = jax.device_put(init_state(model, opt, key), st_sh)
+    bt = jax.device_put(batch, b_sh)
+    new_state, metrics = fn(st, bt)
+assert abs(float(metrics["loss"]) - ref_loss) < 1e-3, (float(metrics["loss"]), ref_loss)
+# parameters after one step must match the single-device result
+flat_a = jax.tree.leaves(jax.tree.map(np.asarray, new_state.params))
+flat_b = jax.tree.leaves(jax.tree.map(np.asarray, ref_state.params))
+for a, b in zip(flat_a, flat_b):
+    np.testing.assert_allclose(a, b, atol=2e-3, rtol=2e-3)
+print("PASS")
+"""
+    _check(_run(code))
+
+
+def test_rdp_mesh_matches_plain_dp():
+    """replica x shard factorization is numerically plain DP (DESIGN §3)."""
+    code = PRELUDE + """
+shape = ShapeConfig("t", S, B, "train")
+# RDP: 2 replicas x 2 shards x 2 model; batch shards over "shard" only
+mesh = make_mesh((2, 2, 2), ("replica", "shard", "model"))
+with mesh:
+    fn, st_sh, b_sh = jit_train_step(mesh, model, opt, shape, donate=False)
+    st = jax.device_put(init_state(model, opt, key), st_sh)
+    bt = jax.device_put(batch, b_sh)
+    new_state, metrics = fn(st, bt)
+assert abs(float(metrics["loss"]) - ref_loss) < 1e-3
+flat_a = jax.tree.leaves(jax.tree.map(np.asarray, new_state.params))
+flat_b = jax.tree.leaves(jax.tree.map(np.asarray, ref_state.params))
+for a, b in zip(flat_a, flat_b):
+    np.testing.assert_allclose(a, b, atol=2e-3, rtol=2e-3)
+print("PASS")
+"""
+    _check(_run(code))
+
+
+def test_microbatched_step_matches_full_batch():
+    code = PRELUDE + """
+mb_step = jax.jit(make_train_step(model, opt, microbatches=4))
+new_state, metrics = mb_step(state0, batch)
+# same data, same global batch -> same result up to fp32 reduction order
+assert abs(float(metrics["loss"]) - ref_loss) < 1e-4
+flat_a = jax.tree.leaves(jax.tree.map(np.asarray, new_state.params))
+flat_b = jax.tree.leaves(jax.tree.map(np.asarray, ref_state.params))
+for a, b in zip(flat_a, flat_b):
+    np.testing.assert_allclose(a, b, atol=5e-4, rtol=5e-4)
+print("PASS")
+"""
+    _check(_run(code))
+
+
+def test_compressed_allreduce():
+    code = """
+import jax, jax.numpy as jnp, numpy as np
+from functools import partial
+from jax.sharding import PartitionSpec as P
+from repro.distributed.collectives import compressed_allreduce_mean
+from repro.launch.mesh import make_mesh
+
+mesh = make_mesh((8,), ("pod",))
+x = jax.random.normal(jax.random.key(0), (8, 64, 64))
+ef = jnp.zeros_like(x)
+
+@partial(jax.shard_map, mesh=mesh, in_specs=(P("pod"), P("pod")), out_specs=(P("pod"), P("pod")))
+def reduce_fn(xs, efs):
+    m, e = compressed_allreduce_mean(xs[0], efs[0], "pod")
+    return m[None], e[None]
+
+mean_est, ef1 = reduce_fn(x, ef)
+true_mean = x.mean(axis=0)
+# one-shot int8 error vs the true mean: bounded by the quantization step
+err = float(jnp.abs(np.asarray(mean_est)[0] - true_mean).max())
+scale = float(jnp.abs(x).max()) / 127.0
+assert err <= scale * 1.01, (err, scale)
+
+# error feedback telescopes: the TIME-AVERAGED estimate is unbiased, so the
+# running mean of the outputs converges to the true mean (each single step
+# still carries one quantization-step of noise)
+efs = ef
+running = jnp.zeros_like(true_mean)
+for i in range(30):
+    m, efs = reduce_fn(x, efs)
+    running = running + np.asarray(m)[0]
+avg_err = float(jnp.abs(running / 30 - true_mean).max())
+assert avg_err < err * 0.25, (avg_err, err)
+# compression is worthwhile: int8 payload is 4x smaller than f32
+print("PASS", err, avg_err)
+"""
+    _check(_run(code))
+
+
+def test_checkpoint_cross_mesh_restore():
+    """Elastic scaling: save on an 8-device mesh, restore on 4 devices."""
+    code_save = PRELUDE + """
+import tempfile, pathlib
+from repro.checkpoint import CheckpointManager
+shape = ShapeConfig("t", S, B, "train")
+mesh = make_mesh((4, 2), ("data", "model"))
+with mesh:
+    fn, st_sh, b_sh = jit_train_step(mesh, model, opt, shape, donate=False)
+    st = jax.device_put(init_state(model, opt, key), st_sh)
+    bt = jax.device_put(batch, b_sh)
+    st, _ = fn(st, bt)
+mgr = CheckpointManager("/tmp/repro_test_xmesh", keep=1)
+mgr.save(1, st)
+print("PASS saved")
+"""
+    _check(_run(code_save, devices=8))
+    code_restore = PRELUDE + """
+from repro.checkpoint import CheckpointManager
+from repro.runtime.train import state_shardings
+shape = ShapeConfig("t", S, B, "train")
+mesh = make_mesh((2, 2), ("data", "model"))  # different topology (4 devices)
+mgr = CheckpointManager("/tmp/repro_test_xmesh", keep=1)
+like = jax.eval_shape(lambda: init_state(model, opt, key))
+restored, step = mgr.restore(like)
+assert step == 1
+with mesh:
+    st_sh = state_shardings(mesh, model, opt)
+    st = jax.device_put(restored, st_sh)  # reshard onto the smaller mesh
+    fn, _, b_sh = jit_train_step(mesh, model, opt, shape, donate=False)
+    bt = jax.device_put(batch, b_sh)
+    st2, metrics = fn(st, bt)
+assert np.isfinite(float(metrics["loss"]))
+print("PASS")
+"""
+    _check(_run(code_restore, devices=4))
+
+
+def test_seq_sharded_kv_decode_matches_plain():
+    """decode_kv_seq_sharded (true-KV ring sharded over TP by sequence,
+    shard_map flash-combine) must equal the plain repeated-KV decode."""
+    code = """
+import jax, jax.numpy as jnp, numpy as np
+from repro.configs import get_config
+from repro.configs.base import ShapeConfig
+from repro.models import build_model
+from repro.runtime.serve import jit_serve_step
+from repro.launch.mesh import make_mesh
+
+B, S_PRE, S_MAX = 8, 12, 16
+cfg = get_config("qwen2-1.5b", smoke=True, param_dtype="float32",
+                 compute_dtype="float32", pad_heads_to=4, decode_kv_seq_sharded=True)
+model = build_model(cfg)
+params = model.init(jax.random.key(0))
+cfg_plain = get_config("qwen2-1.5b", smoke=True, param_dtype="float32",
+                       compute_dtype="float32", pad_heads_to=4)
+model_plain = build_model(cfg_plain)
+toks = jax.random.randint(jax.random.key(1), (B, S_MAX), 0, cfg.vocab_size)
+
+mesh = make_mesh((2, 4), ("data", "model"))
+shape = ShapeConfig("d", S_MAX, B, "decode")
+with mesh:
+    step, p_sh, c_sh, tok_sh = jit_serve_step(mesh, model, shape, donate=False)
+    pt = jax.device_put(params, p_sh)
+    logits, cache, t = model.prefill(params, {"tokens": toks[:, :S_PRE]}, max_len=S_MAX)
+    cache = jax.device_put(cache, c_sh)
+    logits_ref, cache_ref, t_ref = model_plain.prefill(
+        params, {"tokens": toks[:, :S_PRE]}, max_len=S_MAX)
+    np.testing.assert_allclose(np.asarray(logits), np.asarray(logits_ref), atol=2e-3, rtol=2e-3)
+    for i in range(3):
+        tok = toks[:, S_PRE+i:S_PRE+i+1]
+        logits, cache, t = step(pt, cache, tok, t)
+        logits_ref, cache_ref, t_ref = model_plain.decode_step(params, cache_ref, tok, t_ref)
+        np.testing.assert_allclose(np.asarray(logits), np.asarray(logits_ref),
+                                   atol=3e-3, rtol=3e-3, err_msg=f"step {i}")
+print("PASS")
+"""
+    _check(_run(code))

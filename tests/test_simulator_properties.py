@@ -1,0 +1,74 @@
+"""Hypothesis property tests on the simulator's system invariants."""
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import analysis, simulator
+from repro.core.service_time import Exponential, Pareto, ShiftedExponential, min_of
+
+MC = 60_000
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    b=st.sampled_from([1, 2, 3, 4, 6]),
+    mu=st.floats(0.5, 4.0),
+)
+def test_more_replicas_never_slower(b, mu):
+    """Adding replicas to every batch (same B) stochastically speeds the job:
+    E[T | r+1] <= E[T | r] -- min over more i.i.d. draws is smaller."""
+    n1 = b * 2
+    n2 = b * 3  # one more replica per batch
+    d = Exponential(mu=mu)
+    t1 = simulator.simulate_balanced(jax.random.key(0), d, n1, b, MC, size_dependent=False)
+    t2 = simulator.simulate_balanced(jax.random.key(1), d, n2, b, MC, size_dependent=False)
+    assert t2.mean() <= t1.mean() * 1.02  # MC slack
+
+
+@settings(max_examples=10, deadline=None)
+@given(b=st.sampled_from([2, 3, 6]), delta=st.floats(0.01, 1.0), mu=st.floats(0.5, 5.0))
+def test_min_of_closure_matches_mc(b, delta, mu):
+    """min_of's closed-form first order statistic matches empirical mins."""
+    d = ShiftedExponential(delta=delta, mu=mu)
+    m = min_of(d, b)
+    draws = d.sample(jax.random.key(2), (MC, b))
+    emp_mean = float(np.asarray(draws.min(axis=1)).mean())
+    assert emp_mean == pytest.approx(m.mean(), rel=0.05)
+
+
+@settings(max_examples=8, deadline=None)
+@given(alpha=st.floats(2.2, 8.0))
+def test_job_time_exceeds_single_batch_time(alpha):
+    """T = max over B batches >= the time of any single batch (sanity of the
+    max-min structure) and the closed form respects it."""
+    n, b = 12, 4
+    d = Pareto(sigma=1.0, alpha=alpha)
+    et = analysis.pareto_mean_T(n, b, 1.0, alpha)
+    # a single batch is the min of r=3 workers on N/B=3 tasks
+    single = min_of(d.scaled_by(n / b), n // b).mean()
+    assert et >= single * 0.99
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 100))
+def test_coverage_failure_yields_inf(seed):
+    """Uncovered batches (coupon-collector failure) => incomplete job (inf)."""
+    rng = np.random.default_rng(seed)
+    counts = rng.multinomial(6, np.ones(6) / 6)  # 6 draws over 6 batches
+    t = simulator.simulate_counts(
+        jax.random.key(seed), Exponential(1.0), counts, 2000
+    )
+    if (counts == 0).any():
+        assert np.isinf(t).all()
+    else:
+        assert np.isfinite(t).all()
+
+
+def test_balanced_beats_unbalanced_montecarlo():
+    """Lemma 2 via MC: the balanced counts vector has the smallest E[T]."""
+    d = Exponential(mu=1.0)
+    t_bal = simulator.simulate_counts(jax.random.key(0), d, np.array([2, 2, 2]), MC)
+    t_unb = simulator.simulate_counts(jax.random.key(1), d, np.array([4, 1, 1]), MC)
+    assert t_bal.mean() < t_unb.mean()
