@@ -1,0 +1,216 @@
+"""Cluster-engine benchmark: §VII dynamics the closed forms cannot express.
+
+Four scenarios on the synthetic Google-trace jobs (and parametric tails):
+
+  * ``redundancy``   -- per trace job, engine mean compute time at B = N (no
+    redundancy) vs the planned B*: reproduces the §VII observation that
+    planned redundancy speeds heavy-tail jobs up by about an order of
+    magnitude.
+  * ``queueing``     -- Poisson multi-job arrivals: mean response time with
+    and without planned redundancy (the queueing cost/benefit).
+  * ``cancellation`` -- replica cancellation on/off: worker-seconds burned,
+    seconds reclaimed, response-time delta.
+  * ``churn``        -- worker fail/join churn on/off: failures, rescues,
+    compute-time delta.
+
+``--smoke`` shrinks every sample count so the whole file runs in seconds --
+CI executes it on every PR and uploads the JSON artifact.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+import time
+
+import numpy as np
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+
+from repro.cluster import ChurnProcess, ClusterEngine, Job, jobs_from_traces, sample_job_times
+from repro.core import traces
+from repro.core.planner import RedundancyPlanner
+from repro.core.service_time import Empirical, Pareto
+
+ART = pathlib.Path(__file__).resolve().parent / "artifacts" / "cluster"
+
+
+def _cfg(smoke: bool) -> dict:
+    if smoke:
+        return {"n_workers": 10, "n_reps": 60, "n_jobs": 6, "trace_jobs": 4}
+    return {"n_workers": 20, "n_reps": 400, "n_jobs": 24, "trace_jobs": 10}
+
+
+def bench_redundancy(cfg: dict, seed: int = 0) -> dict:
+    """Engine-measured speedup of planned redundancy vs no redundancy."""
+    n = cfg["n_workers"]
+    jobs = traces.synthetic_google_jobs()
+    # interleave the exponential (1-4) and heavy (5-10) families so that
+    # smoke subsets still exercise both tail regimes
+    exp = [j for j in jobs if j.family == "exponential"]
+    heavy = [j for j in jobs if j.family == "heavy"]
+    interleaved = [j for pair in zip(heavy, exp) for j in pair] + heavy[len(exp):]
+    jobs = interleaved[: cfg["trace_jobs"]]
+    planner = RedundancyPlanner(n)
+    out = {}
+    for i, tj in enumerate(jobs):
+        dist = Empirical(samples=tuple(float(x) for x in tj.task_times))
+        plan = planner.plan_empirical(tj.task_times, "mean", n_mc=4 * cfg["n_reps"], seed=seed)
+        t_base = sample_job_times(dist, n, n, cfg["n_reps"], seed=seed + i)
+        t_plan = sample_job_times(dist, n, plan.n_batches, cfg["n_reps"], seed=seed + i)
+        out[tj.name] = {
+            "family": tj.family,
+            "B_star": plan.n_batches,
+            "mean_T_no_redundancy": float(t_base.mean()),
+            "mean_T_planned": float(t_plan.mean()),
+            "speedup": float(t_base.mean() / t_plan.mean()),
+        }
+    heavy = [v["speedup"] for v in out.values() if v["family"] == "heavy"]
+    out["_summary"] = {
+        "max_heavy_speedup": max(heavy) if heavy else None,
+        "min_heavy_speedup": min(heavy) if heavy else None,
+    }
+    return out
+
+
+def bench_queueing(cfg: dict, seed: int = 0) -> dict:
+    """Multi-job FIFO queueing under Poisson arrivals, planned vs none."""
+    n = cfg["n_workers"]
+    trace = traces.synthetic_google_jobs()[5]  # heavy-tail job
+    plan = RedundancyPlanner(n).plan_empirical(trace.task_times, "mean", n_mc=2000, seed=seed)
+    base_mean = float(np.mean(trace.task_times))
+    # arrivals fast enough that queueing matters: ~1 job per planned job-time
+    rate = 1.0 / (base_mean * 2.0)
+    workload = jobs_from_traces([trace] * cfg["n_jobs"], n, rate, seed=seed)
+    out = {}
+    for label, b in [("no_redundancy", n), ("planned", plan.n_batches)]:
+        rep = ClusterEngine(n, seed=seed, n_batches=b, cancel_redundant=True).run(workload)
+        resp = rep.response_times
+        resp = resp[np.isfinite(resp)]
+        out[label] = {
+            "B": b,
+            "mean_response": float(resp.mean()),
+            "p95_response": float(np.percentile(resp, 95)),
+            "worker_seconds": rep.worker_seconds,
+        }
+    base, planned = out["no_redundancy"]["mean_response"], out["planned"]["mean_response"]
+    out["response_speedup"] = base / planned
+    return out
+
+
+def bench_cancellation(cfg: dict, seed: int = 0) -> dict:
+    """Worker-seconds reclaimed by cancelling redundant replicas."""
+    n = cfg["n_workers"]
+    dist = Pareto(sigma=1.0, alpha=1.8)
+    jobs = [Job(job_id=i, dist=dist, n_tasks=n) for i in range(cfg["n_jobs"])]
+    out = {}
+    for label, cancel in [("cancel_on", True), ("cancel_off", False)]:
+        rep = ClusterEngine(n, seed=seed, n_batches=max(1, n // 4), cancel_redundant=cancel).run(
+            jobs
+        )
+        out[label] = {
+            "worker_seconds": rep.worker_seconds,
+            "saved_seconds": rep.cancelled_seconds_saved,
+            "mean_response": float(rep.response_times.mean()),
+        }
+    out["worker_seconds_ratio"] = (
+        out["cancel_on"]["worker_seconds"] / out["cancel_off"]["worker_seconds"]
+    )
+    return out
+
+
+def bench_churn(cfg: dict, seed: int = 0) -> dict:
+    """Fail/join churn: completion under failures, rescue accounting."""
+    n = cfg["n_workers"]
+    dist = Pareto(sigma=1.0, alpha=1.8)
+    jobs = [Job(job_id=i, dist=dist, n_tasks=n) for i in range(cfg["n_jobs"])]
+    out = {}
+    scenarios = [
+        ("churn_off", None),
+        ("churn_on", ChurnProcess(fail_rate=0.02, mean_downtime=5.0)),
+    ]
+    for label, churn in scenarios:
+        rep = ClusterEngine(n, seed=seed, n_batches=max(1, n // 4), churn=churn).run(jobs)
+        t = rep.compute_times
+        out[label] = {
+            "mean_compute": float(t[np.isfinite(t)].mean()),
+            "n_worker_failures": rep.n_worker_failures,
+            "n_replicas_rescued": rep.n_replicas_rescued,
+            "all_jobs_completed": bool(np.isfinite(t).all()),
+        }
+    out["churn_slowdown"] = out["churn_on"]["mean_compute"] / out["churn_off"]["mean_compute"]
+    return out
+
+
+def run_all(smoke: bool = True, seed: int = 0) -> list:
+    """CSV rows for the benchmark aggregator (smoke sizes by default)."""
+    cfg = _cfg(smoke)
+    rows = []
+    t0 = time.time()
+    red = bench_redundancy(cfg, seed)
+    s = red["_summary"]
+    rows.append(
+        (
+            "cluster_redundancy",
+            (time.time() - t0) * 1e6 / max(cfg["trace_jobs"], 1),
+            f"heavy speedup {s['min_heavy_speedup']:.1f}x..{s['max_heavy_speedup']:.1f}x",
+        )
+    )
+    t0 = time.time()
+    q = bench_queueing(cfg, seed)
+    rows.append(
+        (
+            "cluster_queueing",
+            (time.time() - t0) * 1e6 / cfg["n_jobs"],
+            f"response speedup {q['response_speedup']:.1f}x (B*={q['planned']['B']})",
+        )
+    )
+    t0 = time.time()
+    c = bench_cancellation(cfg, seed)
+    rows.append(
+        (
+            "cluster_cancellation",
+            (time.time() - t0) * 1e6 / cfg["n_jobs"],
+            f"worker-seconds x{c['worker_seconds_ratio']:.2f} with cancellation",
+        )
+    )
+    t0 = time.time()
+    ch = bench_churn(cfg, seed)
+    rows.append(
+        (
+            "cluster_churn",
+            (time.time() - t0) * 1e6 / cfg["n_jobs"],
+            f"slowdown x{ch['churn_slowdown']:.2f} under churn "
+            f"({ch['churn_on']['n_worker_failures']} failures)",
+        )
+    )
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true", help="tiny sample counts (CI)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", type=pathlib.Path, default=ART / "cluster_bench.json")
+    args = ap.parse_args()
+
+    cfg = _cfg(args.smoke)
+    t0 = time.time()
+    result = {
+        "config": {"smoke": args.smoke, "seed": args.seed, **cfg},
+        "redundancy": bench_redundancy(cfg, args.seed),
+        "queueing": bench_queueing(cfg, args.seed),
+        "cancellation": bench_cancellation(cfg, args.seed),
+        "churn": bench_churn(cfg, args.seed),
+    }
+    result["wall_seconds"] = time.time() - t0
+
+    args.out.parent.mkdir(parents=True, exist_ok=True)
+    args.out.write_text(json.dumps(result, indent=2))
+    print(json.dumps(result, indent=2))
+    print(f"\nwrote {args.out}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -10,7 +10,6 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import get_config
 from repro.data import PipelineConfig, SyntheticLM
@@ -18,7 +17,6 @@ from repro.kernels.flash_attention import flash_attention_fwd
 from repro.kernels.ref import flash_attention_ref
 from repro.kernels.rmsnorm import rms_norm_fused
 from repro.models import build_model
-from repro.models.layers import flash_attention as jnp_flash
 from repro.optim import AdamW
 from repro.runtime.train import init_state, make_train_step
 

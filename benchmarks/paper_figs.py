@@ -14,7 +14,7 @@ import jax
 import numpy as np
 
 from repro.core import analysis, batching, coupon, simulator
-from repro.core.service_time import Exponential, Pareto, ShiftedExponential
+from repro.core.service_time import Exponential
 
 ART = pathlib.Path(__file__).resolve().parent / "artifacts" / "paper"
 

@@ -12,11 +12,19 @@ sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
 
 
 def main() -> None:
-    from benchmarks import kernel_bench, paper_figs, roofline, technique_bench, traces_bench
+    from benchmarks import (
+        cluster_bench,
+        kernel_bench,
+        paper_figs,
+        roofline,
+        technique_bench,
+        traces_bench,
+    )
 
     rows = []
     rows.extend(paper_figs.run_all())
     rows.extend(traces_bench.run_all())
+    rows.extend(cluster_bench.run_all(smoke=True))
     rows.extend(kernel_bench.run_all())
     rows.extend(technique_bench.run_all())
     try:

@@ -16,7 +16,6 @@ from __future__ import annotations
 import time
 
 import jax
-import numpy as np
 
 from repro.core import simulator
 from repro.core.service_time import Exponential, Pareto, ShiftedExponential

@@ -1,54 +1,80 @@
-"""Elastic failover walkthrough: plan -> fail workers -> coverage check ->
-replan -> cross-mesh checkpoint restore semantics.
+"""Elastic failover on the event-driven cluster engine.
+
+The walkthrough closes the planner -> engine -> replanner loop:
+
+  1. plan (B, r) for a heavy-tail workload from the closed forms;
+  2. execute a stream of jobs on :class:`ClusterEngine` with worker
+     fail/join churn -- dead replicas are rescued, coverage never breaks;
+  3. the :class:`OnlineReplanner` refits the service-time model from the
+     engine's observed task times and re-picks (B, r) mid-stream;
+  4. the mesh-level view (``repro.distributed.rdp``) shows how the final
+     plan maps onto a ("replica", "shard") device-mesh factorization.
 
 Run:  PYTHONPATH=src python examples/elastic_failover.py
 """
 import numpy as np
 
+from repro.cluster import ChurnProcess, ClusterEngine, Job, OnlineReplanner
 from repro.core.planner import RedundancyPlanner
 from repro.core.service_time import Pareto
 from repro.distributed import rdp
 
 
 def main():
+    n_workers = 16
     dist = Pareto(sigma=1.0, alpha=1.8)  # heavy-tail step times
-    ctl = rdp.ElasticController(dist, objective="mean")
 
-    plan = ctl.initial_plan(16)
-    print(f"[t0] plan for N=16: B={plan.n_batches} shards x r={plan.replication} replicas"
-          f" (predicted E[step]={plan.predicted_mean:.2f})")
+    # --- 1. plan from the closed forms --------------------------------------
+    plan = RedundancyPlanner(n_workers).plan(dist, objective="mean")
+    print(
+        f"[plan] N={n_workers}: B={plan.n_batches} shards x r={plan.replication} "
+        f"replicas (predicted E[T]={plan.predicted_mean:.2f})"
+    )
 
-    # --- two workers from different replica groups die -----------------------
-    healthy = [True] * 16
-    healthy[3] = healthy[12] = False  # shards 3%B and 12%B (distinct groups)
-    cov = rdp.surviving_coverage(plan, healthy)
-    print(f"[t1] workers 3,12 down -> shards still covered: {cov['covered']} "
-          f"(replicas per shard: {cov['replicas_per_shard']})")
-    assert cov["covered"], "replication absorbed the failures: no shard lost"
+    # --- 2. execute under churn ---------------------------------------------
+    controller = OnlineReplanner(
+        n_workers, window=512, refit_every=128, min_observations=96, initial_plan=plan
+    )
+    engine = ClusterEngine(
+        n_workers,
+        seed=42,
+        cancel_redundant=True,
+        churn=ChurnProcess(fail_rate=0.02, mean_downtime=3.0),
+        controller=controller,
+    )
+    jobs = [Job(job_id=i, dist=dist, n_tasks=n_workers) for i in range(40)]
+    report = engine.run(jobs)
 
-    # --- a full replica group dies: coverage breaks, controller replans ------
-    for w in range(16):
-        if w % plan.n_batches == 2:
-            healthy[w] = False
-    cov = rdp.surviving_coverage(plan, healthy)
-    print(f"[t2] shard-2 group down -> covered: {cov['covered']} "
-          f"(lost shards: {cov['lost_shards']})")
-    n_healthy = int(np.sum(healthy))
-    tr = ctl.on_membership_change(plan, n_healthy=n_healthy)
-    print(f"[t3] replanned for N={n_healthy}: B={tr.new_plan.n_batches} x "
-          f"r={tr.new_plan.replication} ({tr.reason}); mesh {tr.mesh_change[0]} -> "
-          f"{tr.mesh_change[1]}")
+    t = report.compute_times
+    print(
+        f"[run ] {len(report.records)} jobs, {report.n_worker_failures} worker failures, "
+        f"{report.n_replicas_rescued} replicas rescued, all completed: "
+        f"{bool(np.isfinite(t).all())}"
+    )
+    print(
+        f"[run ] mean job time {t[np.isfinite(t)].mean():.2f}, "
+        f"{report.cancelled_seconds_saved:.0f} worker-seconds reclaimed by cancellation"
+    )
 
-    # --- straggler onset detected from observed step times -------------------
-    rng = np.random.default_rng(0)
-    heavy_steps = 1.0 * rng.uniform(size=3000) ** (-1 / 1.2)
-    tr2 = ctl.on_observed_step_times(tr.new_plan, heavy_steps)
-    if tr2:
-        print(f"[t4] drift detected: B {tr.new_plan.n_batches} -> {tr2.new_plan.n_batches} "
-              f"(more replication for the heavier tail)")
-    print("\nCheckpoint restore across mesh shapes is exercised in "
-          "tests/test_distributed_multidev.py::test_checkpoint_cross_mesh_restore; "
-          "data needs no migration (counter-deterministic pipeline).")
+    # --- 3. the replanner refit from observed task times ---------------------
+    final = controller.current
+    print(
+        f"[ctl ] {report.n_replans} replan(s) from "
+        f"{len(controller.observations)} observed task times: "
+        f"B {plan.n_batches} -> {final.n_batches} ({final.source})"
+    )
+
+    # --- 4. mesh view: plan -> ("replica", "shard") factorization ------------
+    cov = rdp.surviving_coverage(final, [True] * final.n_workers)
+    print(
+        f"[mesh] final plan factorizes the data axis as "
+        f"(replica={final.replication}, shard={final.n_batches}); "
+        f"replicas per shard: {cov['replicas_per_shard']}"
+    )
+    print(
+        "\nCheckpoint restore across mesh shapes is exercised in "
+        "tests/test_distributed_multidev.py::test_checkpoint_cross_mesh_restore."
+    )
 
 
 if __name__ == "__main__":

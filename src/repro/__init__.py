@@ -1,0 +1,15 @@
+"""Efficient Replication for Straggler Mitigation (arXiv:2006.02318) as a system.
+
+Layers, bottom to top:
+
+  * ``repro.core``        -- the paper: batching schemes, service-time models,
+    closed-form analysis, Monte-Carlo simulator, redundancy planner, traces.
+  * ``repro.cluster``     -- event-driven master-worker engine that executes
+    redundancy plans (queueing, cancellation, churn, online replanning).
+  * ``repro.distributed`` -- the plan as a device-mesh factorization
+    (replica x shard), collectives, elastic replanning controller.
+  * ``repro.models`` / ``kernels`` / ``runtime`` / ``launch`` -- the jax/pallas
+    training and serving stack the replication policy protects.
+"""
+
+__version__ = "0.1.0"

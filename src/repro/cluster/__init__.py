@@ -1,0 +1,52 @@
+"""Event-driven master-worker cluster engine (the paper's system, executed).
+
+Where ``repro.core`` evaluates redundancy plans (closed forms + vectorized
+Monte-Carlo), ``repro.cluster`` *runs* them: a seeded discrete-event engine
+with a master (job queue, batch dispatch, earliest-cover completion,
+replica cancellation), workers (service-time draws, heterogeneous speeds,
+fail/join churn), and an online control loop that refits the service-time
+model from observed task times and replans (B, r) mid-stream.
+
+The planner -> engine -> replanner loop:
+
+  1. ``RedundancyPlanner`` picks (B, r) -- closed form, bootstrap, or
+     ``plan_cluster`` (scored by this engine);
+  2. ``ClusterEngine`` executes jobs under that plan, under dynamics the
+     closed forms cannot express (queueing, churn, cancellation);
+  3. ``OnlineReplanner`` watches completed-task service times and re-picks
+     (B, r) when the fitted distribution drifts.
+
+Public surface:
+  * events   -- event heap, simulation clock, named RNG streams
+  * workers  -- Worker/WorkerPool, ChurnProcess, service draws
+  * master   -- Job/JobRecord/EngineReport, ClusterEngine, workload helpers
+  * control  -- OnlineReplanner (sliding-window refit + replan)
+"""
+from . import control, events, master, workers
+from .control import OnlineReplanner
+from .master import (
+    ClusterEngine,
+    EngineReport,
+    Job,
+    JobRecord,
+    jobs_from_traces,
+    sample_job_times,
+)
+from .workers import ChurnProcess, Worker, WorkerPool
+
+__all__ = [
+    "control",
+    "events",
+    "master",
+    "workers",
+    "OnlineReplanner",
+    "ClusterEngine",
+    "EngineReport",
+    "Job",
+    "JobRecord",
+    "jobs_from_traces",
+    "sample_job_times",
+    "ChurnProcess",
+    "Worker",
+    "WorkerPool",
+]

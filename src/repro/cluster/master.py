@@ -1,0 +1,527 @@
+"""Master: job queue, batch dispatch, earliest-cover completion, cancellation.
+
+:class:`ClusterEngine` executes :class:`~repro.core.planner.RedundancyPlan`
+operating points instead of merely evaluating them.  Per job the master
+splits the job's N tasks into B balanced non-overlapping batches, assigns
+each batch to r = n_alive // B workers (the paper's optimal scheme), and
+declares the job complete at the earliest time the union of finished batch
+replicas covers all tasks -- ``T = max_B min_r T_ij``, the §VI job time.
+
+Beyond the closed forms, the engine expresses the dynamics the analysis
+cannot: FIFO multi-job queueing (jobs gang-schedule onto the whole cluster),
+cancellation of outstanding sibling replicas the moment a batch first
+completes (reclaiming wasted worker-seconds), worker fail/join churn with
+replica rescue, heterogeneous worker speeds, and mid-stream replanning via
+an :class:`~repro.cluster.control.OnlineReplanner`.
+
+With a single job, homogeneous workers, no churn, and no queueing the engine
+is statistically identical to ``core.simulator.simulate_balanced`` -- a
+property the test suite enforces.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import math
+from typing import Dict, List, Optional, Sequence, Set
+
+import numpy as np
+
+from ..core.service_time import Empirical, ServiceTime
+from ..core.simulator import JobTimeStats, stats_from_samples
+from . import events as ev
+from .control import OnlineReplanner
+from .workers import ChurnProcess, Worker, WorkerPool, draw_batch_time
+
+__all__ = [
+    "Job",
+    "JobRecord",
+    "EngineReport",
+    "ClusterEngine",
+    "sample_job_times",
+    "jobs_from_traces",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class Job:
+    """One job: N tasks whose service times follow ``dist``."""
+
+    job_id: int
+    dist: ServiceTime
+    n_tasks: int
+    arrival: float = 0.0
+    name: str = ""
+
+
+@dataclasses.dataclass(frozen=True)
+class JobRecord:
+    """Execution outcome of one job (finish = inf if it never completed)."""
+
+    job_id: int
+    name: str
+    arrival: float
+    start: float
+    finish: float
+    n_batches: int
+    replication: int
+
+    @property
+    def compute_time(self) -> float:
+        return self.finish - self.start
+
+    @property
+    def response_time(self) -> float:
+        return self.finish - self.arrival
+
+    @property
+    def queue_wait(self) -> float:
+        return self.start - self.arrival
+
+
+@dataclasses.dataclass
+class EngineReport:
+    """Aggregate outcome of one engine run."""
+
+    records: List[JobRecord]
+    worker_seconds: float  # total busy time actually burned
+    cancelled_seconds_saved: float  # scheduled-but-reclaimed replica time
+    n_events: int
+    n_worker_failures: int
+    n_replicas_rescued: int
+    n_replans: int
+    final_n_batches: int
+
+    @property
+    def compute_times(self) -> np.ndarray:
+        return np.array([r.compute_time for r in self.records])
+
+    @property
+    def response_times(self) -> np.ndarray:
+        return np.array([r.response_time for r in self.records])
+
+    def stats(self) -> JobTimeStats:
+        t = self.compute_times
+        t = t[np.isfinite(t)]
+        return stats_from_samples(t) if t.size else JobTimeStats.empty()
+
+
+@dataclasses.dataclass
+class _JobExec:
+    """Mutable per-job execution state while the job is on the cluster."""
+
+    job: Job
+    start: float
+    n_batches: int
+    replication: int
+    done: Set[int] = dataclasses.field(default_factory=set)
+    # batch -> wids with an in-flight replica of that batch
+    outstanding: Dict[int, Set[int]] = dataclasses.field(default_factory=dict)
+
+    @property
+    def batch_tasks(self) -> float:
+        return self.job.n_tasks / self.n_batches
+
+    @property
+    def complete(self) -> bool:
+        return len(self.done) == self.n_batches
+
+
+class ClusterEngine:
+    """Event-driven master-worker cluster executing redundancy plans.
+
+    Parameters
+    ----------
+    n_workers:
+        Initial cluster size.
+    seed:
+        Root seed; every stochastic stream (service draws, churn, arrivals)
+        derives from it, so runs replay exactly.
+    n_batches:
+        Static plan: split every job into this many batches (clamped to the
+        alive-worker count at dispatch).  ``None`` means full parallelism
+        (B = alive workers) unless a controller supplies a plan.
+    cancel_redundant:
+        Cancel a batch's outstanding sibling replicas the moment its first
+        replica finishes, reclaiming their remaining worker-seconds.
+    size_dependent:
+        §VI size model (batch time = (N/B) tau) vs §IV batch-level model.
+    speeds:
+        Optional per-worker speed factors (heterogeneous cluster).
+    churn:
+        Optional fail/join process applied independently to every worker.
+    controller:
+        Optional :class:`OnlineReplanner`; fed observed task times, asked to
+        replan after each job completes, and consulted at dispatch.
+    """
+
+    def __init__(
+        self,
+        n_workers: int,
+        *,
+        seed: int = 0,
+        n_batches: Optional[int] = None,
+        cancel_redundant: bool = False,
+        size_dependent: bool = True,
+        speeds: Optional[Sequence[float]] = None,
+        churn: Optional[ChurnProcess] = None,
+        controller: Optional[OnlineReplanner] = None,
+    ):
+        self.pool = WorkerPool(n_workers, speeds)
+        self.rng = ev.RngStreams(seed)
+        self.n_batches = n_batches
+        self.cancel_redundant = cancel_redundant
+        self.size_dependent = size_dependent
+        self.churn = churn
+        self.controller = controller
+
+        self.events = ev.EventQueue()
+        self.clock = ev.SimClock()
+        self.queue: collections.deque = collections.deque()
+        self.active: Dict[int, _JobExec] = {}
+        self.rescue: collections.deque = collections.deque()  # (job_id, batch)
+        self.records: List[JobRecord] = []
+
+        self._worker_seconds = 0.0
+        self._saved_seconds = 0.0
+        self._n_failures = 0
+        self._n_rescued = 0
+        self._n_jobs_expected = 0
+        self._ran = False
+
+    # -- plan resolution ----------------------------------------------------
+
+    def _choose_B(self, n_alive: int) -> int:
+        if self.controller is not None and self.controller.current is not None:
+            b = self.controller.current.n_batches
+        elif self.n_batches is not None:
+            b = self.n_batches
+        else:
+            b = n_alive
+        return max(1, min(int(b), n_alive))
+
+    # -- dispatch -----------------------------------------------------------
+
+    def _assign(self, worker: Worker, jexec: _JobExec, batch: int) -> None:
+        duration = draw_batch_time(
+            jexec.job.dist,
+            self.rng.get("service"),
+            jexec.batch_tasks,
+            worker.speed,
+            self.size_dependent,
+        )
+        now = self.clock.now
+        worker.assignment = (jexec.job.job_id, batch)
+        worker.busy_since = now
+        worker.scheduled_end = now + duration
+        jexec.outstanding.setdefault(batch, set()).add(worker.wid)
+        self.events.push(
+            now + duration,
+            ev.BATCH_DONE,
+            job_id=jexec.job.job_id,
+            batch=batch,
+            wid=worker.wid,
+            epoch=worker.epoch,
+        )
+
+    def _try_dispatch(self) -> None:
+        # Whole-cluster FIFO gang scheduling: the next job starts once no job
+        # is active and every alive worker is free (stragglers of the previous
+        # job -- unless cancelled -- delay the next one: redundancy's queueing
+        # cost, which cancellation reclaims).
+        while self.queue and not self.active:
+            n_alive = self.pool.n_alive()
+            free = self.pool.free_workers()
+            if n_alive == 0 or len(free) < n_alive:
+                return
+            job = self.queue.popleft()
+            b = self._choose_B(n_alive)
+            r = n_alive // b
+            jexec = _JobExec(job=job, start=self.clock.now, n_batches=b, replication=r)
+            self.active[job.job_id] = jexec
+            for idx, worker in enumerate(free[: b * r]):
+                self._assign(worker, jexec, idx % b)
+
+    def _assign_rescues(self) -> None:
+        while self.rescue:
+            free = self.pool.free_workers()
+            if not free:
+                return
+            job_id, batch = self.rescue.popleft()
+            jexec = self.active.get(job_id)
+            if jexec is None or batch in jexec.done:
+                continue
+            self._assign(free[0], jexec, batch)
+            self._n_rescued += 1
+
+    # -- event handlers -----------------------------------------------------
+
+    def _release(self, worker: Worker) -> None:
+        """Account busy time and mark the worker idle."""
+        self._worker_seconds += self.clock.now - worker.busy_since
+        worker.assignment = None
+        worker.scheduled_end = math.inf
+
+    def _on_batch_done(self, job_id: int, batch: int, wid: int, epoch: int) -> None:
+        worker = self.pool[wid]
+        if not worker.alive or worker.epoch != epoch or worker.assignment != (job_id, batch):
+            return  # stale: the replica was cancelled or the worker failed
+        jexec = self.active.get(job_id)
+        if jexec is None:
+            # the job already completed (earliest cover); this replica ran to
+            # the end -- release the worker so the next job can gang-schedule
+            self._release(worker)
+            self._assign_rescues()
+            self._try_dispatch()
+            return
+        now = self.clock.now
+        duration = now - worker.busy_since
+        self._release(worker)
+        jexec.outstanding[batch].discard(wid)
+
+        # a completed replica is a genuine service-time observation; with
+        # cancellation only the batch winner completes, so tag it with the
+        # number of replicas it raced (the replanner undoes the min-of-r bias)
+        if self.controller is not None:
+            tau = duration * worker.speed
+            if self.size_dependent:
+                tau /= jexec.batch_tasks
+            censored = self.cancel_redundant and batch not in jexec.done
+            n_rivals = len(jexec.outstanding[batch]) if censored else 0
+            self.controller.observe(tau, n_competitors=1 + n_rivals)
+
+        if batch not in jexec.done:
+            jexec.done.add(batch)
+            if self.cancel_redundant:
+                for sib_wid in sorted(jexec.outstanding[batch]):
+                    sib = self.pool[sib_wid]
+                    self._saved_seconds += sib.scheduled_end - now
+                    sib.epoch += 1  # invalidate its in-flight BATCH_DONE
+                    self._release(sib)
+                jexec.outstanding[batch].clear()
+            if jexec.complete:
+                self._finish_job(jexec)
+        self._assign_rescues()
+        self._try_dispatch()
+
+    def _finish_job(self, jexec: _JobExec) -> None:
+        job = jexec.job
+        self.records.append(
+            JobRecord(
+                job_id=job.job_id,
+                name=job.name,
+                arrival=job.arrival,
+                start=jexec.start,
+                finish=self.clock.now,
+                n_batches=jexec.n_batches,
+                replication=jexec.replication,
+            )
+        )
+        del self.active[job.job_id]
+        # drop rescues belonging to the finished job
+        still_needed = [(j, b) for (j, b) in self.rescue if j != job.job_id]
+        self.rescue = collections.deque(still_needed)
+        if self.controller is not None:
+            # future dispatches read controller.current
+            self.controller.maybe_replan(self.pool.n_alive())
+
+    def _schedule_failure(self, worker: Worker) -> None:
+        if self.churn is None:
+            return
+        dt = self.churn.next_failure(self.rng.get("churn"))
+        if math.isfinite(dt):
+            when = self.clock.now + dt
+            self.events.push(when, ev.WORKER_FAIL, wid=worker.wid, epoch=worker.churn_epoch)
+
+    def _on_worker_fail(self, wid: int, epoch: int) -> None:
+        worker = self.pool[wid]
+        if not worker.alive or worker.churn_epoch != epoch:
+            return  # stale failure (scheduled before an earlier fail/join)
+        self._n_failures += 1
+        if worker.assignment is not None:
+            job_id, batch = worker.assignment
+            self._worker_seconds += self.clock.now - worker.busy_since
+            jexec = self.active.get(job_id)
+            if jexec is not None:
+                jexec.outstanding[batch].discard(wid)
+                if batch not in jexec.done and not jexec.outstanding[batch]:
+                    # last replica of an unfinished batch died: rescue it
+                    self.rescue.append((job_id, batch))
+            worker.assignment = None
+            worker.scheduled_end = math.inf
+        worker.alive = False
+        worker.epoch += 1
+        worker.churn_epoch += 1
+        if self.churn is not None:
+            down = self.churn.downtime(self.rng.get("churn"))
+            if math.isfinite(down):
+                self.events.push(
+                    self.clock.now + down,
+                    ev.WORKER_JOIN,
+                    wid=wid,
+                    epoch=worker.churn_epoch,
+                )
+        self._assign_rescues()
+        self._try_dispatch()
+
+    def _on_worker_join(self, wid: int, epoch: int) -> None:
+        worker = self.pool[wid]
+        if worker.alive or worker.churn_epoch != epoch:
+            return
+        worker.alive = True
+        worker.epoch += 1
+        worker.churn_epoch += 1
+        self._schedule_failure(worker)
+        self._assign_rescues()
+        self._try_dispatch()
+
+    # -- main loop ----------------------------------------------------------
+
+    def run(self, jobs: Sequence[Job], max_events: int = 2_000_000) -> EngineReport:
+        """Execute ``jobs`` to completion and return the run report.
+
+        Single-shot: clock, records, and churn state persist after a run, so
+        reusing the engine would mix workloads -- construct a new one.
+        """
+        if self._ran:
+            raise RuntimeError("ClusterEngine.run() is single-shot; construct a new engine")
+        self._ran = True
+        self._n_jobs_expected = len(jobs)
+        for job in jobs:
+            self.events.push(job.arrival, ev.JOB_ARRIVAL, job=job)
+        for worker in self.pool:
+            self._schedule_failure(worker)
+
+        n_events = 0
+        while self.events and n_events < max_events:
+            if len(self.records) == self._n_jobs_expected:
+                break  # only churn noise remains
+            t, kind, payload = self.events.pop()
+            self.clock.advance(t)
+            n_events += 1
+            if kind == ev.JOB_ARRIVAL:
+                self.queue.append(payload["job"])
+                self._try_dispatch()
+            elif kind == ev.BATCH_DONE:
+                self._on_batch_done(**payload)
+            elif kind == ev.WORKER_FAIL:
+                self._on_worker_fail(**payload)
+            elif kind == ev.WORKER_JOIN:
+                self._on_worker_join(**payload)
+            else:  # pragma: no cover - no other kinds are ever pushed
+                raise RuntimeError(f"unknown event kind {kind!r}")
+
+        # flush replicas still in flight: their full duration is committed
+        # worker time (it will burn whether or not we simulate it), which
+        # keeps the invariant  ws(cancel on) + saved == ws(cancel off)
+        for worker in self.pool:
+            if worker.alive and worker.assignment is not None:
+                self._worker_seconds += worker.scheduled_end - worker.busy_since
+                worker.assignment = None
+                worker.scheduled_end = math.inf
+
+        # jobs that never completed (cluster died / event budget exhausted)
+        for jexec in list(self.active.values()):
+            job = jexec.job
+            self.records.append(
+                JobRecord(
+                    job_id=job.job_id,
+                    name=job.name,
+                    arrival=job.arrival,
+                    start=jexec.start,
+                    finish=math.inf,
+                    n_batches=jexec.n_batches,
+                    replication=jexec.replication,
+                )
+            )
+        for job in self.queue:
+            self.records.append(
+                JobRecord(
+                    job_id=job.job_id,
+                    name=job.name,
+                    arrival=job.arrival,
+                    start=math.inf,
+                    finish=math.inf,
+                    n_batches=0,
+                    replication=0,
+                )
+            )
+        self.records.sort(key=lambda r: r.job_id)
+
+        last_b = self.records[-1].n_batches if self.records else 0
+        return EngineReport(
+            records=self.records,
+            worker_seconds=self._worker_seconds,
+            cancelled_seconds_saved=self._saved_seconds,
+            n_events=n_events,
+            n_worker_failures=self._n_failures,
+            n_replicas_rescued=self._n_rescued,
+            n_replans=len(self.controller.history) if self.controller else 0,
+            final_n_batches=last_b,
+        )
+
+
+# --------------------------------------------------------------------------
+# conveniences: i.i.d. sampling and trace-driven workloads
+# --------------------------------------------------------------------------
+
+
+def sample_job_times(
+    dist: ServiceTime,
+    n_workers: int,
+    n_batches: int,
+    n_samples: int,
+    *,
+    seed: int = 0,
+    size_dependent: bool = True,
+    cancel_redundant: bool = False,
+    n_tasks: Optional[int] = None,
+) -> np.ndarray:
+    """i.i.d. job compute-time samples from the engine.
+
+    Runs one engine with ``n_samples`` identical jobs queued at t=0: under
+    whole-cluster FIFO scheduling they execute serially, so per-job compute
+    times are independent draws -- the engine-side analogue of
+    ``simulate_balanced``.
+    """
+    jobs = [
+        Job(job_id=i, dist=dist, n_tasks=n_tasks if n_tasks is not None else n_workers)
+        for i in range(n_samples)
+    ]
+    engine = ClusterEngine(
+        n_workers,
+        seed=seed,
+        n_batches=n_batches,
+        cancel_redundant=cancel_redundant,
+        size_dependent=size_dependent,
+    )
+    report = engine.run(jobs)
+    return report.compute_times
+
+
+def jobs_from_traces(
+    trace_jobs,
+    n_tasks: int,
+    arrival_rate: float,
+    seed: int = 0,
+) -> List[Job]:
+    """§VII trace jobs -> a Poisson-arrival workload for the engine.
+
+    Each :class:`~repro.core.traces.TraceJob` becomes one engine job whose
+    task service times resample the trace's empirical distribution.
+    """
+    rng = np.random.default_rng(seed)
+    t = 0.0
+    out: List[Job] = []
+    for i, tj in enumerate(trace_jobs):
+        t += float(rng.exponential(1.0 / arrival_rate))
+        out.append(
+            Job(
+                job_id=i,
+                dist=Empirical(samples=tuple(float(x) for x in tj.task_times)),
+                n_tasks=n_tasks,
+                arrival=t,
+                name=tj.name,
+            )
+        )
+    return out

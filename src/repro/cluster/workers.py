@@ -1,0 +1,107 @@
+"""Worker-side state: per-worker service draws, speeds, and churn processes.
+
+A worker executes one batch replica at a time.  Its service time for a batch
+of ``s`` tasks is ``s * tau / speed`` under the paper's §VI size-dependent
+model (``tau / speed`` under the §IV batch-level model), with ``tau`` drawn
+from the job's :class:`~repro.core.service_time.ServiceTime` distribution.
+Heterogeneous clusters set per-worker ``speed`` factors; time-varying
+stragglers are modeled by the fail/join churn process (a straggling worker is
+a worker that leaves and later rejoins).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..core.service_time import ServiceTime
+
+__all__ = ["Worker", "WorkerPool", "ChurnProcess", "draw_batch_time"]
+
+
+@dataclasses.dataclass
+class Worker:
+    """Mutable execution state for one worker."""
+
+    wid: int
+    speed: float = 1.0
+    alive: bool = True
+    # (job_id, batch) currently executing; None when idle
+    assignment: Optional[Tuple[int, int]] = None
+    # epoch is bumped on cancellation/failure; in-flight BATCH_DONE events
+    # carry the epoch they were scheduled under and are dropped on mismatch
+    epoch: int = 0
+    # churn_epoch tracks alive/dead transitions only -- WORKER_FAIL/JOIN
+    # events check it, so cancelling a replica (which bumps ``epoch``) does
+    # not invalidate the worker's pending failure event
+    churn_epoch: int = 0
+    busy_since: float = 0.0
+    scheduled_end: float = math.inf
+
+    @property
+    def free(self) -> bool:
+        return self.alive and self.assignment is None
+
+
+class WorkerPool:
+    """The cluster's worker set (possibly heterogeneous speeds)."""
+
+    def __init__(self, n_workers: int, speeds: Optional[Sequence[float]] = None):
+        if speeds is None:
+            speeds = [1.0] * n_workers
+        if len(speeds) != n_workers:
+            raise ValueError("speeds must have one entry per worker")
+        self.workers = [Worker(wid=i, speed=float(s)) for i, s in enumerate(speeds)]
+
+    def __getitem__(self, wid: int) -> Worker:
+        return self.workers[wid]
+
+    def __iter__(self):
+        return iter(self.workers)
+
+    def __len__(self) -> int:
+        return len(self.workers)
+
+    def free_workers(self) -> list:
+        return [w for w in self.workers if w.free]
+
+    def n_alive(self) -> int:
+        return sum(1 for w in self.workers if w.alive)
+
+
+@dataclasses.dataclass(frozen=True)
+class ChurnProcess:
+    """Fail/join dynamics: exponential failure hazard + exponential downtime.
+
+    ``fail_rate`` is the per-alive-worker failure rate; ``mean_downtime`` is
+    the mean time a failed worker stays away before rejoining (0 disables
+    rejoin: failures are permanent departures).
+    """
+
+    fail_rate: float = 0.0
+    mean_downtime: float = 0.0
+
+    def next_failure(self, rng: np.random.Generator) -> float:
+        if self.fail_rate <= 0.0:
+            return math.inf
+        return float(rng.exponential(1.0 / self.fail_rate))
+
+    def downtime(self, rng: np.random.Generator) -> float:
+        if self.mean_downtime <= 0.0:
+            return math.inf
+        return float(rng.exponential(self.mean_downtime))
+
+
+def draw_batch_time(
+    dist: ServiceTime,
+    rng: np.random.Generator,
+    batch_tasks: float,
+    speed: float,
+    size_dependent: bool,
+) -> float:
+    """One replica's wall-clock time for a batch of ``batch_tasks`` tasks."""
+    tau = float(np.asarray(dist.sample_np(rng, ())))
+    work = tau * batch_tasks if size_dependent else tau
+    return work / speed

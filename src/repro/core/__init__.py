@@ -8,6 +8,11 @@ Public surface:
   * simulator              -- vectorized Monte-Carlo job-time oracle
   * planner                -- RedundancyPlanner -> (B, r) for the runtime
   * traces                 -- Google-trace-like workload generator (§VII)
+
+Plans produced here are *executed* by ``repro.cluster``: an event-driven
+master-worker engine with queueing, replica cancellation, worker churn, and
+an online replanner that refits the service-time model from observed task
+times (``RedundancyPlanner.plan_cluster`` scores candidates on that engine).
 """
 from . import analysis, assignment, batching, coupon, simulator, traces
 from .planner import RedundancyPlan, RedundancyPlanner, fit_service_time

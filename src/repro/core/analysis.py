@@ -27,7 +27,7 @@ from typing import Iterable, List
 
 import numpy as np
 
-from .service_time import Empirical, Exponential, Pareto, ServiceTime, ShiftedExponential
+from .service_time import Exponential, Pareto, ServiceTime, ShiftedExponential
 
 # --------------------------------------------------------------------------
 # harmonic numbers

@@ -154,6 +154,47 @@ class RedundancyPlanner:
         dist = fit_service_time(samples)
         return self.plan(dist, objective=objective)
 
+    # -- engine path (candidates scored by the event-driven cluster engine) --
+
+    def plan_cluster(
+        self,
+        dist: ServiceTime,
+        objective: str = "mean",
+        n_reps: int = 400,
+        seed: int = 0,
+        blend: float = 0.5,
+        size_dependent: bool = True,
+        cancel_redundant: bool = False,
+    ) -> RedundancyPlan:
+        """Pick (B, r) by *executing* each candidate on ``repro.cluster``.
+
+        Unlike the closed-form/bootstrap paths, this scores candidates under
+        the engine's operational semantics (dispatch, earliest cover, and --
+        when enabled -- replica cancellation), so it extends to scenarios the
+        formulas do not cover.  Lazy import: core stays importable without
+        the cluster package loaded (cluster imports core).
+        """
+        from ..cluster.master import sample_job_times
+
+        means, covs = [], []
+        for i, b in enumerate(self.candidates):
+            t = sample_job_times(
+                dist,
+                self.n_workers,
+                b,
+                n_reps,
+                seed=seed + i,
+                size_dependent=size_dependent,
+                cancel_redundant=cancel_redundant,
+            )
+            t = t[np.isfinite(t)]
+            m = float(t.mean())
+            means.append(m)
+            covs.append(float(t.std() / m) if m > 0 else np.inf)
+        means, covs = np.array(means), np.array(covs)
+        b = self._select(means, covs, objective, blend)
+        return self._mk_plan(b, means, covs, objective, "cluster_engine")
+
     # -- helpers -------------------------------------------------------------
 
     def _select(self, means, covs, objective, blend) -> int:

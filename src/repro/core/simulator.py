@@ -107,6 +107,10 @@ def simulate_counts(
     counts = np.asarray(counts)
     n_batches = counts.shape[0]
     max_c = int(counts.max())
+    if max_c == 0:
+        # All batches hostless: the mask-based inf path below would sample a
+        # zero-width axis and jnp.min over it is undefined -- guard explicitly.
+        return np.full(n_samples, np.inf)
     scale = 1.0
     if size_dependent:
         if n_tasks is None:

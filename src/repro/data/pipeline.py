@@ -19,7 +19,7 @@ in a few hundred CPU steps -- used by the end-to-end example.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional
+from typing import Dict
 
 import numpy as np
 

@@ -1,0 +1,26 @@
+"""Version compatibility shims for the jax API surface the runtime uses.
+
+``shard_map`` moved from ``jax.experimental.shard_map`` to the top-level
+``jax.shard_map`` namespace, and its replication-check kwarg was renamed
+``check_rep`` -> ``check_vma``.  Normalize both so the repo runs on the
+container's pinned jax as well as current releases.
+"""
+from __future__ import annotations
+
+import inspect
+
+try:
+    from jax import shard_map as _shard_map
+except ImportError:  # jax < 0.5 keeps it in experimental
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+_HAS_CHECK_VMA = "check_vma" in inspect.signature(_shard_map).parameters
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    """jax.shard_map with the current-release signature on any jax version."""
+    kw = {"check_vma": check_vma} if _HAS_CHECK_VMA else {"check_rep": check_vma}
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw)
+
+
+__all__ = ["shard_map"]

@@ -1,0 +1,12 @@
+"""Pallas API compatibility across jax releases.
+
+``pltpu.TPUCompilerParams`` was renamed ``pltpu.CompilerParams``; import the
+alias from here so every kernel tracks the rename in one place.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
+__all__ = ["CompilerParams"]

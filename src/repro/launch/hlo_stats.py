@@ -20,7 +20,6 @@ All numbers are per-device (the partitioned module is the per-core program).
 from __future__ import annotations
 
 import dataclasses
-import json
 import math
 import re
 from typing import Dict, List, Optional, Tuple
@@ -151,13 +150,20 @@ def _operand_names(body: str) -> List[str]:
     m = _OPERANDS_RE.search(body[body.find("("):] if "(" in body else body)
     if not m:
         return []
-    names = []
-    for tok in m.group(1).split(","):
+    group = m.group(1)
+    # older HLO printers emit typed operands ("f32[4,8]{1,0} %arg.1"): the
+    # %-prefixed reference is unambiguous, and comma-splitting would break
+    # inside the shape brackets -- so prefer extracting the references
+    names = re.findall(r"%([\w\.\-]+)", group)
+    if names:
+        return names
+    for tok in group.split(","):
         tok = tok.strip()
-        if tok.startswith("%"):
-            names.append(tok[1:])
-        elif tok and not tok[0].isdigit():
-            names.append(tok.lstrip("%"))
+        if not tok:
+            continue
+        cand = tok.split()[-1]
+        if cand and not cand[0].isdigit():
+            names.append(cand)
     return names
 
 

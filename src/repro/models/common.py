@@ -1,9 +1,8 @@
 """Shared utilities for the pure-JAX model zoo (explicit pytree params)."""
 from __future__ import annotations
 
-import dataclasses
 import math
-from typing import Any, Callable, Dict
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

@@ -181,7 +181,7 @@ def flash_attention(
                "batch", "model", None, None, None)
 
     def body(carry, i):
-        m, l, o = carry
+        m, lsum, o = carry
         kblk = jax.lax.dynamic_slice_in_dim(k, i * bk, bk, axis=1)
         vblk = jax.lax.dynamic_slice_in_dim(v, i * bk, bk, axis=1)
         posblk = jax.lax.dynamic_slice_in_dim(kv_positions, i * bk, bk, axis=1)
@@ -200,7 +200,7 @@ def flash_attention(
         m_new = jnp.maximum(m, s.max(axis=-1))
         alpha = jnp.exp(m - m_new)
         p = jnp.exp(s - m_new[..., None])
-        l_new = l * alpha + p.sum(axis=-1)
+        l_new = lsum * alpha + p.sum(axis=-1)
         pv = jnp.einsum("bkgqs,bskd->bkgqd", p, vblk, preferred_element_type=jnp.float32)
         o_new = o * alpha[..., None] + pv
         m_new = shard(m_new, "batch", "model", None, None)
@@ -208,8 +208,8 @@ def flash_attention(
         o_new = shard(o_new, "batch", "model", None, None, None)
         return (m_new, l_new, o_new), None
 
-    (m, l, o), _ = jax.lax.scan(body, (m0, l0, o0), jnp.arange(nb))
-    o = o / jnp.maximum(l[..., None], 1e-30)
+    (m, lsum, o), _ = jax.lax.scan(body, (m0, l0, o0), jnp.arange(nb))
+    o = o / jnp.maximum(lsum[..., None], 1e-30)
     o = jnp.moveaxis(o, 3, 1).reshape(b, sq, h, hd)  # (B,K,G,Sq,hd)->(B,Sq,H,hd)
     return o.astype(q.dtype)
 

@@ -16,8 +16,6 @@ so the KV cache is bounded and the ``long_500k`` decode shape is O(window).
 """
 from __future__ import annotations
 
-from typing import Tuple
-
 import jax
 import jax.numpy as jnp
 

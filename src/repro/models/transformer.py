@@ -14,7 +14,6 @@ GQA.
 from __future__ import annotations
 
 import dataclasses
-import functools
 import math
 from typing import Any, Dict, Optional, Tuple
 
@@ -24,6 +23,7 @@ import jax.numpy as jnp
 
 from ..configs.base import ArchConfig
 from ..distributed.axes import shard
+from ..distributed.compat import shard_map
 from .common import cast_for_compute, cross_entropy_loss, dense_init
 from .layers import (
     apply_mrope,
@@ -253,9 +253,9 @@ def _seq_sharded_decode(
         s = jnp.where(valid[None, None, None, None, :], s, float(jnp.finfo(jnp.float32).min / 2))
         m = s.max(axis=-1)
         p = jnp.exp(s - m[..., None])
-        l = p.sum(axis=-1)
+        lsum = p.sum(axis=-1)
         acc = jnp.einsum("bkgqs,bskd->bkgqd", p, cv, preferred_element_type=jnp.float32)
-        return m, l, acc
+        return m, lsum, acc
 
     def _write(ck, cv, pos, kn, vn, slot_local, active):
         cur_k = jax.lax.dynamic_slice_in_dim(ck, slot_local, 1, 1)
@@ -278,8 +278,8 @@ def _seq_sharded_decode(
             cache["ks"], cache["vs"], cache["poss"], k_new, v_new, t % w_total, True
         )
         qg = q.reshape(b, 1, k_true, gp, hd)
-        m, l, acc = _attend(qg, ck, cv, pos, t)
-        o = acc / jnp.maximum(l[..., None], 1e-30)
+        m, lsum, acc = _attend(qg, ck, cv, pos, t)
+        o = acc / jnp.maximum(lsum[..., None], 1e-30)
         o = o.reshape(b, 1, h_pad, hd).astype(q.dtype)
         return o, {"ks": ck, "vs": cv, "poss": pos}
 
@@ -297,18 +297,18 @@ def _seq_sharded_decode(
         slot_local = jnp.clip(slot - lo, 0, wl - 1)
         ck, cv, pos = _write(ck, cv, pos, kn_l, vn_l, slot_local, active)
         qg = q_l.reshape(q_l.shape[0], 1, k_true, gp, hd)
-        m, l, acc = _attend(qg, ck, cv, pos, t)
+        m, lsum, acc = _attend(qg, ck, cv, pos, t)
         # flash combine across seq shards
         m_g = jax.lax.pmax(m, ax)
         alpha = jnp.exp(m - m_g)
-        l_g = jax.lax.psum(l * alpha, ax)
+        l_g = jax.lax.psum(lsum * alpha, ax)
         o = jax.lax.psum(acc * alpha[..., None], ax) / jnp.maximum(l_g[..., None], 1e-30)
         o = o.reshape(q_l.shape[0], 1, h_pad, hd).astype(q_l.dtype)
         return o, ck, cv, pos
 
     rep = P(bt, None, None, None)
     seq = P(bt, ax, None, None)
-    o, ck, cv, pos = jax.shard_map(
+    o, ck, cv, pos = shard_map(
         body,
         mesh=ctx.mesh,
         in_specs=(rep, rep, rep, seq, seq, P(ax)),

@@ -37,7 +37,9 @@ class AdamW:
     decay_min_ndim: int = 2
 
     def init(self, params) -> OptState:
-        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        def zeros(p):
+            return jnp.zeros(p.shape, jnp.float32)
+
         return OptState(
             count=jnp.zeros((), jnp.int32),
             m=jax.tree.map(zeros, params),

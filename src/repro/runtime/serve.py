@@ -5,7 +5,7 @@ token against a KV cache of ``seq_len`` (NOT a train_step).
 """
 from __future__ import annotations
 
-from typing import Callable, Tuple
+from typing import Callable
 
 import jax
 import jax.numpy as jnp

@@ -1,11 +1,11 @@
 """Train-step construction: value_and_grad + AdamW over a sharded mesh."""
 from __future__ import annotations
 
-from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+from typing import Any, Callable, Dict, NamedTuple
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh
 
 from ..distributed import sharding
 from ..distributed.axes import logical_axes

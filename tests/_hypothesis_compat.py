@@ -1,0 +1,106 @@
+"""Seeded stand-in for hypothesis so the suite collects without the test extra.
+
+CI installs ``.[test]`` and runs the real hypothesis engine.  In environments
+without it (the tier-1 container), the property tests still run: each ``@given``
+test is executed against ``max_examples`` pseudo-random draws from a fixed seed.
+No shrinking, no database -- just deterministic example generation covering the
+same strategy surface the tests use (integers, floats, lists, tuples, just,
+sampled_from, permutations, flatmap).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+_FALLBACK_SEED = 20_200_603  # arXiv:2006.02318's submission date
+_DEFAULT_MAX_EXAMPLES = 20
+
+
+class Strategy:
+    """A value generator: ``draw(rng) -> value``, composable via flatmap."""
+
+    def __init__(self, draw):
+        self._draw = draw
+
+    def draw(self, rng: np.random.Generator):
+        return self._draw(rng)
+
+    def flatmap(self, fn) -> "Strategy":
+        return Strategy(lambda rng: fn(self._draw(rng)).draw(rng))
+
+    def map(self, fn) -> "Strategy":
+        return Strategy(lambda rng: fn(self._draw(rng)))
+
+
+class _Strategies:
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> Strategy:
+        return Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+    @staticmethod
+    def floats(min_value: float, max_value: float) -> Strategy:
+        return Strategy(lambda rng: float(rng.uniform(min_value, max_value)))
+
+    @staticmethod
+    def sampled_from(elements) -> Strategy:
+        pool = list(elements)
+        return Strategy(lambda rng: pool[int(rng.integers(len(pool)))])
+
+    @staticmethod
+    def just(value) -> Strategy:
+        return Strategy(lambda rng: value)
+
+    @staticmethod
+    def booleans() -> Strategy:
+        return Strategy(lambda rng: bool(rng.integers(2)))
+
+    @staticmethod
+    def lists(elements: Strategy, min_size: int = 0, max_size: int = 10) -> Strategy:
+        def draw(rng):
+            size = int(rng.integers(min_size, max_size + 1))
+            return [elements.draw(rng) for _ in range(size)]
+
+        return Strategy(draw)
+
+    @staticmethod
+    def tuples(*strategies: Strategy) -> Strategy:
+        return Strategy(lambda rng: tuple(s.draw(rng) for s in strategies))
+
+    @staticmethod
+    def permutations(values) -> Strategy:
+        pool = list(values)
+        return Strategy(lambda rng: [pool[i] for i in rng.permutation(len(pool))])
+
+
+st = _Strategies()
+
+
+def given(*arg_strategies: Strategy, **kwarg_strategies: Strategy):
+    """Run the test once per generated example (no shrinking)."""
+
+    def decorate(fn):
+        def wrapper():
+            rng = np.random.default_rng(_FALLBACK_SEED)
+            n = getattr(wrapper, "_max_examples", _DEFAULT_MAX_EXAMPLES)
+            for _ in range(n):
+                args = [s.draw(rng) for s in arg_strategies]
+                kwargs = {k: s.draw(rng) for k, s in kwarg_strategies.items()}
+                fn(*args, **kwargs)
+
+        # keep pytest's view of the signature parameterless (no fixtures), so
+        # no functools.wraps here -- copy identity attributes by hand
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        return wrapper
+
+    return decorate
+
+
+def settings(max_examples: int = _DEFAULT_MAX_EXAMPLES, deadline=None, **_ignored):
+    """Record max_examples on the (already @given-wrapped) test function."""
+
+    def decorate(fn):
+        fn._max_examples = max_examples
+        return fn
+
+    return decorate

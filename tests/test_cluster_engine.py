@@ -1,0 +1,259 @@
+"""Cluster engine: determinism, simulator equivalence, cancellation, replanning."""
+import jax
+import numpy as np
+import pytest
+
+from repro.cluster import (
+    ChurnProcess,
+    ClusterEngine,
+    Job,
+    OnlineReplanner,
+    jobs_from_traces,
+    sample_job_times,
+)
+from repro.core import analysis, simulator, traces
+from repro.core.planner import RedundancyPlanner
+from repro.core.service_time import Exponential, Pareto, ShiftedExponential
+
+# --------------------------------------------------------------------------
+# determinism
+# --------------------------------------------------------------------------
+
+
+def test_deterministic_under_fixed_seed():
+    a = sample_job_times(Exponential(1.0), 6, 3, 80, seed=7)
+    b = sample_job_times(Exponential(1.0), 6, 3, 80, seed=7)
+    c = sample_job_times(Exponential(1.0), 6, 3, 80, seed=8)
+    assert np.array_equal(a, b)
+    assert not np.array_equal(a, c)
+    assert np.isfinite(a).all()
+
+
+def test_full_report_replays_exactly():
+    jobs = [Job(job_id=i, dist=Pareto(1.0, 2.2), n_tasks=8) for i in range(40)]
+    churn = ChurnProcess(fail_rate=0.05, mean_downtime=1.0)
+    r1 = ClusterEngine(8, seed=11, n_batches=4, cancel_redundant=True, churn=churn).run(jobs)
+    r2 = ClusterEngine(8, seed=11, n_batches=4, cancel_redundant=True, churn=churn).run(jobs)
+    assert np.array_equal(r1.compute_times, r2.compute_times)
+    assert r1.worker_seconds == r2.worker_seconds
+    assert r1.n_worker_failures == r2.n_worker_failures
+
+
+# --------------------------------------------------------------------------
+# equivalence with the vectorized Monte-Carlo oracle
+# --------------------------------------------------------------------------
+
+
+def _assert_stats_agree(t_engine: np.ndarray, t_sim: np.ndarray):
+    """Mean and p95 must agree within 3 sigma of Monte-Carlo error."""
+    se_mean = np.sqrt(t_engine.var() / t_engine.size + t_sim.var() / t_sim.size)
+    assert abs(t_engine.mean() - t_sim.mean()) < 3.0 * se_mean, (
+        t_engine.mean(),
+        t_sim.mean(),
+        se_mean,
+    )
+    # bootstrap standard error of the engine's p95
+    rng = np.random.default_rng(0)
+    boots = [
+        np.percentile(rng.choice(t_engine, size=t_engine.size, replace=True), 95)
+        for _ in range(200)
+    ]
+    se_p95 = float(np.std(boots)) + 1e-9
+    assert abs(np.percentile(t_engine, 95) - np.percentile(t_sim, 95)) < 3.0 * se_p95
+
+
+def test_engine_matches_simulate_balanced_exponential():
+    dist = Exponential(mu=1.0)
+    t_e = sample_job_times(dist, 8, 4, 4000, seed=1)
+    t_s = np.asarray(simulator.simulate_balanced(jax.random.key(0), dist, 8, 4, 200_000))
+    _assert_stats_agree(t_e, t_s)
+
+
+def test_engine_matches_simulate_balanced_sexp():
+    dist = ShiftedExponential(delta=0.5, mu=2.0)
+    t_e = sample_job_times(dist, 12, 3, 4000, seed=2)
+    t_s = np.asarray(simulator.simulate_balanced(jax.random.key(1), dist, 12, 3, 200_000))
+    _assert_stats_agree(t_e, t_s)
+
+
+def test_engine_matches_simulate_membership_batch_model():
+    """§IV batch-level model (size_dependent=False) vs the membership path."""
+    import repro.core.batching as batching
+
+    n, b = 6, 3
+    dist = Exponential(mu=1.0)
+    t_e = sample_job_times(dist, n, b, 4000, seed=3, size_dependent=False)
+    m = batching.non_overlapping(n, b)
+    t_s = np.asarray(
+        simulator.simulate_membership(jax.random.key(2), dist, m, 200_000, size_dependent=False)
+    )
+    _assert_stats_agree(t_e, t_s)
+
+
+# --------------------------------------------------------------------------
+# cancellation
+# --------------------------------------------------------------------------
+
+
+def test_cancellation_reduces_worker_seconds():
+    jobs = [Job(job_id=i, dist=Pareto(1.0, 2.0), n_tasks=8) for i in range(150)]
+    on = ClusterEngine(8, seed=3, n_batches=2, cancel_redundant=True).run(jobs)
+    off = ClusterEngine(8, seed=3, n_batches=2, cancel_redundant=False).run(jobs)
+    # same seed => same service draws => identical job compute times ...
+    assert np.allclose(on.compute_times, off.compute_times)
+    # ... but cancellation reclaims the redundant replicas' tails
+    assert on.worker_seconds < off.worker_seconds
+    assert on.cancelled_seconds_saved > 0.0
+    committed = on.worker_seconds + on.cancelled_seconds_saved
+    assert np.isclose(committed, off.worker_seconds, rtol=1e-9)
+    # stragglers of job k delay job k+1's gang dispatch unless cancelled
+    assert (on.response_times <= off.response_times + 1e-9).all()
+    assert on.response_times.mean() < off.response_times.mean()
+
+
+# --------------------------------------------------------------------------
+# churn
+# --------------------------------------------------------------------------
+
+
+def test_churn_jobs_still_complete():
+    jobs = [Job(job_id=i, dist=Pareto(1.0, 2.0), n_tasks=8) for i in range(60)]
+    churn = ChurnProcess(fail_rate=0.05, mean_downtime=1.0)
+    rep = ClusterEngine(8, seed=5, n_batches=2, churn=churn).run(jobs)
+    assert rep.n_worker_failures > 0
+    assert np.isfinite(rep.compute_times).all()
+
+
+def test_cancellation_does_not_disable_churn():
+    """Regression: cancelling a replica bumps the worker's assignment epoch;
+    that must NOT invalidate its pending WORKER_FAIL event (churn staleness
+    is tracked separately), or cancelled-from workers become immortal."""
+    jobs = [Job(job_id=i, dist=Pareto(1.0, 2.0), n_tasks=8) for i in range(300)]
+    churn = ChurnProcess(fail_rate=0.05, mean_downtime=1.0)
+    on = ClusterEngine(8, seed=7, n_batches=2, cancel_redundant=True, churn=churn).run(jobs)
+    off = ClusterEngine(8, seed=7, n_batches=2, cancel_redundant=False, churn=churn).run(jobs)
+    assert on.n_worker_failures > 50
+    # same churn process, same seed: failure counts are the same order
+    assert on.n_worker_failures > off.n_worker_failures * 0.2
+
+
+def test_replica_rescue_on_total_batch_loss():
+    """Replication r=1 means any failure kills a batch's only replica; the
+    master must rescue it on a freed/joined worker for the job to finish."""
+    jobs = [Job(job_id=i, dist=ShiftedExponential(1.0, 0.5), n_tasks=8) for i in range(40)]
+    churn = ChurnProcess(fail_rate=0.08, mean_downtime=0.5)
+    rep = ClusterEngine(8, seed=13, n_batches=8, churn=churn).run(jobs)
+    assert rep.n_worker_failures > 0
+    assert rep.n_replicas_rescued > 0
+    assert np.isfinite(rep.compute_times).all()
+
+
+# --------------------------------------------------------------------------
+# queueing
+# --------------------------------------------------------------------------
+
+
+def test_fifo_queueing_serializes_jobs():
+    jobs = [Job(job_id=i, dist=Exponential(1.0), n_tasks=8, arrival=0.0) for i in range(10)]
+    rep = ClusterEngine(8, seed=1, n_batches=4).run(jobs)
+    starts = np.array([r.start for r in rep.records])
+    finishes = np.array([r.finish for r in rep.records])
+    # FIFO whole-cluster gang scheduling: job k+1 starts after job k finishes
+    assert (np.diff(starts) >= -1e-9).all()
+    assert (starts[1:] >= finishes[:-1] - 1e-9).all()
+    # queueing delay accumulates
+    waits = np.array([r.queue_wait for r in rep.records])
+    assert waits[-1] > waits[0]
+
+
+def test_trace_workload_arrivals():
+    tj = traces.synthetic_google_jobs()[:4]
+    jobs = jobs_from_traces(tj, n_tasks=10, arrival_rate=0.01, seed=0)
+    assert [j.arrival for j in jobs] == sorted(j.arrival for j in jobs)
+    rep = ClusterEngine(10, seed=1, n_batches=5).run(jobs)
+    assert np.isfinite(rep.response_times).all()
+    assert {r.name for r in rep.records} == {j.name for j in tj}
+
+
+# --------------------------------------------------------------------------
+# online replanning
+# --------------------------------------------------------------------------
+
+
+def test_replanning_converges_to_closed_form_optimum():
+    """Exponential workload: the replanner must land on the closed-form
+    optimal B (Thm 3: E[T] = H_B / mu, minimized at full diversity B=1)."""
+    n = 8
+    dist = Exponential(mu=1.0)
+    controller = OnlineReplanner(n, window=512, refit_every=64, min_observations=64)
+    # start deliberately wrong: full parallelism
+    engine = ClusterEngine(n, seed=9, n_batches=n, controller=controller)
+    jobs = [Job(job_id=i, dist=dist, n_tasks=n) for i in range(80)]
+    rep = engine.run(jobs)
+    b_star = analysis.argmin_B(dist, n, metric="mean")
+    assert rep.n_replans >= 1
+    assert controller.current is not None
+    assert controller.current.n_batches == b_star == 1
+    # the final dispatched jobs actually ran under the replanned B
+    assert rep.records[-1].n_batches == b_star
+
+
+def test_replanner_corrects_cancellation_censoring():
+    """With cancellation only batch winners are observed (min of r draws);
+    the replanner must undo that censoring, or it fits a tail r times
+    lighter than reality and under-replicates."""
+    rng = np.random.default_rng(0)
+    true = Pareto(1.0, 2.0)
+    r = 4
+    winners = true.sample_np(rng, (600, r)).min(axis=1)  # ~ Pareto(1, 8)
+    ctl = OnlineReplanner(12, window=600, refit_every=1, min_observations=1)
+    ctl.observe_many(winners, n_competitors=r)
+    plan = ctl.replan()
+    assert isinstance(ctl.last_fit, Pareto)
+    assert ctl.last_fit.alpha == pytest.approx(true.alpha, rel=0.25)
+    ref = RedundancyPlanner(12).plan(true, objective="mean")
+    assert plan.n_batches == ref.n_batches
+
+
+def test_engine_tags_censored_observations():
+    ctl = OnlineReplanner(8, refit_every=10**9, min_observations=10**9)
+    jobs = [Job(job_id=i, dist=Exponential(1.0), n_tasks=8) for i in range(20)]
+    ClusterEngine(8, seed=1, n_batches=2, cancel_redundant=True, controller=ctl).run(jobs)
+    # B=2 over 8 workers => each winner raced r=4 replicas
+    assert {c for _, c in ctl.observations} == {4}
+    ctl2 = OnlineReplanner(8, refit_every=10**9, min_observations=10**9)
+    jobs2 = [Job(job_id=i, dist=Exponential(1.0), n_tasks=8) for i in range(20)]
+    ClusterEngine(8, seed=1, n_batches=2, cancel_redundant=False, controller=ctl2).run(jobs2)
+    # without cancellation every replica completes: observations are unbiased
+    assert {c for _, c in ctl2.observations} == {1}
+
+
+def test_engine_run_is_single_shot():
+    engine = ClusterEngine(4, seed=0, n_batches=2)
+    engine.run([Job(job_id=0, dist=Exponential(1.0), n_tasks=4)])
+    with pytest.raises(RuntimeError, match="single-shot"):
+        engine.run([Job(job_id=1, dist=Exponential(1.0), n_tasks=4)])
+
+
+def test_plan_cluster_agrees_with_closed_form():
+    planner = RedundancyPlanner(8)
+    plan = planner.plan_cluster(Exponential(1.0), n_reps=300, seed=0)
+    assert plan.source == "cluster_engine"
+    assert plan.n_batches == analysis.argmin_B(Exponential(1.0), 8, metric="mean")
+    # frontier means track the closed form within MC noise
+    for b, m in zip(plan.frontier_B, plan.frontier_mean):
+        assert abs(m - analysis.mean_T(Exponential(1.0), 8, b)) < 0.35, (b, m)
+
+
+# --------------------------------------------------------------------------
+# heterogeneous workers
+# --------------------------------------------------------------------------
+
+
+def test_faster_workers_speed_up_jobs():
+    slow = sample_job_times(Exponential(1.0), 6, 3, 500, seed=4)
+    fast_engine = ClusterEngine(6, seed=4, n_batches=3, speeds=[4.0] * 6)
+    fast_jobs = [Job(job_id=i, dist=Exponential(1.0), n_tasks=6) for i in range(500)]
+    fast = fast_engine.run(fast_jobs).compute_times
+    # speed 4 workers finish the same draws 4x faster (same seed, same stream)
+    assert np.allclose(fast * 4.0, slow)

@@ -2,8 +2,12 @@
 import jax
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ModuleNotFoundError:  # test extra not installed: seeded fallback engine
+    from _hypothesis_compat import given, settings, st
 
 from repro.core import analysis, assignment, batching, coupon, simulator
 from repro.core.service_time import Exponential, ShiftedExponential

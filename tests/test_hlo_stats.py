@@ -1,7 +1,6 @@
 """Loop-aware HLO analysis: verified against known programs."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.launch import hlo_stats

@@ -7,8 +7,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ModuleNotFoundError:  # test extra not installed: seeded fallback engine
+    from _hypothesis_compat import given, settings, st
 
 from repro.kernels.flash_attention import flash_attention_fwd
 from repro.kernels.ref import flash_attention_ref, rms_norm_ref

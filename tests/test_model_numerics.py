@@ -14,7 +14,7 @@ from repro.models.layers import (
 )
 from repro.models.moe import init_moe, moe_ffn, moe_ffn_reference
 from repro.models.rglru import init_rglru_block, rglru_reference, rglru_scan, rglru_step
-from repro.models.ssm import SSMDims, init_ssm_layer, ssd_chunked, ssd_reference
+from repro.models.ssm import ssd_chunked, ssd_reference
 from repro.models.transformer import HeadLayout
 
 

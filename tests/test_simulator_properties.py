@@ -2,8 +2,12 @@
 import jax
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ModuleNotFoundError:  # test extra not installed: seeded fallback engine
+    from _hypothesis_compat import given, settings, st
 
 from repro.core import analysis, simulator
 from repro.core.service_time import Exponential, Pareto, ShiftedExponential, min_of
@@ -64,6 +68,23 @@ def test_coverage_failure_yields_inf(seed):
         assert np.isinf(t).all()
     else:
         assert np.isfinite(t).all()
+
+
+def test_all_zero_counts_returns_inf():
+    """Regression: an all-zero counts vector used to sample a zero-width axis
+    (max_c = 0) and crash in jnp.min; it must mean 'no batch is hosted' =>
+    every sample is an incomplete job (inf)."""
+    t = simulator.simulate_counts(jax.random.key(0), Exponential(1.0), np.zeros(4, int), 100)
+    assert t.shape == (100,)
+    assert np.isinf(t).all()
+
+
+def test_partial_zero_counts_still_inf():
+    """Mixed vector: any zero-host batch makes the whole job incomplete."""
+    t = simulator.simulate_counts(
+        jax.random.key(1), Exponential(1.0), np.array([3, 0, 2]), 500
+    )
+    assert np.isinf(t).all()
 
 
 def test_balanced_beats_unbalanced_montecarlo():

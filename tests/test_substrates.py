@@ -8,7 +8,7 @@ from repro.checkpoint import CheckpointManager
 from repro.core.service_time import Exponential, Pareto, ShiftedExponential
 from repro.data import PipelineConfig, SyntheticLM
 from repro.distributed import rdp
-from repro.optim import AdamW, apply_updates, cosine_with_warmup, global_norm
+from repro.optim import AdamW, apply_updates, cosine_with_warmup
 
 
 # ------------------------------------------------------------------ optimizer
