@@ -1,0 +1,99 @@
+"""Bench-regression gate: compare a smoke-bench JSON against the baseline.
+
+CI runs ``cluster_bench.py --smoke`` on every PR and then gates the result
+against the committed ``BENCH_cluster.json`` (same smoke config, same seed,
+so the Monte-Carlo sections replay near-identically; only wall-clock numbers
+vary with the runner).  Two properties are load-bearing and fail the build:
+
+  1. the vectorized jax backend keeps its wall-clock edge over the Python
+     event engine on a full-frontier ``plan_cluster`` sweep
+     (``backend.min_speedup_warm`` stays above an absolute floor -- machine
+     speeds vary, ratios of times on the same machine much less), and
+  2. planned redundancy keeps its heavy-tail speedup
+     (``redundancy._summary.max_heavy_speedup`` does not regress beyond a
+     fractional tolerance of the baseline).
+
+Floors are env-overridable so a one-off noisy runner can be diagnosed
+without editing the workflow:
+
+  BENCH_MIN_JAX_SPEEDUP   absolute floor on backend.min_speedup_warm (10)
+  BENCH_HEAVY_TOLERANCE   fraction of baseline heavy speedup to keep (0.5)
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import pathlib
+import sys
+
+DEFAULT_MIN_JAX_SPEEDUP = 10.0
+DEFAULT_HEAVY_TOLERANCE = 0.5
+
+
+def check(current: dict, baseline: dict, min_jax_speedup: float, heavy_tolerance: float) -> list:
+    """Return a list of human-readable failure strings (empty = gate passes)."""
+    failures = []
+
+    cur_edge = current["backend"]["min_speedup_warm"]
+    base_edge = baseline["backend"]["min_speedup_warm"]
+    if cur_edge < min_jax_speedup:
+        failures.append(
+            f"jax backend lost its speed edge: min_speedup_warm {cur_edge:.1f}x "
+            f"< floor {min_jax_speedup:.1f}x (baseline recorded {base_edge:.1f}x)"
+        )
+
+    cur_heavy = current["redundancy"]["_summary"]["max_heavy_speedup"]
+    base_heavy = baseline["redundancy"]["_summary"]["max_heavy_speedup"]
+    if cur_heavy is None or base_heavy is None:
+        failures.append("heavy-tail speedup missing from current or baseline redundancy summary")
+    elif cur_heavy < heavy_tolerance * base_heavy:
+        failures.append(
+            f"heavy-tail redundancy speedup regressed: {cur_heavy:.2f}x "
+            f"< {heavy_tolerance:.2f} * baseline {base_heavy:.2f}x"
+        )
+
+    return failures
+
+
+def _fmt(v) -> str:
+    return f"{v:.2f}x" if v is not None else "missing"
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("current", type=pathlib.Path, help="freshly produced smoke-bench JSON")
+    ap.add_argument("baseline", type=pathlib.Path, help="committed BENCH_cluster.json baseline")
+    args = ap.parse_args()
+
+    current = json.loads(args.current.read_text())
+    baseline = json.loads(args.baseline.read_text())
+    min_jax_speedup = float(os.environ.get("BENCH_MIN_JAX_SPEEDUP", DEFAULT_MIN_JAX_SPEEDUP))
+    heavy_tolerance = float(os.environ.get("BENCH_HEAVY_TOLERANCE", DEFAULT_HEAVY_TOLERANCE))
+
+    failures = check(current, baseline, min_jax_speedup, heavy_tolerance)
+
+    cur_b, base_b = current["backend"], baseline["backend"]
+    print(
+        f"jax frontier sweep edge: {cur_b['min_speedup_warm']:.1f}x"
+        f"..{cur_b['max_speedup_warm']:.1f}x "
+        f"(baseline {base_b['min_speedup_warm']:.1f}x..{base_b['max_speedup_warm']:.1f}x, "
+        f"floor {min_jax_speedup:.1f}x)"
+    )
+    cur_heavy = current["redundancy"]["_summary"]["max_heavy_speedup"]
+    base_heavy = baseline["redundancy"]["_summary"]["max_heavy_speedup"]
+    print(
+        f"heavy-tail redundancy speedup: {_fmt(cur_heavy)} "
+        f"(baseline {_fmt(base_heavy)}, tolerance {heavy_tolerance:.2f})"
+    )
+
+    if failures:
+        for f in failures:
+            print(f"REGRESSION: {f}", file=sys.stderr)
+        return 1
+    print("bench regression gate: OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

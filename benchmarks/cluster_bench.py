@@ -1,6 +1,6 @@
 """Cluster-engine benchmark: §VII dynamics the closed forms cannot express.
 
-Four scenarios on the synthetic Google-trace jobs (and parametric tails):
+Five scenarios on the synthetic Google-trace jobs (and parametric tails):
 
   * ``redundancy``   -- per trace job, engine mean compute time at B = N (no
     redundancy) vs the planned B*: reproduces the §VII observation that
@@ -12,9 +12,17 @@ Four scenarios on the synthetic Google-trace jobs (and parametric tails):
     seconds reclaimed, response-time delta.
   * ``churn``        -- worker fail/join churn on/off: failures, rescues,
     compute-time delta.
+  * ``backend``      -- wall-clock of a full-frontier ``plan_cluster`` sweep
+    on the Python event engine vs the vectorized jax backend
+    (``repro.cluster.vectorized``): the speedup that makes thousand-candidate
+    sweeps and per-window replanning affordable.  The CI regression gate
+    (``benchmarks/check_bench_regression.py``) consumes this section.
 
 ``--smoke`` shrinks every sample count so the whole file runs in seconds --
-CI executes it on every PR and uploads the JSON artifact.
+CI executes it on every PR, gates on the JSON against the committed
+``BENCH_cluster.json`` baseline, and uploads the artifact.  ``--backend``
+selects which engine scores the ``redundancy`` scenario (the nightly job
+runs ``--backend both``).
 """
 from __future__ import annotations
 
@@ -24,6 +32,7 @@ import pathlib
 import sys
 import time
 
+import jax
 import numpy as np
 
 sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
@@ -31,18 +40,32 @@ sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
 from repro.cluster import ChurnProcess, ClusterEngine, Job, jobs_from_traces, sample_job_times
 from repro.core import traces
 from repro.core.planner import RedundancyPlanner
-from repro.core.service_time import Empirical, Pareto
+from repro.core.service_time import Empirical, Exponential, Pareto
 
 ART = pathlib.Path(__file__).resolve().parent / "artifacts" / "cluster"
 
 
 def _cfg(smoke: bool) -> dict:
     if smoke:
-        return {"n_workers": 10, "n_reps": 60, "n_jobs": 6, "trace_jobs": 4}
-    return {"n_workers": 20, "n_reps": 400, "n_jobs": 24, "trace_jobs": 10}
+        return {
+            "n_workers": 10,
+            "n_reps": 60,
+            "n_jobs": 6,
+            "trace_jobs": 4,
+            "backend_workers": 24,
+            "backend_reps": 800,
+        }
+    return {
+        "n_workers": 20,
+        "n_reps": 400,
+        "n_jobs": 24,
+        "trace_jobs": 10,
+        "backend_workers": 36,
+        "backend_reps": 1000,
+    }
 
 
-def bench_redundancy(cfg: dict, seed: int = 0) -> dict:
+def bench_redundancy(cfg: dict, seed: int = 0, backend: str = "python") -> dict:
     """Engine-measured speedup of planned redundancy vs no redundancy."""
     n = cfg["n_workers"]
     jobs = traces.synthetic_google_jobs()
@@ -57,8 +80,10 @@ def bench_redundancy(cfg: dict, seed: int = 0) -> dict:
     for i, tj in enumerate(jobs):
         dist = Empirical(samples=tuple(float(x) for x in tj.task_times))
         plan = planner.plan_empirical(tj.task_times, "mean", n_mc=4 * cfg["n_reps"], seed=seed)
-        t_base = sample_job_times(dist, n, n, cfg["n_reps"], seed=seed + i)
-        t_plan = sample_job_times(dist, n, plan.n_batches, cfg["n_reps"], seed=seed + i)
+        t_base = sample_job_times(dist, n, n, cfg["n_reps"], seed=seed + i, backend=backend)
+        t_plan = sample_job_times(
+            dist, n, plan.n_batches, cfg["n_reps"], seed=seed + i, backend=backend
+        )
         out[tj.name] = {
             "family": tj.family,
             "B_star": plan.n_batches,
@@ -143,6 +168,45 @@ def bench_churn(cfg: dict, seed: int = 0) -> dict:
     return out
 
 
+def bench_backend(cfg: dict, seed: int = 0) -> dict:
+    """Full-frontier ``plan_cluster`` sweep: Python event engine vs jax.
+
+    Wall-clock for scoring every feasible B of ``backend_workers`` workers
+    with ``backend_reps`` Monte-Carlo reps each.  The jax backend is timed
+    warm (one untimed call first, reported as ``jax_seconds_cold``): the
+    compile amortizes across every subsequent sweep of the same shape, which
+    is exactly how ``plan_sweep`` / the online replanner use it.
+    """
+    n, reps = cfg["backend_workers"], cfg["backend_reps"]
+    out = {"n_workers": n, "n_reps": reps, "dists": {}}
+    for name, dist in [("exponential", Exponential(1.0)), ("pareto_heavy", Pareto(1.0, 1.8))]:
+        planner = RedundancyPlanner(n)
+        jax.clear_caches()  # same frontier shapes across dists: force a real compile
+        t0 = time.time()
+        planner.plan_cluster(dist, n_reps=reps, seed=seed, backend="jax")
+        cold = time.time() - t0
+        t0 = time.time()
+        plan_jax = planner.plan_cluster(dist, n_reps=reps, seed=seed, backend="jax")
+        t_jax = time.time() - t0
+        t0 = time.time()
+        plan_py = planner.plan_cluster(dist, n_reps=reps, seed=seed, backend="python")
+        t_py = time.time() - t0
+        out["dists"][name] = {
+            "frontier_size": len(planner.candidates),
+            "python_seconds": t_py,
+            "jax_seconds_warm": t_jax,
+            "jax_seconds_cold": cold,
+            "speedup_warm": t_py / max(t_jax, 1e-9),
+            "speedup_cold": t_py / max(cold, 1e-9),
+            "B_python": plan_py.n_batches,
+            "B_jax": plan_jax.n_batches,
+        }
+    speedups = [d["speedup_warm"] for d in out["dists"].values()]
+    out["min_speedup_warm"] = min(speedups)
+    out["max_speedup_warm"] = max(speedups)
+    return out
+
+
 def run_all(smoke: bool = True, seed: int = 0) -> list:
     """CSV rows for the benchmark aggregator (smoke sizes by default)."""
     cfg = _cfg(smoke)
@@ -185,6 +249,16 @@ def run_all(smoke: bool = True, seed: int = 0) -> list:
             f"({ch['churn_on']['n_worker_failures']} failures)",
         )
     )
+    t0 = time.time()
+    bk = bench_backend(cfg, seed)
+    rows.append(
+        (
+            "cluster_backend",
+            (time.time() - t0) * 1e6 / max(cfg["backend_reps"], 1),
+            f"jax frontier sweep {bk['min_speedup_warm']:.0f}x"
+            f"..{bk['max_speedup_warm']:.0f}x vs python engine",
+        )
+    )
     return rows
 
 
@@ -192,18 +266,31 @@ def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true", help="tiny sample counts (CI)")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument(
+        "--backend",
+        choices=["python", "jax", "both"],
+        default="python",
+        help="engine scoring the redundancy scenario (the backend section always runs both)",
+    )
     ap.add_argument("--out", type=pathlib.Path, default=ART / "cluster_bench.json")
     args = ap.parse_args()
 
     cfg = _cfg(args.smoke)
     t0 = time.time()
     result = {
-        "config": {"smoke": args.smoke, "seed": args.seed, **cfg},
-        "redundancy": bench_redundancy(cfg, args.seed),
+        "config": {"smoke": args.smoke, "seed": args.seed, "backend": args.backend, **cfg},
         "queueing": bench_queueing(cfg, args.seed),
         "cancellation": bench_cancellation(cfg, args.seed),
         "churn": bench_churn(cfg, args.seed),
+        "backend": bench_backend(cfg, args.seed),
     }
+    if args.backend in ("python", "both"):
+        result["redundancy"] = bench_redundancy(cfg, args.seed, backend="python")
+    if args.backend in ("jax", "both"):
+        result["redundancy_jax"] = bench_redundancy(cfg, args.seed, backend="jax")
+    if "redundancy" not in result:
+        # the regression gate keys on "redundancy"; alias the jax run
+        result["redundancy"] = result["redundancy_jax"]
     result["wall_seconds"] = time.time() - t0
 
     args.out.parent.mkdir(parents=True, exist_ok=True)

@@ -17,12 +17,16 @@ The planner -> engine -> replanner loop:
      (B, r) when the fitted distribution drifts.
 
 Public surface:
-  * events   -- event heap, simulation clock, named RNG streams
-  * workers  -- Worker/WorkerPool, ChurnProcess, service draws
-  * master   -- Job/JobRecord/EngineReport, ClusterEngine, workload helpers
-  * control  -- OnlineReplanner (sliding-window refit + replan)
+  * events     -- event heap, simulation clock, named RNG streams
+  * workers    -- Worker/WorkerPool, ChurnProcess, service draws
+  * master     -- Job/JobRecord/EngineReport, ClusterEngine, workload helpers
+  * control    -- OnlineReplanner (sliding-window refit + replan)
+  * vectorized -- batched jax replay of the engine semantics: whole-frontier
+    candidate scoring (``frontier_job_times``) and FIFO queueing via
+    ``lax.scan`` (``simulate_fifo``), the fast path behind
+    ``plan_cluster(backend="jax")`` / ``plan_sweep``
 """
-from . import control, events, master, workers
+from . import control, events, master, vectorized, workers
 from .control import OnlineReplanner
 from .master import (
     ClusterEngine,
@@ -32,12 +36,14 @@ from .master import (
     jobs_from_traces,
     sample_job_times,
 )
+from .vectorized import FifoReport, frontier_job_times, simulate_fifo
 from .workers import ChurnProcess, Worker, WorkerPool
 
 __all__ = [
     "control",
     "events",
     "master",
+    "vectorized",
     "workers",
     "OnlineReplanner",
     "ClusterEngine",
@@ -46,6 +52,9 @@ __all__ = [
     "JobRecord",
     "jobs_from_traces",
     "sample_job_times",
+    "FifoReport",
+    "frontier_job_times",
+    "simulate_fifo",
     "ChurnProcess",
     "Worker",
     "WorkerPool",

@@ -476,14 +476,33 @@ def sample_job_times(
     size_dependent: bool = True,
     cancel_redundant: bool = False,
     n_tasks: Optional[int] = None,
+    backend: str = "python",
 ) -> np.ndarray:
     """i.i.d. job compute-time samples from the engine.
 
-    Runs one engine with ``n_samples`` identical jobs queued at t=0: under
-    whole-cluster FIFO scheduling they execute serially, so per-job compute
-    times are independent draws -- the engine-side analogue of
-    ``simulate_balanced``.
+    ``backend="python"`` runs one event-driven engine with ``n_samples``
+    identical jobs queued at t=0: under whole-cluster FIFO scheduling they
+    execute serially, so per-job compute times are independent draws -- the
+    engine-side analogue of ``simulate_balanced``.  ``backend="jax"`` draws
+    the same statistic from the vectorized replay of these semantics
+    (:func:`repro.cluster.vectorized.frontier_job_times`): one device call
+    instead of ``n_samples`` event loops, statistically identical (replica
+    cancellation does not change compute times).
     """
+    if backend == "jax":
+        from .vectorized import frontier_job_times
+
+        return frontier_job_times(
+            dist,
+            n_workers,
+            [n_batches],
+            n_samples,
+            seed=seed,
+            size_dependent=size_dependent,
+            n_tasks=n_tasks,
+        )[0]
+    if backend != "python":
+        raise ValueError(f"unknown backend {backend!r} (expected 'jax' or 'python')")
     jobs = [
         Job(job_id=i, dist=dist, n_tasks=n_tasks if n_tasks is not None else n_workers)
         for i in range(n_samples)

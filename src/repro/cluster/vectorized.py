@@ -1,0 +1,245 @@
+"""Vectorized jax backend for the cluster engine's operational semantics.
+
+The event-driven :class:`~repro.cluster.master.ClusterEngine` scores one
+(B, r) candidate per Python event loop, which caps
+:meth:`~repro.core.planner.RedundancyPlanner.plan_cluster` at a handful of
+candidates.  This module replays the engine's semantics -- gang dispatch,
+earliest-cover completion (``T = max_b min_r``, the shared
+:func:`~repro.core.simulator.gang_cover_times` kernel), replica-cancellation
+accounting, and whole-cluster FIFO multi-job queueing -- as jax array
+programs, fully batched over (candidate B, replication r, Monte-Carlo rep),
+so one device call scores an entire frontier.
+
+Two entry points:
+
+* :func:`frontier_job_times` -- i.i.d. single-job compute times for every
+  candidate at once (the ``plan_cluster``/``plan_sweep`` workhorse).  The
+  frontier is padded to a ``(B_pad, r_pad)`` grid and masked per candidate,
+  mirroring ``simulate_balanced`` exactly in the unmasked case.
+* :func:`simulate_fifo` -- multi-job FIFO gang queueing via a ``lax.scan``
+  over job arrivals, vmapped over Monte-Carlo reps: job k+1 starts once the
+  cluster is free (at job k's cover time with cancellation, at its last
+  replica otherwise), reproducing the engine's response times and its
+  worker-seconds / cancelled-seconds-saved accounting.
+
+Not covered (fall back to the Python engine): fail/join churn, replica
+rescue, heterogeneous speeds, and online replanning -- dynamics whose
+control flow is data-dependent per event, not per job.
+
+Memory note: the padded frontier grid materializes
+``(C, n_reps, B_pad, r_pad)`` draws.  For a full divisor frontier of N
+workers that is ``C * n_reps * N**2`` floats -- fine for the N <= a few
+hundred regimes the planner sweeps; chunk ``n_reps`` at the call site for
+larger grids.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.service_time import ServiceTime
+from ..core.simulator import gang_cover_times
+
+__all__ = ["frontier_job_times", "simulate_fifo", "FifoReport"]
+
+
+def _candidate_grid(n_workers: int, candidates) -> tuple[np.ndarray, np.ndarray]:
+    bs = np.asarray(list(candidates), dtype=np.int32)
+    if bs.size == 0:
+        raise ValueError("need at least one candidate B")
+    if (bs < 1).any() or (bs > n_workers).any():
+        raise ValueError(f"candidates must lie in [1, {n_workers}], got {bs.tolist()}")
+    rs = (n_workers // bs).astype(np.int32)
+    return bs, rs
+
+
+@jax.jit
+def _frontier_cover(flat: jax.Array, idx: jax.Array, bs: jax.Array, rs: jax.Array, scales):
+    """(C, S, n_slots) flat draws -> (C, S) job times, masked per candidate.
+
+    ``idx`` maps each candidate's padded ``(B_pad, r_pad)`` grid slot to a
+    flat replica draw (row-major ``i * r + j``), so the expensive RNG work is
+    one draw per *replica actually dispatched* rather than per padded slot.
+    """
+
+    def one(f, ix, b, r, s):
+        return gang_cover_times(f[:, ix] * s, b, r)
+
+    return jax.vmap(one)(flat, idx, bs, rs, scales)
+
+
+def frontier_job_times(
+    dist: ServiceTime,
+    n_workers: int,
+    candidates,
+    n_reps: int,
+    *,
+    seed: int = 0,
+    size_dependent: bool = True,
+    n_tasks: int | None = None,
+) -> np.ndarray:
+    """i.i.d. job compute times for every candidate B in one device call.
+
+    Returns an ``(len(candidates), n_reps)`` array; row i is statistically
+    identical to ``sample_job_times(dist, n_workers, candidates[i], n_reps)``
+    on the Python engine (single job, no churn, homogeneous workers) and to
+    ``simulate_balanced`` -- the equivalence the test suite enforces at
+    3 sigma.
+    """
+    bs, rs = _candidate_grid(n_workers, candidates)
+    if n_tasks is None:
+        n_tasks = n_workers
+    b_pad, r_pad = int(bs.max()), int(rs.max())
+    n_slots = int((bs * rs).max())  # replicas a gang actually dispatches
+    idx = np.zeros((len(bs), b_pad, r_pad), dtype=np.int32)
+    for c, (b, r) in enumerate(zip(bs, rs)):
+        idx[c, :b, :r] = np.arange(b * r, dtype=np.int32).reshape(b, r)
+    key = jax.random.key(seed)
+    flat = dist.sample(key, (len(bs), int(n_reps), n_slots))
+    scales = (n_tasks / bs) if size_dependent else np.ones(len(bs))
+    t = _frontier_cover(
+        flat,
+        jnp.asarray(idx),
+        jnp.asarray(bs),
+        jnp.asarray(rs),
+        jnp.asarray(scales, dtype=flat.dtype),
+    )
+    return np.asarray(t)
+
+
+# --------------------------------------------------------------------------
+# multi-job FIFO gang queueing: lax.scan over arrivals, vmap over MC reps
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class FifoReport:
+    """Batched outcome of :func:`simulate_fifo` (axis 0 = Monte-Carlo rep).
+
+    Mirrors the fields of :class:`~repro.cluster.master.EngineReport` that
+    the vectorized semantics cover, with the engine's accounting invariant
+    ``worker_seconds(cancel on) + saved == worker_seconds(cancel off)``.
+    """
+
+    arrivals: np.ndarray  # (n_jobs,)
+    starts: np.ndarray  # (n_reps, n_jobs)
+    finishes: np.ndarray  # (n_reps, n_jobs)
+    worker_seconds: np.ndarray  # (n_reps,)
+    cancelled_seconds_saved: np.ndarray  # (n_reps,)
+
+    @property
+    def compute_times(self) -> np.ndarray:
+        return self.finishes - self.starts
+
+    @property
+    def response_times(self) -> np.ndarray:
+        return self.finishes - self.arrivals[None, :]
+
+    @property
+    def queue_waits(self) -> np.ndarray:
+        return self.starts - self.arrivals[None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("cancel_redundant",))
+def _fifo_scan(
+    draws: jax.Array,
+    gaps: jax.Array,
+    neg_first_arrival: jax.Array,
+    b: jax.Array,
+    r: jax.Array,
+    cancel_redundant: bool,
+):
+    """draws: (S, J, B_pad, r_pad) scaled durations -> per-rep FIFO schedule.
+
+    The scan carries *slack* -- the cluster's free time relative to the next
+    job's arrival (``gaps`` are inter-arrival deltas, the initial carry is
+    ``-arrivals[0]``) -- so only queue-backlog-sized magnitudes flow through
+    float32; the caller rebuilds absolute start times in float64.  Carrying
+    absolute times would quantize queue waits by the (arbitrarily large)
+    arrival timestamps.
+    """
+    b_pad, r_pad = draws.shape[-2], draws.shape[-1]
+    valid = (jnp.arange(b_pad)[:, None] < b) & (jnp.arange(r_pad)[None, :] < r)
+    masked = jnp.where(valid, draws, jnp.inf)  # (S, J, B, R)
+    batch_min = jnp.min(masked, axis=-1)  # (S, J, B)
+    t_job = gang_cover_times(draws, b, r)  # (S, J) cover time
+    # the cluster frees at the cover time when losers are cancelled, at the
+    # last replica otherwise (stragglers delay the next gang dispatch)
+    last_replica = jnp.max(jnp.where(valid, draws, -jnp.inf), axis=(-2, -1))
+    hold = t_job if cancel_redundant else last_replica
+    # busy worker-seconds: with cancellation each of a batch's r replicas
+    # burns exactly the batch min (winner's duration); without it every
+    # replica runs to completion
+    busy_off = jnp.sum(jnp.where(valid, draws, 0.0), axis=(-2, -1))  # (S, J)
+    busy_on = r * jnp.sum(jnp.where(jnp.arange(b_pad) < b, batch_min, 0.0), axis=-1)
+    busy = busy_on if cancel_redundant else busy_off
+    saved = busy_off - busy
+
+    def step(slack, inp):
+        h, gap = inp
+        wait = jnp.maximum(slack, 0.0)
+        return wait + h - gap, wait
+
+    _, waits = jax.lax.scan(
+        jax.vmap(step),
+        jnp.full(draws.shape[0], neg_first_arrival, dtype=draws.dtype),
+        (hold.T, jnp.broadcast_to(gaps[:, None], hold.T.shape)),
+    )
+    # waits: (S, J) after transpose
+    return waits.T, t_job, jnp.sum(busy, axis=-1), jnp.sum(saved, axis=-1)
+
+
+def simulate_fifo(
+    dist: ServiceTime,
+    n_workers: int,
+    n_batches: int,
+    arrivals,
+    n_reps: int,
+    *,
+    seed: int = 0,
+    cancel_redundant: bool = False,
+    size_dependent: bool = True,
+    n_tasks: int | None = None,
+) -> FifoReport:
+    """Whole-cluster FIFO gang queueing, batched over Monte-Carlo reps.
+
+    ``arrivals`` is the (sorted) job arrival-time vector shared by all reps;
+    each rep redraws every replica duration.  Statistically identical to
+    ``ClusterEngine(n_workers, n_batches=..., cancel_redundant=...)`` on the
+    same workload (no churn, homogeneous speeds).
+    """
+    arrivals = np.asarray(arrivals, dtype=np.float64)
+    if arrivals.ndim != 1 or arrivals.size == 0:
+        raise ValueError("arrivals must be a non-empty 1-D array")
+    if (np.diff(arrivals) < 0).any():
+        raise ValueError("arrivals must be sorted (FIFO order)")
+    bs, rs = _candidate_grid(n_workers, [n_batches])
+    b, r = int(bs[0]), int(rs[0])
+    if n_tasks is None:
+        n_tasks = n_workers
+    scale = (n_tasks / b) if size_dependent else 1.0
+    key = jax.random.key(seed)
+    draws = dist.sample(key, (int(n_reps), arrivals.size, b, r)) * scale
+    gaps = np.append(np.diff(arrivals), 0.0)  # last gap is never read
+    waits, t_job, busy, saved = _fifo_scan(
+        draws,
+        jnp.asarray(gaps, dtype=draws.dtype),
+        jnp.asarray(-arrivals[0], dtype=draws.dtype),
+        jnp.asarray(b),
+        jnp.asarray(r),
+        bool(cancel_redundant),
+    )
+    # absolute times rebuilt in float64: the device scan only ever sees
+    # queue-backlog-sized magnitudes (waits, holds, inter-arrival gaps)
+    starts = arrivals[None, :] + np.asarray(waits, dtype=np.float64)
+    return FifoReport(
+        arrivals=arrivals,
+        starts=starts,
+        finishes=starts + np.asarray(t_job, dtype=np.float64),
+        worker_seconds=np.asarray(busy, dtype=np.float64),
+        cancelled_seconds_saved=np.asarray(saved, dtype=np.float64),
+    )

@@ -15,7 +15,7 @@ an online replanner that refits the service-time model from observed task
 times (``RedundancyPlanner.plan_cluster`` scores candidates on that engine).
 """
 from . import analysis, assignment, batching, coupon, simulator, traces
-from .planner import RedundancyPlan, RedundancyPlanner, fit_service_time
+from .planner import RedundancyPlan, RedundancyPlanner, fit_service_time, plan_sweep
 from .service_time import (
     Empirical,
     Exponential,
@@ -35,6 +35,7 @@ __all__ = [
     "RedundancyPlan",
     "RedundancyPlanner",
     "fit_service_time",
+    "plan_sweep",
     "Empirical",
     "Exponential",
     "Pareto",

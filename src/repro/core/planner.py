@@ -32,7 +32,7 @@ from .service_time import (
     ShiftedExponential,
 )
 
-__all__ = ["RedundancyPlan", "RedundancyPlanner", "fit_service_time"]
+__all__ = ["RedundancyPlan", "RedundancyPlanner", "fit_service_time", "plan_sweep"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -165,6 +165,7 @@ class RedundancyPlanner:
         blend: float = 0.5,
         size_dependent: bool = True,
         cancel_redundant: bool = False,
+        backend: str = "jax",
     ) -> RedundancyPlan:
         """Pick (B, r) by *executing* each candidate on ``repro.cluster``.
 
@@ -173,27 +174,46 @@ class RedundancyPlanner:
         when enabled -- replica cancellation), so it extends to scenarios the
         formulas do not cover.  Lazy import: core stays importable without
         the cluster package loaded (cluster imports core).
-        """
-        from ..cluster.master import sample_job_times
 
-        means, covs = [], []
-        for i, b in enumerate(self.candidates):
-            t = sample_job_times(
+        ``backend="jax"`` (default) scores the whole candidate frontier in
+        one batched device call via ``repro.cluster.vectorized``; it covers
+        exactly this method's scenario (single-job gangs, no churn).  Use
+        ``backend="python"`` to run the event-driven engine per candidate --
+        the path churn/replanning extensions of this method must take.
+        Replica cancellation reclaims worker-seconds but does not change
+        compute times, so both backends score the same statistic.
+        """
+        if backend == "jax":
+            from ..cluster.vectorized import frontier_job_times
+
+            rows = frontier_job_times(
                 dist,
                 self.n_workers,
-                b,
+                self.candidates,
                 n_reps,
-                seed=seed + i,
+                seed=seed,
                 size_dependent=size_dependent,
-                cancel_redundant=cancel_redundant,
             )
-            t = t[np.isfinite(t)]
-            m = float(t.mean())
-            means.append(m)
-            covs.append(float(t.std() / m) if m > 0 else np.inf)
-        means, covs = np.array(means), np.array(covs)
+        elif backend == "python":
+            from ..cluster.master import sample_job_times
+
+            rows = [
+                sample_job_times(
+                    dist,
+                    self.n_workers,
+                    b,
+                    n_reps,
+                    seed=seed + i,
+                    size_dependent=size_dependent,
+                    cancel_redundant=cancel_redundant,
+                )
+                for i, b in enumerate(self.candidates)
+            ]
+        else:
+            raise ValueError(f"unknown backend {backend!r} (expected 'jax' or 'python')")
+        means, covs = _frontier_stats(rows)
         b = self._select(means, covs, objective, blend)
-        return self._mk_plan(b, means, covs, objective, "cluster_engine")
+        return self._mk_plan(b, means, covs, objective, f"cluster_engine:{backend}")
 
     # -- helpers -------------------------------------------------------------
 
@@ -203,10 +223,19 @@ class RedundancyPlanner:
         elif objective == "cov":
             idx = int(np.argmin(covs))
         elif objective == "blend":
-            # normalized blend: the administrator's middle point
-            mn = (means - means.min()) / max(float(np.ptp(means)), 1e-12)
-            cn = (covs - covs.min()) / max(float(np.ptp(covs)), 1e-12)
-            idx = int(np.argmin(blend * mn + (1 - blend) * cn))
+            # normalized blend: the administrator's middle point.  Degenerate
+            # candidates (zero/infinite mean => infinite CoV) would poison the
+            # normalization with inf - inf = NaN and argmin would then pick
+            # them; normalize over the finite candidates only and push the
+            # rest to +inf score.
+            finite = np.isfinite(means) & np.isfinite(covs)
+            if not finite.any():
+                idx = 0  # every candidate is degenerate; nothing to rank
+            else:
+                mn = _norm01(means, finite)
+                cn = _norm01(covs, finite)
+                score = np.where(finite, blend * mn + (1 - blend) * cn, np.inf)
+                idx = int(np.argmin(score))
         else:
             raise ValueError(f"unknown objective {objective!r}")
         return self.candidates[idx]
@@ -225,3 +254,83 @@ class RedundancyPlanner:
             frontier_cov=tuple(float(c) for c in covs),
             source=source,
         )
+
+
+def _norm01(values: np.ndarray, finite: np.ndarray) -> np.ndarray:
+    """Min-max normalize the finite lanes; non-finite lanes are left at 0
+    (callers mask them out of the score separately, keeping inf - inf NaNs
+    out of the arithmetic entirely)."""
+    out = np.zeros_like(values, dtype=np.float64)
+    vf = values[finite]
+    lo = float(vf.min())
+    out[finite] = (vf - lo) / max(float(vf.max()) - lo, 1e-12)
+    return out
+
+
+def _frontier_stats(rows) -> tuple[np.ndarray, np.ndarray]:
+    """Per-candidate (mean, CoV) from job-time sample rows.
+
+    Degenerate rows -- no finite samples, or an all-zero mean -- score
+    (inf, inf) so selection can rank them last instead of dividing by zero.
+    """
+    means, covs = [], []
+    for t in rows:
+        t = np.asarray(t)
+        t = t[np.isfinite(t)]
+        m = float(t.mean()) if t.size else math.inf
+        if t.size == 0 or m <= 0.0:
+            means.append(math.inf if t.size == 0 else m)
+            covs.append(math.inf)
+            continue
+        means.append(m)
+        covs.append(float(t.std() / m))
+    return np.array(means), np.array(covs)
+
+
+def plan_sweep(
+    dists: Sequence[ServiceTime],
+    budgets: Sequence[int],
+    objective: str = "mean",
+    *,
+    n_reps: int = 400,
+    seed: int = 0,
+    blend: float = 0.5,
+    size_dependent: bool = True,
+    cancel_redundant: bool = False,
+    backend: str = "jax",
+    candidates: Iterable[int] | None = None,
+) -> list:
+    """Score redundancy frontiers for a (distribution x worker-budget) grid.
+
+    Returns ``plans`` with ``plans[i][j]`` the :class:`RedundancyPlan` for
+    ``dists[i]`` under ``budgets[j]``.  Each grid point scores its entire
+    candidate frontier in one batched device call (``backend="jax"``), so a
+    sweep that would take ``len(dists) * len(budgets) * len(candidates)``
+    Python event loops is a handful of vectorized kernels -- the regime the
+    §VI/§VII trade-off studies live in.
+
+    Grid point (i, j) uses seed ``seed + i * len(budgets) + j``; the
+    property-test suite relies on that derivation to check each sweep entry
+    against an identically-seeded per-candidate :meth:`plan_cluster` call.
+    """
+    dists = list(dists)
+    budgets = [int(n) for n in budgets]
+    plans = []
+    for i, dist in enumerate(dists):
+        row = []
+        for j, n_workers in enumerate(budgets):
+            planner = RedundancyPlanner(n_workers, candidates=candidates)
+            row.append(
+                planner.plan_cluster(
+                    dist,
+                    objective,
+                    n_reps=n_reps,
+                    seed=seed + i * len(budgets) + j,
+                    blend=blend,
+                    size_dependent=size_dependent,
+                    cancel_redundant=cancel_redundant,
+                    backend=backend,
+                )
+            )
+        plans.append(row)
+    return plans

@@ -21,6 +21,7 @@ import numpy as np
 from .service_time import ServiceTime
 
 __all__ = [
+    "gang_cover_times",
     "simulate_balanced",
     "simulate_counts",
     "simulate_membership",
@@ -64,6 +65,30 @@ def stats_from_samples(samples: np.ndarray) -> JobTimeStats:
 # --------------------------------------------------------------------------
 
 
+def gang_cover_times(
+    draws: jax.Array,
+    n_batches: jax.Array | int | None = None,
+    replication: jax.Array | int | None = None,
+) -> jax.Array:
+    """Earliest-cover completion of a balanced gang dispatch: ``max_b min_r``.
+
+    ``draws`` carries replica durations on its last two axes, shaped
+    ``(..., B_pad, r_pad)``.  With ``n_batches``/``replication`` given
+    (scalars, possibly traced), slots beyond them are masked out, so one
+    padded ``(B_pad, r_pad)`` grid serves a whole frontier of (B, r)
+    candidates -- the vectorized cluster backend (``repro.cluster.vectorized``)
+    vmaps this kernel over candidates, while ``simulate_balanced`` and the
+    event engine's semantics are its unmasked special case.
+    """
+    b_pad, r_pad = draws.shape[-2], draws.shape[-1]
+    if replication is not None:
+        draws = jnp.where(jnp.arange(r_pad) < replication, draws, jnp.inf)
+    t_batch = jnp.min(draws, axis=-1)
+    if n_batches is not None:
+        t_batch = jnp.where(jnp.arange(b_pad) < n_batches, t_batch, -jnp.inf)
+    return jnp.max(t_batch, axis=-1)
+
+
 def simulate_balanced(
     key: jax.Array,
     dist: ServiceTime,
@@ -82,8 +107,7 @@ def simulate_balanced(
     r = n_workers // n_batches
     scale = n_workers / n_batches if size_dependent else 1.0
     draws = dist.sample(key, (n_samples, n_batches, r)) * scale
-    t = jnp.max(jnp.min(draws, axis=2), axis=1)
-    return np.asarray(t)
+    return np.asarray(gang_cover_times(draws))
 
 
 # --------------------------------------------------------------------------

@@ -235,10 +235,11 @@ def test_engine_run_is_single_shot():
         engine.run([Job(job_id=1, dist=Exponential(1.0), n_tasks=4)])
 
 
-def test_plan_cluster_agrees_with_closed_form():
+@pytest.mark.parametrize("backend", ["python", "jax"])
+def test_plan_cluster_agrees_with_closed_form(backend):
     planner = RedundancyPlanner(8)
-    plan = planner.plan_cluster(Exponential(1.0), n_reps=300, seed=0)
-    assert plan.source == "cluster_engine"
+    plan = planner.plan_cluster(Exponential(1.0), n_reps=300, seed=0, backend=backend)
+    assert plan.source == f"cluster_engine:{backend}"
     assert plan.n_batches == analysis.argmin_B(Exponential(1.0), 8, metric="mean")
     # frontier means track the closed form within MC noise
     for b, m in zip(plan.frontier_B, plan.frontier_mean):

@@ -68,6 +68,34 @@ def test_empirical_dist_plan_path():
     assert plan.source == "empirical_bootstrap"
 
 
+def test_blend_select_ignores_degenerate_candidates():
+    """Regression: an inf CoV lane (zero-mean candidate) used to poison the
+    blend normalization with inf - inf = NaN, and np.argmin then picked the
+    degenerate candidate.  The blend must rank finite candidates only."""
+    p = RedundancyPlanner(8, candidates=[1, 2, 4])
+    means = np.array([0.0, 1.0, 2.0])
+    covs = np.array([np.inf, 0.2, 0.1])
+    with np.errstate(all="raise"):  # any inf - inf NaN arithmetic fails loudly
+        picked = p._select(means, covs, "blend", blend=0.5)
+    assert picked in (2, 4)
+    # all-degenerate frontier: selection still returns a candidate, no NaNs
+    all_bad = np.array([np.inf] * 3)
+    assert p._select(all_bad, all_bad, "blend", blend=0.5) == 1
+
+
+@pytest.mark.parametrize("backend", ["python", "jax"])
+def test_plan_cluster_blend_survives_zero_mean_samples(backend):
+    """End-to-end: a degenerate all-zero trace makes every candidate's mean 0
+    and CoV inf; plan_cluster(objective='blend') must still return a plan
+    with finite machinery (no NaN scores, no RuntimeWarnings)."""
+    dist = Empirical(samples=(0.0, 0.0, 0.0))
+    planner = RedundancyPlanner(4)
+    with np.errstate(invalid="raise"):
+        plan = planner.plan_cluster(dist, objective="blend", n_reps=30, seed=0, backend=backend)
+    assert plan.n_batches in planner.candidates
+    assert not any(np.isnan(m) for m in plan.frontier_mean)
+
+
 def test_trace_jobs_families_and_planning():
     jobs = traces.synthetic_google_jobs(seed=7)
     assert len(jobs) == 10

@@ -1,0 +1,202 @@
+"""Vectorized jax backend: equivalence with the event engine and oracle.
+
+The backend must replay the Python engine's operational semantics exactly in
+distribution -- single-job gang dispatch + earliest cover, FIFO multi-job
+queueing, cancellation accounting -- so every test here is either a 3-sigma
+statistical equivalence against the engine / ``simulate_balanced`` or an
+exact structural invariant (determinism, worker-seconds identities,
+plan_sweep == per-candidate plan_cluster).
+"""
+import jax
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ModuleNotFoundError:  # test extra not installed: seeded fallback engine
+    from _hypothesis_compat import given, settings, st
+
+from repro.cluster import ClusterEngine, Job, sample_job_times, simulate_fifo
+from repro.cluster.vectorized import frontier_job_times
+from repro.core import analysis, simulator
+from repro.core.planner import RedundancyPlanner, plan_sweep
+from repro.core.service_time import Exponential, Pareto
+
+
+def _z_mean(a: np.ndarray, b: np.ndarray) -> float:
+    se = np.sqrt(a.var() / a.size + b.var() / b.size)
+    return float(abs(a.mean() - b.mean()) / se)
+
+
+# --------------------------------------------------------------------------
+# single-job frontier: 3-sigma vs the Python engine and simulate_balanced
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "dist",
+    [Exponential(mu=1.0), Pareto(sigma=1.0, alpha=2.2)],
+    ids=["exponential", "pareto"],
+)
+def test_frontier_matches_engine_and_oracle(dist):
+    n = 8
+    cands = analysis.feasible_B(n)
+    rows = frontier_job_times(dist, n, cands, 60_000, seed=0)
+    assert rows.shape == (len(cands), 60_000)
+    for i, b in enumerate(cands):
+        t_engine = sample_job_times(dist, n, b, 3000, seed=10 + i, backend="python")
+        t_oracle = np.asarray(simulator.simulate_balanced(jax.random.key(i), dist, n, b, 60_000))
+        assert _z_mean(rows[i], t_engine) < 3.0, (b, rows[i].mean(), t_engine.mean())
+        assert _z_mean(rows[i], t_oracle) < 3.0, (b, rows[i].mean(), t_oracle.mean())
+
+
+def test_frontier_deterministic_and_seed_sensitive():
+    d = Pareto(1.0, 2.0)
+    a = frontier_job_times(d, 6, [1, 2, 3], 200, seed=3)
+    b = frontier_job_times(d, 6, [1, 2, 3], 200, seed=3)
+    c = frontier_job_times(d, 6, [1, 2, 3], 200, seed=4)
+    assert np.array_equal(a, b)
+    assert not np.array_equal(a, c)
+
+
+def test_frontier_batch_model_matches_oracle():
+    """§IV batch-level model (size_dependent=False) also lines up."""
+    d = Exponential(1.0)
+    rows = frontier_job_times(d, 6, [3], 60_000, seed=1, size_dependent=False)
+    ref = np.asarray(
+        simulator.simulate_balanced(jax.random.key(9), d, 6, 3, 60_000, size_dependent=False)
+    )
+    assert _z_mean(rows[0], ref) < 3.0
+
+
+def test_frontier_rejects_bad_candidates():
+    with pytest.raises(ValueError):
+        frontier_job_times(Exponential(1.0), 4, [0, 2], 10)
+    with pytest.raises(ValueError):
+        frontier_job_times(Exponential(1.0), 4, [8], 10)
+    with pytest.raises(ValueError):
+        frontier_job_times(Exponential(1.0), 4, [], 10)
+
+
+def test_sample_job_times_jax_backend_dispatch():
+    t = sample_job_times(Exponential(1.0), 8, 4, 500, seed=2, backend="jax")
+    assert t.shape == (500,)
+    t_py = sample_job_times(Exponential(1.0), 8, 4, 3000, seed=2, backend="python")
+    assert _z_mean(t, t_py) < 3.0
+    with pytest.raises(ValueError, match="backend"):
+        sample_job_times(Exponential(1.0), 8, 4, 10, backend="numpy")
+
+
+# --------------------------------------------------------------------------
+# FIFO queueing scan: exact invariants + 3-sigma vs the event engine
+# --------------------------------------------------------------------------
+
+
+def test_fifo_cancellation_invariants():
+    arrivals = np.zeros(12)
+    on = simulate_fifo(Pareto(1.0, 2.0), 8, 2, arrivals, 800, seed=5, cancel_redundant=True)
+    off = simulate_fifo(Pareto(1.0, 2.0), 8, 2, arrivals, 800, seed=5, cancel_redundant=False)
+    # same seed => same draws => identical per-job compute times ...
+    assert np.allclose(on.compute_times, off.compute_times)
+    # ... while cancellation reclaims exactly the redundant replicas' tails
+    assert np.allclose(
+        on.worker_seconds + on.cancelled_seconds_saved, off.worker_seconds, rtol=1e-5
+    )
+    assert (on.cancelled_seconds_saved > 0).all()
+    assert (off.cancelled_seconds_saved == 0).all()
+    # stragglers of job k delay job k+1's gang dispatch unless cancelled
+    assert (on.response_times <= off.response_times + 1e-5).all()
+    assert on.response_times.mean() < off.response_times.mean()
+
+
+@pytest.mark.parametrize("cancel", [False, True], ids=["cancel_off", "cancel_on"])
+def test_fifo_matches_engine_response_times(cancel):
+    dist = Pareto(1.0, 2.5)
+    n, b, n_jobs = 8, 2, 12
+    arrivals = np.arange(n_jobs) * 2.0
+    engine_means = []
+    for s in range(40):
+        jobs = [
+            Job(job_id=i, dist=dist, n_tasks=n, arrival=float(a)) for i, a in enumerate(arrivals)
+        ]
+        rep = ClusterEngine(n, seed=100 + s, n_batches=b, cancel_redundant=cancel).run(jobs)
+        engine_means.append(rep.response_times.mean())
+    engine_means = np.array(engine_means)
+    vec = simulate_fifo(dist, n, b, arrivals, 3000, seed=7, cancel_redundant=cancel)
+    vec_means = vec.response_times.mean(axis=1)
+    assert _z_mean(engine_means, vec_means) < 3.0, (engine_means.mean(), vec_means.mean())
+
+
+def test_fifo_no_queueing_reduces_to_frontier():
+    """Arrivals far apart: every job starts on arrival, response == compute."""
+    d = Exponential(1.0)
+    arrivals = np.arange(6) * 1e4
+    rep = simulate_fifo(d, 8, 4, arrivals, 2000, seed=11)
+    assert np.allclose(rep.queue_waits, 0.0)
+    assert np.allclose(rep.response_times, rep.compute_times)
+    rows = frontier_job_times(d, 8, [4], 12_000, seed=12)
+    assert _z_mean(rep.compute_times.ravel(), rows[0]) < 3.0
+
+
+def test_fifo_waits_invariant_to_arrival_offset():
+    """Regression: large absolute timestamps must not quantize queue waits --
+    the scan carries slack (backlog-sized), never absolute float32 time."""
+    d = Pareto(1.0, 2.0)
+    arr = np.arange(10) * 1.5
+    a = simulate_fifo(d, 8, 2, arr, 300, seed=9)
+    b = simulate_fifo(d, 8, 2, arr + 1e7, 300, seed=9)
+    assert np.array_equal(a.queue_waits, b.queue_waits)
+    assert np.array_equal(a.compute_times, b.compute_times)
+    assert np.allclose(b.starts - 1e7, a.starts)
+
+
+def test_fifo_rejects_unsorted_arrivals():
+    with pytest.raises(ValueError, match="sorted"):
+        simulate_fifo(Exponential(1.0), 4, 2, [3.0, 1.0], 10)
+
+
+# --------------------------------------------------------------------------
+# planner integration: jax-scored plans and grid sweeps
+# --------------------------------------------------------------------------
+
+
+def test_plan_cluster_jax_agrees_with_closed_form():
+    planner = RedundancyPlanner(8)
+    plan = planner.plan_cluster(Exponential(1.0), n_reps=2000, seed=0, backend="jax")
+    assert plan.source == "cluster_engine:jax"
+    assert plan.n_batches == analysis.argmin_B(Exponential(1.0), 8, metric="mean")
+    for b, m in zip(plan.frontier_B, plan.frontier_mean):
+        assert abs(m - analysis.mean_T(Exponential(1.0), 8, b)) < 0.2, (b, m)
+
+
+@settings(max_examples=6, deadline=None)
+@given(
+    n=st.sampled_from([4, 6, 8, 10]),
+    objective=st.sampled_from(["mean", "cov", "blend"]),
+    seed=st.integers(0, 50),
+)
+def test_plan_sweep_matches_per_candidate_plan_cluster(n, objective, seed):
+    """Each sweep grid point must replay an identically-seeded plan_cluster."""
+    dists = [Exponential(1.0), Pareto(1.0, 2.2)]
+    budgets = [n, 2 * n]
+    plans = plan_sweep(dists, budgets, objective, n_reps=80, seed=seed)
+    for i, dist in enumerate(dists):
+        for j, budget in enumerate(budgets):
+            solo = RedundancyPlanner(budget).plan_cluster(
+                dist,
+                objective,
+                n_reps=80,
+                seed=seed + i * len(budgets) + j,
+                backend="jax",
+            )
+            assert plans[i][j].n_batches == solo.n_batches
+            assert plans[i][j].frontier_mean == solo.frontier_mean
+            assert plans[i][j].frontier_cov == solo.frontier_cov
+            assert plans[i][j].n_workers == budget
+
+
+def test_plan_sweep_python_backend_and_shapes():
+    plans = plan_sweep([Exponential(1.0)], [4, 8], n_reps=60, seed=1, backend="python")
+    assert len(plans) == 1 and len(plans[0]) == 2
+    assert all(p.source == "cluster_engine:python" for p in plans[0])
