@@ -8,16 +8,20 @@ vary with the runner).  Two properties are load-bearing and fail the build:
   1. the vectorized jax backend keeps its wall-clock edge over the Python
      event engine on a full-frontier ``plan_cluster`` sweep
      (``backend.min_speedup_warm`` stays above an absolute floor -- machine
-     speeds vary, ratios of times on the same machine much less), and
+     speeds vary, ratios of times on the same machine much less),
   2. planned redundancy keeps its heavy-tail speedup
      (``redundancy._summary.max_heavy_speedup`` does not regress beyond a
-     fractional tolerance of the baseline).
+     fractional tolerance of the baseline), and
+  3. the churn-epoch scan keeps its edge on the *churned/heterogeneous*
+     sweep (``dynamic.min_speedup_warm`` above its own floor -- this is the
+     sweep that used to fall back to the Python engine entirely).
 
 Floors are env-overridable so a one-off noisy runner can be diagnosed
 without editing the workflow:
 
-  BENCH_MIN_JAX_SPEEDUP   absolute floor on backend.min_speedup_warm (10)
-  BENCH_HEAVY_TOLERANCE   fraction of baseline heavy speedup to keep (0.5)
+  BENCH_MIN_JAX_SPEEDUP          absolute floor on backend.min_speedup_warm (10)
+  BENCH_HEAVY_TOLERANCE          fraction of baseline heavy speedup to keep (0.5)
+  BENCH_MIN_JAX_DYNAMIC_SPEEDUP  absolute floor on dynamic.min_speedup_warm (3)
 """
 from __future__ import annotations
 
@@ -29,9 +33,16 @@ import sys
 
 DEFAULT_MIN_JAX_SPEEDUP = 10.0
 DEFAULT_HEAVY_TOLERANCE = 0.5
+DEFAULT_MIN_JAX_DYNAMIC_SPEEDUP = 3.0
 
 
-def check(current: dict, baseline: dict, min_jax_speedup: float, heavy_tolerance: float) -> list:
+def check(
+    current: dict,
+    baseline: dict,
+    min_jax_speedup: float,
+    heavy_tolerance: float,
+    min_jax_dynamic_speedup: float = DEFAULT_MIN_JAX_DYNAMIC_SPEEDUP,
+) -> list:
     """Return a list of human-readable failure strings (empty = gate passes)."""
     failures = []
 
@@ -53,6 +64,17 @@ def check(current: dict, baseline: dict, min_jax_speedup: float, heavy_tolerance
             f"< {heavy_tolerance:.2f} * baseline {base_heavy:.2f}x"
         )
 
+    cur_dyn = current.get("dynamic", {}).get("min_speedup_warm")
+    base_dyn = baseline.get("dynamic", {}).get("min_speedup_warm")
+    if cur_dyn is None or base_dyn is None:
+        failures.append("dynamic (churned/hetero) sweep section missing from current or baseline")
+    elif cur_dyn < min_jax_dynamic_speedup:
+        failures.append(
+            f"jax epoch scan lost its churned-sweep edge: dynamic.min_speedup_warm "
+            f"{cur_dyn:.1f}x < floor {min_jax_dynamic_speedup:.1f}x "
+            f"(baseline recorded {base_dyn:.1f}x)"
+        )
+
     return failures
 
 
@@ -70,8 +92,11 @@ def main() -> int:
     baseline = json.loads(args.baseline.read_text())
     min_jax_speedup = float(os.environ.get("BENCH_MIN_JAX_SPEEDUP", DEFAULT_MIN_JAX_SPEEDUP))
     heavy_tolerance = float(os.environ.get("BENCH_HEAVY_TOLERANCE", DEFAULT_HEAVY_TOLERANCE))
+    min_jax_dynamic = float(
+        os.environ.get("BENCH_MIN_JAX_DYNAMIC_SPEEDUP", DEFAULT_MIN_JAX_DYNAMIC_SPEEDUP)
+    )
 
-    failures = check(current, baseline, min_jax_speedup, heavy_tolerance)
+    failures = check(current, baseline, min_jax_speedup, heavy_tolerance, min_jax_dynamic)
 
     cur_b, base_b = current["backend"], baseline["backend"]
     print(
@@ -86,6 +111,15 @@ def main() -> int:
         f"heavy-tail redundancy speedup: {_fmt(cur_heavy)} "
         f"(baseline {_fmt(base_heavy)}, tolerance {heavy_tolerance:.2f})"
     )
+    cur_d = current.get("dynamic", {})
+    base_d = baseline.get("dynamic", {})
+    if cur_d and base_d:
+        print(
+            f"jax churned/hetero sweep edge: {cur_d['min_speedup_warm']:.1f}x"
+            f"..{cur_d['max_speedup_warm']:.1f}x "
+            f"(baseline {base_d['min_speedup_warm']:.1f}x"
+            f"..{base_d['max_speedup_warm']:.1f}x, floor {min_jax_dynamic:.1f}x)"
+        )
 
     if failures:
         for f in failures:

@@ -1,6 +1,6 @@
 """Cluster-engine benchmark: §VII dynamics the closed forms cannot express.
 
-Five scenarios on the synthetic Google-trace jobs (and parametric tails):
+Six scenarios on the synthetic Google-trace jobs (and parametric tails):
 
   * ``redundancy``   -- per trace job, engine mean compute time at B = N (no
     redundancy) vs the planned B*: reproduces the §VII observation that
@@ -17,6 +17,11 @@ Five scenarios on the synthetic Google-trace jobs (and parametric tails):
     (``repro.cluster.vectorized``): the speedup that makes thousand-candidate
     sweeps and per-window replanning affordable.  The CI regression gate
     (``benchmarks/check_bench_regression.py``) consumes this section.
+  * ``dynamic``      -- the same full-frontier sweep under fail/join churn and
+    heterogeneous worker speeds, scored by the Python event engine vs the jax
+    churn-epoch scan (``repro.cluster.epoch_scan``): the sweep regime that
+    used to fall back to Python entirely.  The regression gate also keys on
+    this section's jax speed edge.
 
 ``--smoke`` shrinks every sample count so the whole file runs in seconds --
 CI executes it on every PR, gates on the JSON against the committed
@@ -54,6 +59,8 @@ def _cfg(smoke: bool) -> dict:
             "trace_jobs": 4,
             "backend_workers": 24,
             "backend_reps": 800,
+            "dyn_workers": 12,
+            "dyn_reps": 960,
         }
     return {
         "n_workers": 20,
@@ -62,6 +69,8 @@ def _cfg(smoke: bool) -> dict:
         "trace_jobs": 10,
         "backend_workers": 36,
         "backend_reps": 1000,
+        "dyn_workers": 16,
+        "dyn_reps": 2048,
     }
 
 
@@ -207,6 +216,55 @@ def bench_backend(cfg: dict, seed: int = 0) -> dict:
     return out
 
 
+def bench_dynamic(cfg: dict, seed: int = 0) -> dict:
+    """Churned + heterogeneous full-frontier ``plan_cluster``: python vs jax.
+
+    The scenario PR 2 could not vectorize: every candidate B scored under
+    worker fail/join churn (with replica rescue) on a heterogeneous-speed
+    cluster.  The Python engine replays one event loop per candidate; the jax
+    epoch scan (``repro.cluster.epoch_scan``) batches the whole frontier's
+    correlated job streams into one ``lax.scan`` device call.  Warm timing,
+    like ``bench_backend``: the compile amortizes across every sweep of the
+    same shape (exactly how ``plan_sweep`` and nightly grids use it).
+    """
+    n, reps = cfg["dyn_workers"], cfg["dyn_reps"]
+    churn = ChurnProcess(fail_rate=0.02, mean_downtime=2.0)
+    rng = np.random.default_rng(seed)
+    speeds = tuple(float(s) for s in rng.uniform(0.5, 2.0, size=n))
+    out = {"n_workers": n, "n_reps": reps, "churn_fail_rate": churn.fail_rate, "dists": {}}
+    for name, dist in [("exponential", Exponential(1.0)), ("pareto_heavy", Pareto(1.0, 1.8))]:
+        planner = RedundancyPlanner(n)
+        # 2 fail/join pairs per worker comfortably cover each stream's horizon
+        # (~1 expected failure); long 96-job streams keep the lane count low,
+        # which is where the vmapped while_loop batching is cheapest
+        kw = dict(n_reps=reps, seed=seed, churn=churn, speeds=speeds)
+        kw_jax = dict(kw, churn_pairs_per_worker=2, jobs_per_stream=96)
+        jax.clear_caches()  # same shapes across dists: force a real compile
+        t0 = time.time()
+        planner.plan_cluster(dist, **kw_jax, backend="jax")
+        cold = time.time() - t0
+        t0 = time.time()
+        plan_jax = planner.plan_cluster(dist, **kw_jax, backend="jax")
+        t_jax = time.time() - t0
+        t0 = time.time()
+        plan_py = planner.plan_cluster(dist, **kw, backend="python")
+        t_py = time.time() - t0
+        out["dists"][name] = {
+            "frontier_size": len(planner.candidates),
+            "python_seconds": t_py,
+            "jax_seconds_warm": t_jax,
+            "jax_seconds_cold": cold,
+            "speedup_warm": t_py / max(t_jax, 1e-9),
+            "speedup_cold": t_py / max(cold, 1e-9),
+            "B_python": plan_py.n_batches,
+            "B_jax": plan_jax.n_batches,
+        }
+    speedups = [d["speedup_warm"] for d in out["dists"].values()]
+    out["min_speedup_warm"] = min(speedups)
+    out["max_speedup_warm"] = max(speedups)
+    return out
+
+
 def run_all(smoke: bool = True, seed: int = 0) -> list:
     """CSV rows for the benchmark aggregator (smoke sizes by default)."""
     cfg = _cfg(smoke)
@@ -259,6 +317,16 @@ def run_all(smoke: bool = True, seed: int = 0) -> list:
             f"..{bk['max_speedup_warm']:.0f}x vs python engine",
         )
     )
+    t0 = time.time()
+    dy = bench_dynamic(cfg, seed)
+    rows.append(
+        (
+            "cluster_dynamic",
+            (time.time() - t0) * 1e6 / max(cfg["dyn_reps"], 1),
+            f"churned/hetero sweep {dy['min_speedup_warm']:.0f}x"
+            f"..{dy['max_speedup_warm']:.0f}x vs python engine",
+        )
+    )
     return rows
 
 
@@ -283,6 +351,7 @@ def main() -> None:
         "cancellation": bench_cancellation(cfg, args.seed),
         "churn": bench_churn(cfg, args.seed),
         "backend": bench_backend(cfg, args.seed),
+        "dynamic": bench_dynamic(cfg, args.seed),
     }
     if args.backend in ("python", "both"):
         result["redundancy"] = bench_redundancy(cfg, args.seed, backend="python")

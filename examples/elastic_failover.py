@@ -8,13 +8,24 @@ The walkthrough closes the planner -> engine -> replanner loop:
   3. the :class:`OnlineReplanner` refits the service-time model from the
      engine's observed task times and re-picks (B, r) mid-stream;
   4. the mesh-level view (``repro.distributed.rdp``) shows how the final
-     plan maps onto a ("replica", "shard") device-mesh factorization.
+     plan maps onto a ("replica", "shard") device-mesh factorization;
+  5. the same churned + heterogeneous + replanning scenario replayed on the
+     vectorized jax epoch scan -- hundreds of Monte-Carlo reps in one device
+     call, and a whole-frontier churned ``plan_cluster`` sweep that used to
+     require one Python event loop per candidate.
 
 Run:  PYTHONPATH=src python examples/elastic_failover.py
 """
 import numpy as np
 
-from repro.cluster import ChurnProcess, ClusterEngine, Job, OnlineReplanner
+from repro.cluster import (
+    ChurnProcess,
+    ClusterEngine,
+    Job,
+    OnlineReplanner,
+    ReplanConfig,
+    simulate_epochs,
+)
 from repro.core.planner import RedundancyPlanner
 from repro.core.service_time import Pareto
 from repro.distributed import rdp
@@ -70,6 +81,37 @@ def main():
         f"[mesh] final plan factorizes the data axis as "
         f"(replica={final.replication}, shard={final.n_batches}); "
         f"replicas per shard: {cov['replicas_per_shard']}"
+    )
+    # --- 5. the same dynamics, vectorized: the jax epoch scan -----------------
+    rep = simulate_epochs(
+        dist,
+        n_workers,
+        plan.n_batches,
+        np.zeros(40),
+        n_reps=200,
+        seed=42,
+        cancel_redundant=True,
+        churn=ChurnProcess(fail_rate=0.02, mean_downtime=3.0),
+        replan=ReplanConfig(window=512, refit_every=128, min_observations=96),
+    )
+    t = rep.compute_times
+    print(
+        f"[scan] 200 Monte-Carlo reps of the same churned scenario in one "
+        f"device call: mean job time {t[np.isfinite(t)].mean():.2f}, "
+        f"{rep.n_worker_failures.mean():.1f} failures and "
+        f"{rep.n_replicas_rescued.mean():.1f} rescues per rep, "
+        f"{rep.n_replans.mean():.1f} replans"
+    )
+    hetero = RedundancyPlanner(n_workers).plan_cluster(
+        dist,
+        n_reps=400,
+        seed=7,
+        churn=ChurnProcess(fail_rate=0.02, mean_downtime=3.0),
+        speeds=tuple(1.0 + 0.5 * (i % 3) for i in range(n_workers)),
+    )
+    print(
+        f"[scan] churned + heterogeneous frontier sweep on jax "
+        f"({hetero.source}): B={hetero.n_batches} x r={hetero.replication}"
     )
     print(
         "\nCheckpoint restore across mesh shapes is exercised in "

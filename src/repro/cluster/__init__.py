@@ -21,13 +21,25 @@ Public surface:
   * workers    -- Worker/WorkerPool, ChurnProcess, service draws
   * master     -- Job/JobRecord/EngineReport, ClusterEngine, workload helpers
   * control    -- OnlineReplanner (sliding-window refit + replan)
-  * vectorized -- batched jax replay of the engine semantics: whole-frontier
-    candidate scoring (``frontier_job_times``) and FIFO queueing via
-    ``lax.scan`` (``simulate_fifo``), the fast path behind
+  * vectorized -- batched jax replay of the static engine semantics:
+    whole-frontier candidate scoring (``frontier_job_times``) and FIFO
+    queueing via ``lax.scan`` (``simulate_fifo``), the fast path behind
     ``plan_cluster(backend="jax")`` / ``plan_sweep``
+  * epoch_scan  -- batched jax replay of the *dynamic* semantics: fail/join
+    churn with replica rescue, heterogeneous speeds, and windowed online
+    replanning as a ``lax.scan`` over churn epochs (``simulate_epochs``,
+    ``frontier_job_times_dynamic``) -- the path ``plan_cluster`` takes when
+    any dynamic knob is set, so ``backend="jax"`` no longer falls back to
+    the Python engine for churned/heterogeneous scenarios
 """
-from . import control, events, master, vectorized, workers
+from . import control, epoch_scan, events, master, vectorized, workers
 from .control import OnlineReplanner
+from .epoch_scan import (
+    EpochReport,
+    ReplanConfig,
+    frontier_job_times_dynamic,
+    simulate_epochs,
+)
 from .master import (
     ClusterEngine,
     EngineReport,
@@ -37,10 +49,11 @@ from .master import (
     sample_job_times,
 )
 from .vectorized import FifoReport, frontier_job_times, simulate_fifo
-from .workers import ChurnProcess, Worker, WorkerPool
+from .workers import ChurnProcess, ChurnSchedule, Worker, WorkerPool, sample_churn_schedule
 
 __all__ = [
     "control",
+    "epoch_scan",
     "events",
     "master",
     "vectorized",
@@ -48,14 +61,20 @@ __all__ = [
     "OnlineReplanner",
     "ClusterEngine",
     "EngineReport",
+    "EpochReport",
+    "ReplanConfig",
     "Job",
     "JobRecord",
     "jobs_from_traces",
     "sample_job_times",
+    "simulate_epochs",
     "FifoReport",
     "frontier_job_times",
+    "frontier_job_times_dynamic",
     "simulate_fifo",
     "ChurnProcess",
+    "ChurnSchedule",
     "Worker",
     "WorkerPool",
+    "sample_churn_schedule",
 ]

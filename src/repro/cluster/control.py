@@ -7,6 +7,11 @@ which periodically refits a distribution family by maximum likelihood
 paper's closed forms.  Dispatches after a refit use the new plan, so a
 workload whose tail drifts mid-stream (straggler onset) is re-batched
 without restarting the cluster.
+
+The jax epoch-scan backend mirrors this controller on device
+(:class:`repro.cluster.epoch_scan.ReplanConfig` holds the same knobs and
+``ReplanConfig.to_controller`` builds the equivalent instance of this class);
+the differential suite checks both converge to the same closed-form optimum.
 """
 from __future__ import annotations
 
@@ -51,6 +56,9 @@ class OnlineReplanner:
         after churn changed the alive count).
     objective:
         ``'mean'`` | ``'cov'`` | ``'blend'`` -- forwarded to the planner.
+    blend:
+        Mean/CoV weight used when ``objective='blend'`` (forwarded to the
+        planner on every replan).
     window:
         Number of most recent task-time observations kept.
     refit_every:
@@ -71,9 +79,11 @@ class OnlineReplanner:
         refit_every: int = 128,
         min_observations: int = 64,
         initial_plan: Optional[RedundancyPlan] = None,
+        blend: float = 0.5,
     ):
         self.n_workers = int(n_workers)
         self.objective = objective
+        self.blend = float(blend)
         self.window = int(window)
         self.refit_every = int(refit_every)
         self.min_observations = int(min_observations)
@@ -118,7 +128,7 @@ class OnlineReplanner:
         dist = fit_service_time(samples)
         dist = _inverse_min(dist, float(counts.mean()))
         self.last_fit = dist
-        plan = planner.plan(dist, objective=self.objective)
+        plan = planner.plan(dist, objective=self.objective, blend=self.blend)
         self.current = plan
         self.history.append(plan)
         return plan

@@ -1,0 +1,799 @@
+"""jax epoch-scan engine: churn, heterogeneous speeds, rescue, and replanning.
+
+This module closes the vectorization gap left by :mod:`repro.cluster.vectorized`
+(which covers the static case): it replays the *dynamic* semantics of the
+event-driven :class:`~repro.cluster.master.ClusterEngine` -- worker fail/join
+churn, replica rescue, per-worker speed factors, FIFO multi-job dispatch, and
+windowed online replanning -- as a ``lax.scan`` over **churn epochs**, batched
+over Monte-Carlo reps (and, for planning, over a whole candidate frontier).
+
+The structural insight making this vectorizable: between two churn events the
+alive set is constant, so no replica can die and no rescue can be requested --
+every job that starts and ends inside an epoch is a pure masked
+``max_b min_r`` cover computation (the shared
+:func:`~repro.core.simulator.gang_cover_times` semantics), and the only
+sequential state is the one job straddling the boundary.  The scan therefore
+carries the in-flight job's padded ``(B_pad, r_pad)`` slot grid (slot ->
+worker id, start, scheduled end) across epochs; each step
+
+  1. applies one fail/join event (killing the dead worker's replica and
+     queueing a rescue when a batch loses its last live replica),
+  2. dispatches pending rescues onto the earliest-freeing alive workers
+     (a bounded ``fori_loop`` -- at most one rescue per batch per epoch),
+  3. runs a ``while_loop`` that alternately *commits* completions up to the
+     epoch's end (batch wins, sibling cancellation accounting, job finishes)
+     and *dispatches* queued jobs once every alive worker is free.
+
+Replanning mirrors :class:`~repro.cluster.control.OnlineReplanner` in jax: a
+ring buffer of censoring-tagged task-time observations, maximum-likelihood
+refits of the Exp/SExp/Pareto families picked by log-likelihood, the
+min-of-r censoring inversion, and a closed-form frontier argmin over the
+divisors of the alive-worker count (harmonic/``gammaln`` tables).
+
+Accounting matches the engine's identities: with a shared seed,
+``worker_seconds(cancel on) + cancelled_seconds_saved == worker_seconds(cancel
+off)`` holds per rep in churn-free runs, and the report exposes the same
+counter fields (:meth:`EpochReport.accounting`) as
+:class:`~repro.cluster.master.EngineReport` for the differential tests.
+
+Precision note: the scan runs in float32 on absolute simulation time, so keep
+timescales moderate (the engine runs float64); tests compare with ~1e-4
+relative tolerances where the engine asserts 1e-9.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.scipy.special import gammaln
+
+from ..core.analysis import divisor_table, harmonic_tables
+from ..core.service_time import ServiceTime
+from .workers import ChurnProcess, ChurnSchedule
+
+__all__ = [
+    "ReplanConfig",
+    "EpochReport",
+    "simulate_epochs",
+    "frontier_job_times_dynamic",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class ReplanConfig:
+    """Static mirror of :class:`~repro.cluster.control.OnlineReplanner` knobs.
+
+    Hashable (it keys the jit cache); ``to_controller`` builds the equivalent
+    Python-engine controller so differential tests drive both backends from
+    one config.
+    """
+
+    window: int = 512
+    refit_every: int = 128
+    min_observations: int = 64
+    objective: str = "mean"
+    blend: float = 0.5
+
+    def to_controller(self, n_workers: int):
+        from .control import OnlineReplanner
+
+        return OnlineReplanner(
+            n_workers,
+            objective=self.objective,
+            window=self.window,
+            refit_every=self.refit_every,
+            min_observations=self.min_observations,
+            blend=self.blend,
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class EpochReport:
+    """Batched outcome of :func:`simulate_epochs` (axis 0 = Monte-Carlo rep).
+
+    Mirrors :class:`~repro.cluster.master.EngineReport` field-for-field where
+    the semantics overlap; ``inf`` marks jobs never dispatched / completed
+    (dead cluster), exactly like the engine's unfinished records.
+    ``epoch_times`` are the applied churn-event times per rep (inf-padded),
+    the same epoch boundaries ``EngineReport.epoch_times`` records.
+    """
+
+    arrivals: np.ndarray  # (n_jobs,)
+    starts: np.ndarray  # (n_reps, n_jobs)
+    finishes: np.ndarray  # (n_reps, n_jobs)
+    n_batches_used: np.ndarray  # (n_reps, n_jobs)
+    replication_used: np.ndarray  # (n_reps, n_jobs)
+    worker_seconds: np.ndarray  # (n_reps,)
+    cancelled_seconds_saved: np.ndarray  # (n_reps,)
+    n_worker_failures: np.ndarray  # (n_reps,)
+    n_replicas_rescued: np.ndarray  # (n_reps,)
+    n_replans: np.ndarray  # (n_reps,)
+    epoch_times: np.ndarray  # (n_reps, n_events) applied boundaries, inf pad
+
+    @property
+    def compute_times(self) -> np.ndarray:
+        return self.finishes - self.starts
+
+    @property
+    def response_times(self) -> np.ndarray:
+        return self.finishes - self.arrivals[None, :]
+
+    @property
+    def queue_waits(self) -> np.ndarray:
+        return self.starts - self.arrivals[None, :]
+
+    @property
+    def final_n_batches(self) -> np.ndarray:
+        return self.n_batches_used[:, -1]
+
+    def accounting(self) -> dict:
+        """Per-rep counters, keyed identically to ``EngineReport.accounting``."""
+        return {
+            "worker_seconds": self.worker_seconds,
+            "cancelled_seconds_saved": self.cancelled_seconds_saved,
+            "n_worker_failures": self.n_worker_failures,
+            "n_replicas_rescued": self.n_replicas_rescued,
+            "n_replans": self.n_replans,
+        }
+
+
+# --------------------------------------------------------------------------
+# the per-lane scan (one Monte-Carlo rep of one candidate), vmapped + jitted
+# --------------------------------------------------------------------------
+
+_RUNNERS: dict = {}
+
+
+def _get_runner(n: int, cancel: bool, size_dep: bool, replan: Optional[ReplanConfig]):
+    key = (n, cancel, size_dep, replan)
+    if key in _RUNNERS:
+        return _RUNNERS[key]
+
+    bidx = jnp.arange(n)
+    W = replan.window if replan is not None else 0
+
+    def _obs_push(st, vals, comps, times, valid):
+        # ring-buffer push in completion-time order: valid entries take ranks
+        # 0..nv-1 under a stable sort of their times, landing at head+rank
+        valid = valid & (vals > 0.0) & jnp.isfinite(vals)
+        nv = valid.sum()
+        rank = jnp.argsort(jnp.argsort(jnp.where(valid, times, jnp.inf)))
+        pos = jnp.where(valid, (st["obs_head"] + rank) % W, W)
+        st2 = {**st}
+        st2["obs_val"] = jnp.append(st["obs_val"], 0.0).at[pos].set(vals)[:W]
+        st2["obs_comp"] = jnp.append(st["obs_comp"], 0.0).at[pos].set(comps)[:W]
+        st2["obs_head"] = (st["obs_head"] + nv) % W
+        st2["obs_count"] = jnp.minimum(st["obs_count"] + nv, W)
+        st2["since_refit"] = st["since_refit"] + nv
+        return st2
+
+    def _replan_pick(st, div_tab, h1, h2, blend):
+        # MLE refit of Exp/SExp/Pareto on the window (mirrors
+        # core.planner.fit_service_time), min-of-c censoring inversion
+        # (control._inverse_min), closed-form frontier argmin over the
+        # divisors of the current alive count (core.analysis forms).
+        m = jnp.arange(W) < st["obs_count"]
+        nobs = jnp.maximum(st["obs_count"], 1).astype(jnp.float32)
+        x = st["obs_val"]
+        sx = jnp.where(m, x, 0.0).sum()
+        mean = sx / nobs
+        xmin = jnp.min(jnp.where(m, x, jnp.inf))
+        slogx = jnp.where(m, jnp.log(jnp.maximum(x, 1e-30)), 0.0).sum()
+        tiny = 1e-30
+        mu_e = 1.0 / jnp.maximum(mean, tiny)
+        ll_e = nobs * jnp.log(mu_e) - mu_e * sx
+        gap = mean - xmin
+        mu_s = 1.0 / jnp.maximum(gap, tiny)
+        ll_s = jnp.where(gap > 0, nobs * jnp.log(mu_s) - mu_s * (sx - nobs * xmin), -jnp.inf)
+        slogs = slogx - nobs * jnp.log(jnp.maximum(xmin, tiny))
+        alpha = nobs / jnp.maximum(slogs, tiny)
+        ll_p = jnp.where(
+            slogs > 0,
+            nobs * jnp.log(alpha) + nobs * alpha * jnp.log(jnp.maximum(xmin, tiny))
+            - (alpha + 1.0) * slogx,
+            -jnp.inf,
+        )
+        fam = jnp.argmax(jnp.stack([ll_e, ll_s, ll_p]))
+        c = jnp.where(m, st["obs_comp"], 0.0).sum() / nobs
+        c = jnp.maximum(c, 1.0)
+        mu_e, mu_s, alpha_c = mu_e / c, mu_s / c, alpha / c
+
+        n_alive = st["alive"].sum()
+        cands = div_tab[n_alive]  # (D,) zero-padded
+        vb = cands > 0
+        b = jnp.maximum(cands, 1).astype(jnp.float32)
+        H1, H2 = h1[jnp.maximum(cands, 1)], h2[jnp.maximum(cands, 1)]
+        na = n_alive.astype(jnp.float32)
+        mean_e = H1 / mu_e
+        cov_e = jnp.sqrt(H2) / H1
+        mean_s = na * xmin / b + H1 / mu_s
+        cov_s = jnp.sqrt(H2) / (na * xmin * mu_s / b + H1)
+        xp = b / jnp.maximum(na * alpha_c, tiny)
+        lgm = jnp.log(jnp.maximum(na * xmin / b, tiny)) + gammaln(b + 1.0)
+        lgm = lgm - gammaln(b + 1.0 - xp) + gammaln(1.0 - xp)
+        mean_p = jnp.where(xp < 1.0, jnp.exp(lgm), jnp.inf)
+        lgq = (
+            gammaln(1.0 - 2.0 * xp)
+            + 2.0 * gammaln(b + 1.0 - xp)
+            - gammaln(b + 1.0)
+            - gammaln(b + 1.0 - 2.0 * xp)
+            - 2.0 * gammaln(1.0 - xp)
+        )
+        cov_p = jnp.where(
+            2.0 * xp < 1.0, jnp.sqrt(jnp.maximum(jnp.exp(lgq) - 1.0, 0.0)), jnp.inf
+        )
+        means = jnp.select([fam == 0, fam == 1], [mean_e, mean_s], mean_p)
+        covs = jnp.select([fam == 0, fam == 1], [cov_e, cov_s], cov_p)
+        means = jnp.where(vb, means, jnp.inf)
+        covs = jnp.where(vb, covs, jnp.inf)
+        if replan.objective == "mean":
+            score = means
+        elif replan.objective == "cov":
+            score = covs
+        elif replan.objective == "blend":
+            finite = jnp.isfinite(means) & jnp.isfinite(covs)
+
+            def norm01(v):
+                vf = jnp.where(finite, v, jnp.inf)
+                lo = jnp.min(vf)
+                hi = jnp.max(jnp.where(finite, v, -jnp.inf))
+                return jnp.where(finite, (v - lo) / jnp.maximum(hi - lo, 1e-12), 0.0)
+
+            score = jnp.where(
+                finite, blend * norm01(means) + (1.0 - blend) * norm01(covs), jnp.inf
+            )
+        else:  # pragma: no cover - validated at the wrapper
+            raise ValueError(f"unknown objective {replan.objective!r}")
+        new_b = cands[jnp.argmin(score)]
+        return jnp.where(n_alive > 0, jnp.maximum(new_b, 1), st["plan_b"])
+
+    def lane(tau, tau_resc, ev_t, ev_w, ev_up, next_t, arrivals, speeds, b0, n_tasks,
+             blend, div_tab, h1, h2):
+        n_jobs = tau.shape[0]
+
+        def batch_scale(job_b):
+            return n_tasks / job_b.astype(jnp.float32) if size_dep else jnp.float32(1.0)
+
+        def commit(st, t_limit):
+            """Commit completions up to t_limit: batch wins, cancellation,
+            accounting, job finish, observations, and the replan hook."""
+            live = st["slot_live"]
+            end = st["slot_end"]
+            masked = jnp.where(live, end, jnp.inf)
+            win = jnp.min(masked, axis=1)  # (B,)
+            newly = (~st["batch_done"]) & (win <= t_limit) & jnp.isfinite(win)
+            if cancel:
+                nb = newly[:, None] & live
+                busy_add = jnp.where(nb, win[:, None] - st["slot_start"], 0.0).sum()
+                saved_add = jnp.where(nb, end - win[:, None], 0.0).sum()
+                live2 = live & ~nb
+                t_new = jnp.max(jnp.where(newly, win, -jnp.inf))
+            else:
+                done_slots = live & (end <= t_limit)
+                busy_add = jnp.where(done_slots, end - st["slot_start"], 0.0).sum()
+                saved_add = 0.0
+                live2 = live & ~done_slots
+                t_new = jnp.max(jnp.where(done_slots, end, -jnp.inf))
+            done2 = st["batch_done"] | newly
+            done_t2 = jnp.where(newly, win, st["batch_done_t"])
+            all_done = jnp.all(done2)
+            fin = jnp.max(jnp.where(bidx < st["job_b"], done_t2, -jnp.inf))
+            completes = st["job_active"] & all_done
+            qa = st["q_active"]
+
+            st2 = {**st}
+            st2["slot_live"] = live2
+            st2["busy"] = st["busy"] + busy_add
+            st2["saved"] = st["saved"] + saved_add
+            st2["batch_done"] = done2
+            st2["batch_done_t"] = done_t2
+            st2["t_cursor"] = jnp.maximum(
+                st["t_cursor"], jnp.maximum(t_new, jnp.where(completes, fin, -jnp.inf))
+            )
+            st2["fins"] = st["fins"].at[qa].set(jnp.where(completes, fin, st["fins"][qa]))
+            st2["job_active"] = st["job_active"] & ~all_done
+            st2["resc_pending"] = st["resc_pending"] & ~completes
+
+            if replan is not None:
+                sc = batch_scale(st["job_b"])
+                spd = speeds[jnp.clip(st["slot_w"], 0, n - 1)]
+                if cancel:
+                    # one observation per newly-won batch: the winner's task
+                    # time, censored by however many rivals it raced
+                    widx = jnp.argmin(masked, axis=1)  # (B,)
+                    dur = win - jnp.take_along_axis(
+                        st["slot_start"], widx[:, None], axis=1
+                    )[:, 0]
+                    spd_w = jnp.take_along_axis(spd, widx[:, None], axis=1)[:, 0]
+                    vals = dur * spd_w / sc
+                    comps = live.sum(axis=1).astype(jnp.float32)
+                    st2 = _obs_push(st2, vals, comps, win, newly)
+                else:
+                    # every replica that completes while its job is active is
+                    # an uncensored observation (the engine drops stragglers
+                    # that outlive their job)
+                    fin_limit = jnp.where(completes, fin, jnp.inf)
+                    ovalid = done_slots & st["job_active"] & (end <= fin_limit)
+                    vals = (end - st["slot_start"]) * spd / sc
+                    ones = jnp.ones_like(vals)
+                    st2 = _obs_push(
+                        st2, vals.ravel(), ones.ravel(), end.ravel(), ovalid.ravel()
+                    )
+                do_replan = (
+                    completes
+                    & (st2["obs_count"] >= replan.min_observations)
+                    & (st2["since_refit"] >= replan.refit_every)
+                )
+                # _replan_pick runs unconditionally: under vmap a lax.cond on
+                # the (batched) do_replan lowers to a select that evaluates
+                # both branches anyway, so gating would add bookkeeping
+                # without skipping the work
+                new_b = _replan_pick(st2, div_tab, h1, h2, blend)
+                st2["plan_b"] = jnp.where(do_replan, new_b, st2["plan_b"])
+                st2["n_replans"] = st2["n_replans"] + do_replan
+                st2["since_refit"] = jnp.where(do_replan, 0, st2["since_refit"])
+            return st2
+
+        def boundary(st, ev_t, ev_w, ev_up):
+            """Apply one fail/join event (the engine stops replaying churn
+            once every job is recorded -- mirror with the sim_over gate)."""
+            sim_over = (st["q"] >= n_jobs) & ~st["job_active"]
+            act = (ev_w >= 0) & jnp.isfinite(ev_t) & ~sim_over
+            w = jnp.clip(ev_w, 0, n - 1)
+            was = st["alive"][w]
+            do_fail = act & ~ev_up & was
+            do_join = act & ev_up & ~was
+            st2 = {**st}
+            st2["alive"] = st["alive"].at[w].set(
+                jnp.where(do_fail, False, jnp.where(do_join, True, was))
+            )
+            kill = st["slot_live"] & (st["slot_w"] == w) & do_fail
+            st2["busy"] = st["busy"] + jnp.where(kill, ev_t - st["slot_start"], 0.0).sum()
+            live2 = st["slot_live"] & ~kill
+            st2["slot_live"] = live2
+            lost = kill.any(axis=1) & ~live2.any(axis=1) & ~st["batch_done"]
+            st2["resc_pending"] = st["resc_pending"] | lost
+            st2["resc_t"] = jnp.where(lost, ev_t, st["resc_t"])
+            st2["n_fail"] = st["n_fail"] + do_fail
+            # No dispatch in this epoch can precede its boundary: when the
+            # *churn event itself* is what frees the gang (a fail killing the
+            # last straggler, or a join reviving a dead cluster), the engine
+            # dispatches at the event time -- not at the stale last-completion
+            # cursor.  Floor the cursor at the (finite) boundary.
+            st2["t_cursor"] = jnp.maximum(
+                st["t_cursor"],
+                jnp.where(jnp.isfinite(ev_t), jnp.maximum(ev_t, 0.0), -jnp.inf),
+            )
+            applied_t = jnp.where(do_fail | do_join, ev_t, jnp.inf)
+            return st2, applied_t
+
+        def rescues(st, t_start, t_next, tau_row):
+            """Dispatch pending rescues onto the earliest-freeing alive
+            workers (engine: first free worker, FIFO rescue queue).
+
+            Progress-gated while_loop: one trip per dispatched rescue plus a
+            final no-op trip, so churn epochs with nothing pending (the vast
+            majority) pay a single cheap iteration instead of a fixed
+            n-worker unroll."""
+
+            def body(st):
+                live = st["slot_live"]
+                masked = jnp.where(live, st["slot_end"], jnp.inf)
+                win = jnp.min(masked, axis=1)
+                slot_free = jnp.broadcast_to(win[:, None], (n, n)) if cancel else st["slot_end"]
+                flat_w = jnp.where(live, st["slot_w"], n).ravel()
+                vals = jnp.where(live, slot_free, -jnp.inf).ravel()
+                wbusy = jnp.full(n + 1, -jnp.inf).at[flat_w].max(vals)[:n]
+                wfree = jnp.where(st["alive"], jnp.maximum(wbusy, t_start), jnp.inf)
+                wfree = jnp.where(wfree <= t_next, wfree, jnp.inf)
+                tgt = jnp.argmin(jnp.where(st["resc_pending"], st["resc_t"], jnp.inf))
+                wstar = jnp.argmin(wfree)
+                can = st["resc_pending"].any() & jnp.isfinite(wfree[wstar]) & st["job_active"]
+                td = wfree[wstar]
+                dur = tau_row[tgt] * batch_scale(st["job_b"]) / speeds[wstar]
+                st2 = {**st}
+                st2["slot_w"] = st["slot_w"].at[tgt, 0].set(
+                    jnp.where(can, wstar, st["slot_w"][tgt, 0])
+                )
+                st2["slot_start"] = st["slot_start"].at[tgt, 0].set(
+                    jnp.where(can, td, st["slot_start"][tgt, 0])
+                )
+                st2["slot_end"] = st["slot_end"].at[tgt, 0].set(
+                    jnp.where(can, td + dur, st["slot_end"][tgt, 0])
+                )
+                st2["slot_live"] = st["slot_live"].at[tgt, 0].set(
+                    jnp.where(can, True, st["slot_live"][tgt, 0])
+                )
+                st2["resc_pending"] = st["resc_pending"].at[tgt].set(
+                    jnp.where(can, False, st["resc_pending"][tgt])
+                )
+                st2["n_resc"] = st["n_resc"] + can
+                return can, st2
+
+            def loop_body(cs):
+                _, st = cs
+                return body(st)
+
+            _, st = jax.lax.while_loop(lambda cs: cs[0], loop_body, (jnp.array(True), st))
+            return st
+
+        def dispatch_loop(st, t_next):
+            """Alternate commit / gang-dispatch until nothing more can start
+            inside this epoch (engine: whole-cluster FIFO gangs)."""
+
+            def cond(cs):
+                return cs[0]
+
+            def body(cs):
+                _, st = cs
+                st = commit(st, t_next)
+                n_alive = st["alive"].sum()
+                qsafe = jnp.clip(st["q"], 0, n_jobs - 1)
+                can = (
+                    (~st["job_active"])
+                    & (st["q"] < n_jobs)
+                    & (n_alive > 0)
+                    & ~st["slot_live"].any()
+                )
+                td = jnp.maximum(st["t_cursor"], arrivals[qsafe])
+                can = can & (td < t_next)
+                b = jnp.where(st["plan_b"] > 0, st["plan_b"], n_alive)
+                b = jnp.clip(b, 1, jnp.maximum(n_alive, 1))
+                r = n_alive // jnp.maximum(b, 1)
+                rank = jnp.cumsum(st["alive"]) - 1
+                sel = st["alive"] & (rank < b * r)
+                flat_slot = jnp.where(sel, (rank % b) * n + (rank // b), n * n)
+                new_w = (
+                    jnp.full(n * n + 1, -1, jnp.int32)
+                    .at[flat_slot]
+                    .set(jnp.arange(n, dtype=jnp.int32))[: n * n]
+                    .reshape(n, n)
+                )
+                slot_i = bidx[:, None]
+                slot_j = bidx[None, :]
+                active_slot = (slot_i < b) & (slot_j < r)
+                flat_idx = jnp.clip(slot_j * b + slot_i, 0, n - 1)
+                spd = speeds[jnp.clip(new_w, 0, n - 1)]
+                dur = tau[qsafe][flat_idx] * batch_scale(b) / spd
+                st2 = {**st}
+                st2["slot_w"] = jnp.where(can, new_w, st["slot_w"])
+                st2["slot_live"] = jnp.where(can, active_slot, st["slot_live"])
+                st2["slot_start"] = jnp.where(can, td, st["slot_start"])
+                st2["slot_end"] = jnp.where(
+                    can, jnp.where(active_slot, td + dur, jnp.inf), st["slot_end"]
+                )
+                st2["batch_done"] = jnp.where(can, bidx >= b, st["batch_done"])
+                st2["batch_done_t"] = jnp.where(
+                    can, jnp.where(bidx >= b, -jnp.inf, jnp.inf), st["batch_done_t"]
+                )
+                st2["job_active"] = st["job_active"] | can
+                st2["job_b"] = jnp.where(can, b, st["job_b"])
+                st2["job_r"] = jnp.where(can, r, st["job_r"])
+                st2["q_active"] = jnp.where(can, st["q"], st["q_active"])
+                st2["starts"] = st["starts"].at[qsafe].set(
+                    jnp.where(can, td, st["starts"][qsafe])
+                )
+                st2["bs"] = st["bs"].at[qsafe].set(jnp.where(can, b, st["bs"][qsafe]))
+                st2["rs"] = st["rs"].at[qsafe].set(jnp.where(can, r, st["rs"][qsafe]))
+                st2["q"] = st["q"] + can
+                return can, st2
+
+            _, st = jax.lax.while_loop(cond, body, (jnp.array(True), st))
+            return st
+
+        def step(st, xs):
+            ev_t, ev_w, ev_up, t_next, tau_row = xs
+            st, applied_t = boundary(st, ev_t, ev_w, ev_up)
+            st = rescues(st, jnp.maximum(ev_t, 0.0), t_next, tau_row)
+            st = dispatch_loop(st, t_next)
+            return st, applied_t
+
+        st = {
+            "t_cursor": jnp.float32(0.0),
+            "alive": jnp.ones(n, dtype=bool),
+            "q": jnp.int32(0),
+            "job_active": jnp.array(False),
+            "job_b": jnp.int32(1),
+            "job_r": jnp.int32(1),
+            "q_active": jnp.int32(0),
+            "slot_w": jnp.full((n, n), -1, jnp.int32),
+            "slot_live": jnp.zeros((n, n), dtype=bool),
+            "slot_start": jnp.zeros((n, n), jnp.float32),
+            "slot_end": jnp.full((n, n), jnp.inf, jnp.float32),
+            "batch_done": jnp.ones(n, dtype=bool),
+            "batch_done_t": jnp.full(n, -jnp.inf, jnp.float32),
+            "resc_pending": jnp.zeros(n, dtype=bool),
+            "resc_t": jnp.full(n, jnp.inf, jnp.float32),
+            "busy": jnp.float32(0.0),
+            "saved": jnp.float32(0.0),
+            "n_fail": jnp.int32(0),
+            "n_resc": jnp.int32(0),
+            "n_replans": jnp.int32(0),
+            "plan_b": jnp.asarray(b0, jnp.int32),
+            "starts": jnp.full(n_jobs, jnp.inf, jnp.float32),
+            "fins": jnp.full(n_jobs, jnp.inf, jnp.float32),
+            "bs": jnp.zeros(n_jobs, jnp.int32),
+            "rs": jnp.zeros(n_jobs, jnp.int32),
+        }
+        if replan is not None:
+            st.update(
+                obs_val=jnp.zeros(W, jnp.float32),
+                obs_comp=jnp.ones(W, jnp.float32),
+                obs_head=jnp.int32(0),
+                obs_count=jnp.int32(0),
+                since_refit=jnp.int32(0),
+            )
+        st, applied = jax.lax.scan(step, st, (ev_t, ev_w, ev_up, next_t, tau_resc))
+        return {
+            "starts": st["starts"],
+            "finishes": st["fins"],
+            "bs": st["bs"],
+            "rs": st["rs"],
+            "worker_seconds": st["busy"],
+            "cancelled_seconds_saved": st["saved"],
+            "n_worker_failures": st["n_fail"],
+            "n_replicas_rescued": st["n_resc"],
+            "n_replans": st["n_replans"],
+            "epoch_times": applied,
+        }
+
+    runner = jax.jit(
+        jax.vmap(
+            lane,
+            in_axes=(0, 0, 0, 0, 0, 0, None, None, 0, None, None, None, None, None),
+        )
+    )
+    _RUNNERS[key] = runner
+    return runner
+
+
+# --------------------------------------------------------------------------
+# churn realization sampling / schedule packing
+# --------------------------------------------------------------------------
+
+
+def _pack_schedule(schedule: ChurnSchedule, n_lanes: int):
+    k = max(len(schedule), 1)
+    t = np.full(k, np.inf, np.float32)
+    w = np.full(k, -1, np.int32)
+    u = np.zeros(k, bool)
+    if len(schedule):
+        t[: len(schedule)] = np.asarray(schedule.times, np.float32)
+        w[: len(schedule)] = np.asarray(schedule.wids, np.int32)
+        u[: len(schedule)] = np.asarray(schedule.ups, bool)
+    tile = lambda a: jnp.broadcast_to(jnp.asarray(a), (n_lanes,) + a.shape)  # noqa: E731
+    return tile(t), tile(w), tile(u)
+
+
+def _sample_churn(key, churn: ChurnProcess, n_workers: int, n_lanes: int, pairs: int):
+    """Per-lane alternating-renewal timelines, the engine's churn law."""
+    if churn.fail_rate <= 0.0 or pairs <= 0:
+        shape = (n_lanes, 1)
+        return (
+            jnp.full(shape, jnp.inf, jnp.float32),
+            jnp.full(shape, -1, jnp.int32),
+            jnp.zeros(shape, bool),
+        )
+    ku, kd = jax.random.split(key)
+    ups = jax.random.exponential(ku, (n_lanes, n_workers, pairs)) / churn.fail_rate
+    if churn.mean_downtime > 0.0:
+        downs = jax.random.exponential(kd, (n_lanes, n_workers, pairs)) * churn.mean_downtime
+    else:
+        downs = jnp.full((n_lanes, n_workers, pairs), jnp.inf)
+    iv = jnp.stack([ups, downs], axis=-1).reshape(n_lanes, n_workers, 2 * pairs)
+    t = jnp.cumsum(iv, axis=-1)  # fail at even positions, join at odd
+    up_kind = (jnp.arange(2 * pairs) % 2).astype(bool)
+    wid = jnp.broadcast_to(
+        jnp.arange(n_workers, dtype=jnp.int32)[None, :, None], t.shape
+    )
+    kinds = jnp.broadcast_to(up_kind[None, None, :], t.shape)
+    t = t.reshape(n_lanes, -1)
+    order = jnp.argsort(t, axis=-1)
+    t = jnp.take_along_axis(t, order, axis=-1)
+    w = jnp.take_along_axis(wid.reshape(n_lanes, -1), order, axis=-1)
+    u = jnp.take_along_axis(kinds.reshape(n_lanes, -1), order, axis=-1)
+    w = jnp.where(jnp.isfinite(t), w, -1)
+    return t.astype(jnp.float32), w, u
+
+
+def _prepend_sentinel(ev_t, ev_w, ev_up):
+    """Step 0 carries no event: epoch [0, first event)."""
+    s = ev_t.shape[0]
+    ev_t = jnp.concatenate([jnp.full((s, 1), -jnp.inf, ev_t.dtype), ev_t], axis=1)
+    ev_w = jnp.concatenate([jnp.full((s, 1), -1, ev_w.dtype), ev_w], axis=1)
+    ev_up = jnp.concatenate([jnp.zeros((s, 1), bool), ev_up], axis=1)
+    next_t = jnp.concatenate([ev_t[:, 1:], jnp.full((s, 1), jnp.inf, ev_t.dtype)], axis=1)
+    return ev_t, ev_w, ev_up, next_t
+
+
+def _prepare_lanes(dist, n_workers, n_lanes, n_jobs, seed, churn, churn_schedule, pairs):
+    """Per-lane inputs shared by both entry points: service draws, rescue
+    draws, and the sentinel-prefixed churn event stream."""
+    key = jax.random.key(seed)
+    k_svc, k_resc, k_churn = jax.random.split(key, 3)
+    tau = dist.sample(k_svc, (n_lanes, n_jobs, n_workers))
+    if churn is not None:
+        ev_t, ev_w, ev_up = _sample_churn(k_churn, churn, n_workers, n_lanes, pairs)
+    elif churn_schedule is not None:
+        ev_t, ev_w, ev_up = _pack_schedule(churn_schedule, n_lanes)
+    else:
+        ev_t = jnp.full((n_lanes, 1), jnp.inf, jnp.float32)
+        ev_w = jnp.full((n_lanes, 1), -1, jnp.int32)
+        ev_up = jnp.zeros((n_lanes, 1), bool)
+    ev_t, ev_w, ev_up, next_t = _prepend_sentinel(ev_t, ev_w, ev_up)
+    tau_resc = dist.sample(k_resc, (n_lanes, ev_t.shape[1], n_workers))
+    return tau, tau_resc, ev_t, ev_w, ev_up, next_t
+
+
+# --------------------------------------------------------------------------
+# public entry points
+# --------------------------------------------------------------------------
+
+
+def _validate_common(n_workers, speeds, churn, churn_schedule, replan):
+    if speeds is None:
+        speeds = np.ones(n_workers, np.float32)
+    else:
+        speeds = np.asarray(speeds, np.float32)
+        if speeds.shape != (n_workers,):
+            raise ValueError("speeds must have one entry per worker")
+        if (speeds <= 0).any():
+            raise ValueError("speeds must be positive")
+    if churn is not None and churn_schedule is not None:
+        raise ValueError("pass either churn (sampled per rep) or churn_schedule, not both")
+    if churn_schedule is not None and len(churn_schedule):
+        if min(churn_schedule.wids) < 0 or max(churn_schedule.wids) >= n_workers:
+            raise ValueError("churn_schedule worker ids must lie in [0, n_workers)")
+    if replan is not None:
+        if replan.objective not in ("mean", "cov", "blend"):
+            raise ValueError(f"unknown objective {replan.objective!r}")
+        if replan.window < n_workers:
+            raise ValueError("replan.window must be >= n_workers (ring push bound)")
+    return speeds
+
+
+def simulate_epochs(
+    dist: ServiceTime,
+    n_workers: int,
+    n_batches: Optional[int],
+    arrivals,
+    n_reps: int,
+    *,
+    seed: int = 0,
+    cancel_redundant: bool = False,
+    size_dependent: bool = True,
+    n_tasks: Optional[int] = None,
+    speeds: Optional[Sequence[float]] = None,
+    churn: Optional[ChurnProcess] = None,
+    churn_schedule: Optional[ChurnSchedule] = None,
+    churn_pairs_per_worker: int = 8,
+    replan: Optional[ReplanConfig] = None,
+) -> EpochReport:
+    """Replay the full engine semantics on the jax epoch scan.
+
+    Statistically identical to ``ClusterEngine(n_workers, n_batches=...,
+    cancel_redundant=..., speeds=..., churn=..., controller=...)`` run on the
+    same arrival vector (the differential suite in ``tests/test_epoch_scan.py``
+    enforces this at 3 sigma, and bit-comparably on shared
+    ``churn_schedule`` + degenerate service times).  ``n_batches=None`` means
+    full parallelism (B = alive workers at dispatch), like the engine.
+
+    Each Monte-Carlo rep redraws every replica duration and (when ``churn`` is
+    given) its own fail/join timeline of ``churn_pairs_per_worker`` up/down
+    pairs per worker -- after which that worker stays up: the truncation an
+    explicit ``churn_schedule`` makes shared and exact.
+    """
+    arrivals = np.asarray(arrivals, dtype=np.float64)
+    if arrivals.ndim != 1 or arrivals.size == 0:
+        raise ValueError("arrivals must be a non-empty 1-D array")
+    if (np.diff(arrivals) < 0).any():
+        raise ValueError("arrivals must be sorted (FIFO order)")
+    if n_batches is not None and not (1 <= int(n_batches) <= n_workers):
+        raise ValueError(f"n_batches must lie in [1, {n_workers}] or be None")
+    speeds = _validate_common(n_workers, speeds, churn, churn_schedule, replan)
+    if n_tasks is None:
+        n_tasks = n_workers
+    n_jobs, s = arrivals.size, int(n_reps)
+    tau, tau_resc, ev_t, ev_w, ev_up, next_t = _prepare_lanes(
+        dist, n_workers, s, n_jobs, seed, churn, churn_schedule, churn_pairs_per_worker
+    )
+    div_tab, (h1, h2) = divisor_table(n_workers), harmonic_tables(n_workers)
+    runner = _get_runner(n_workers, bool(cancel_redundant), bool(size_dependent), replan)
+    out = runner(
+        tau,
+        tau_resc,
+        ev_t,
+        ev_w,
+        ev_up,
+        next_t,
+        jnp.asarray(arrivals, jnp.float32),
+        jnp.asarray(speeds),
+        jnp.full(s, 0 if n_batches is None else int(n_batches), jnp.int32),
+        jnp.float32(n_tasks),
+        jnp.float32(replan.blend if replan is not None else 0.5),
+        jnp.asarray(div_tab),
+        jnp.asarray(h1, jnp.float32),
+        jnp.asarray(h2, jnp.float32),
+    )
+    return EpochReport(
+        arrivals=arrivals,
+        starts=np.asarray(out["starts"], np.float64),
+        finishes=np.asarray(out["finishes"], np.float64),
+        n_batches_used=np.asarray(out["bs"]),
+        replication_used=np.asarray(out["rs"]),
+        worker_seconds=np.asarray(out["worker_seconds"], np.float64),
+        cancelled_seconds_saved=np.asarray(out["cancelled_seconds_saved"], np.float64),
+        n_worker_failures=np.asarray(out["n_worker_failures"]),
+        n_replicas_rescued=np.asarray(out["n_replicas_rescued"]),
+        n_replans=np.asarray(out["n_replans"]),
+        epoch_times=np.asarray(out["epoch_times"], np.float64)[:, 1:],
+    )
+
+
+def frontier_job_times_dynamic(
+    dist: ServiceTime,
+    n_workers: int,
+    candidates,
+    n_reps: int,
+    *,
+    seed: int = 0,
+    n_jobs: int = 16,
+    cancel_redundant: bool = False,
+    size_dependent: bool = True,
+    n_tasks: Optional[int] = None,
+    speeds: Optional[Sequence[float]] = None,
+    churn: Optional[ChurnProcess] = None,
+    churn_schedule: Optional[ChurnSchedule] = None,
+    churn_pairs_per_worker: int = 8,
+    replan: Optional[ReplanConfig] = None,
+) -> np.ndarray:
+    """Per-candidate job compute times under churn/hetero/replan dynamics.
+
+    The dynamic sibling of :func:`repro.cluster.vectorized.frontier_job_times`
+    and the workhorse behind ``plan_cluster(backend="jax")`` on dynamic
+    scenarios: every candidate B runs serial job streams of ``n_jobs`` jobs
+    (matching the Python engine's ``sample_job_times`` structure -- under
+    churn, consecutive jobs share a timeline, so samples come in correlated
+    streams) across ``ceil(n_reps / n_jobs)`` independent reps.  Returns
+    ``(len(candidates), >= n_reps)`` compute times; unfinished jobs are inf
+    (callers filter, like ``planner._frontier_stats``).
+    """
+    bs = np.asarray(list(candidates), dtype=np.int32)
+    if bs.size == 0:
+        raise ValueError("need at least one candidate B")
+    if (bs < 1).any() or (bs > n_workers).any():
+        raise ValueError(f"candidates must lie in [1, {n_workers}], got {bs.tolist()}")
+    speeds = _validate_common(n_workers, speeds, churn, churn_schedule, replan)
+    if n_tasks is None:
+        n_tasks = n_workers
+    n_jobs = max(1, min(int(n_jobs), int(n_reps)))
+    s = math.ceil(n_reps / n_jobs)
+    c = len(bs)
+    lanes = c * s
+    tau, tau_resc, ev_t, ev_w, ev_up, next_t = _prepare_lanes(
+        dist, n_workers, lanes, n_jobs, seed, churn, churn_schedule, churn_pairs_per_worker
+    )
+    div_tab, (h1, h2) = divisor_table(n_workers), harmonic_tables(n_workers)
+    runner = _get_runner(n_workers, bool(cancel_redundant), bool(size_dependent), replan)
+    out = runner(
+        tau,
+        tau_resc,
+        ev_t,
+        ev_w,
+        ev_up,
+        next_t,
+        jnp.zeros(n_jobs, jnp.float32),
+        jnp.asarray(speeds),
+        jnp.repeat(jnp.asarray(bs), s),
+        jnp.float32(n_tasks),
+        jnp.float32(replan.blend if replan is not None else 0.5),
+        jnp.asarray(div_tab),
+        jnp.asarray(h1, jnp.float32),
+        jnp.asarray(h2, jnp.float32),
+    )
+    t = np.asarray(out["finishes"], np.float64) - np.asarray(out["starts"], np.float64)
+    return t.reshape(c, s * n_jobs)

@@ -31,7 +31,7 @@ from ..core.service_time import Empirical, ServiceTime
 from ..core.simulator import JobTimeStats, stats_from_samples
 from . import events as ev
 from .control import OnlineReplanner
-from .workers import ChurnProcess, Worker, WorkerPool, draw_batch_time
+from .workers import ChurnProcess, ChurnSchedule, Worker, WorkerPool, draw_batch_time
 
 __all__ = [
     "Job",
@@ -81,7 +81,14 @@ class JobRecord:
 
 @dataclasses.dataclass
 class EngineReport:
-    """Aggregate outcome of one engine run."""
+    """Aggregate outcome of one engine run.
+
+    ``epoch_times`` are the applied churn-event times, i.e. the boundaries of
+    the run's churn epochs (the intervals on which the alive set is constant).
+    The jax epoch-scan backend (:mod:`repro.cluster.epoch_scan`) reports the
+    same fields per Monte-Carlo rep; :meth:`accounting` is the shared,
+    directly comparable summary the differential tests key on.
+    """
 
     records: List[JobRecord]
     worker_seconds: float  # total busy time actually burned
@@ -91,6 +98,7 @@ class EngineReport:
     n_replicas_rescued: int
     n_replans: int
     final_n_batches: int
+    epoch_times: tuple = ()  # applied churn-event times (epoch boundaries)
 
     @property
     def compute_times(self) -> np.ndarray:
@@ -99,6 +107,20 @@ class EngineReport:
     @property
     def response_times(self) -> np.ndarray:
         return np.array([r.response_time for r in self.records])
+
+    @property
+    def n_epochs(self) -> int:
+        return len(self.epoch_times) + 1
+
+    def accounting(self) -> dict:
+        """The invariant-bearing counters, keyed identically on both backends."""
+        return {
+            "worker_seconds": float(self.worker_seconds),
+            "cancelled_seconds_saved": float(self.cancelled_seconds_saved),
+            "n_worker_failures": int(self.n_worker_failures),
+            "n_replicas_rescued": int(self.n_replicas_rescued),
+            "n_replans": int(self.n_replans),
+        }
 
     def stats(self) -> JobTimeStats:
         t = self.compute_times
@@ -150,6 +172,11 @@ class ClusterEngine:
         Optional per-worker speed factors (heterogeneous cluster).
     churn:
         Optional fail/join process applied independently to every worker.
+    churn_schedule:
+        Optional explicit fail/join timeline (:class:`ChurnSchedule`) replayed
+        verbatim instead of sampling ``churn`` online -- the shared-epoch mode
+        the differential tests run both backends on.  Mutually exclusive with
+        ``churn``.
     controller:
         Optional :class:`OnlineReplanner`; fed observed task times, asked to
         replan after each job completes, and consulted at dispatch.
@@ -165,14 +192,21 @@ class ClusterEngine:
         size_dependent: bool = True,
         speeds: Optional[Sequence[float]] = None,
         churn: Optional[ChurnProcess] = None,
+        churn_schedule: Optional[ChurnSchedule] = None,
         controller: Optional[OnlineReplanner] = None,
     ):
+        if churn is not None and churn_schedule is not None:
+            raise ValueError("pass either churn (sampled online) or churn_schedule, not both")
+        if churn_schedule is not None and len(churn_schedule):
+            if min(churn_schedule.wids) < 0 or max(churn_schedule.wids) >= n_workers:
+                raise ValueError("churn_schedule worker ids must lie in [0, n_workers)")
         self.pool = WorkerPool(n_workers, speeds)
         self.rng = ev.RngStreams(seed)
         self.n_batches = n_batches
         self.cancel_redundant = cancel_redundant
         self.size_dependent = size_dependent
         self.churn = churn
+        self.churn_schedule = churn_schedule
         self.controller = controller
 
         self.events = ev.EventQueue()
@@ -187,6 +221,7 @@ class ClusterEngine:
         self._n_failures = 0
         self._n_rescued = 0
         self._n_jobs_expected = 0
+        self._epoch_times: List[float] = []  # applied churn events, in order
         self._ran = False
 
     # -- plan resolution ----------------------------------------------------
@@ -338,6 +373,7 @@ class ClusterEngine:
         if not worker.alive or worker.churn_epoch != epoch:
             return  # stale failure (scheduled before an earlier fail/join)
         self._n_failures += 1
+        self._epoch_times.append(self.clock.now)
         if worker.assignment is not None:
             job_id, batch = worker.assignment
             self._worker_seconds += self.clock.now - worker.busy_since
@@ -368,6 +404,7 @@ class ClusterEngine:
         worker = self.pool[wid]
         if worker.alive or worker.churn_epoch != epoch:
             return
+        self._epoch_times.append(self.clock.now)
         worker.alive = True
         worker.epoch += 1
         worker.churn_epoch += 1
@@ -391,6 +428,17 @@ class ClusterEngine:
             self.events.push(job.arrival, ev.JOB_ARRIVAL, job=job)
         for worker in self.pool:
             self._schedule_failure(worker)
+        if self.churn_schedule is not None:
+            # replay the explicit timeline: the k-th event of worker w expects
+            # churn_epoch k (transitions are schedule-driven only, so the
+            # staleness guards see exactly the epoch they were tagged with)
+            per_worker: Dict[int, int] = {}
+            sched = self.churn_schedule
+            for t, wid, up in zip(sched.times, sched.wids, sched.ups):
+                epoch = per_worker.get(wid, 0)
+                kind = ev.WORKER_JOIN if up else ev.WORKER_FAIL
+                self.events.push(t, kind, wid=wid, epoch=epoch)
+                per_worker[wid] = epoch + 1
 
         n_events = 0
         while self.events and n_events < max_events:
@@ -458,6 +506,7 @@ class ClusterEngine:
             n_replicas_rescued=self._n_rescued,
             n_replans=len(self.controller.history) if self.controller else 0,
             final_n_batches=last_b,
+            epoch_times=tuple(self._epoch_times),
         )
 
 
@@ -477,19 +526,65 @@ def sample_job_times(
     cancel_redundant: bool = False,
     n_tasks: Optional[int] = None,
     backend: str = "python",
+    speeds: Optional[Sequence[float]] = None,
+    churn: Optional[ChurnProcess] = None,
+    churn_schedule: Optional[ChurnSchedule] = None,
+    controller: Optional[OnlineReplanner] = None,
+    replan=None,
+    churn_pairs_per_worker: int = 8,
 ) -> np.ndarray:
-    """i.i.d. job compute-time samples from the engine.
+    """Job compute-time samples from the engine (i.i.d. when the cluster is
+    static; correlated through the shared churn timeline otherwise).
 
     ``backend="python"`` runs one event-driven engine with ``n_samples``
     identical jobs queued at t=0: under whole-cluster FIFO scheduling they
-    execute serially, so per-job compute times are independent draws -- the
-    engine-side analogue of ``simulate_balanced``.  ``backend="jax"`` draws
-    the same statistic from the vectorized replay of these semantics
-    (:func:`repro.cluster.vectorized.frontier_job_times`): one device call
-    instead of ``n_samples`` event loops, statistically identical (replica
-    cancellation does not change compute times).
+    execute serially -- the engine-side analogue of ``simulate_balanced``.
+    ``backend="jax"`` draws the same statistic from the vectorized replay of
+    these semantics: :func:`repro.cluster.vectorized.frontier_job_times` for
+    the static case, or the epoch scan
+    (:func:`repro.cluster.epoch_scan.simulate_epochs`) once any dynamic knob
+    -- ``speeds``, ``churn``, ``churn_schedule``, ``replan`` -- is set.
+
+    ``controller`` (an :class:`OnlineReplanner`) drives the Python engine;
+    ``replan`` (a :class:`~repro.cluster.epoch_scan.ReplanConfig`) drives the
+    jax path -- pass one matching the other for differential runs.
+
+    Churn-horizon caveat: the jax path truncates sampled ``churn`` after
+    ``churn_pairs_per_worker`` fail/join pairs per worker (each worker then
+    stays up), while the Python engine samples churn for the whole run --
+    for streams long enough to outlive the default horizon, raise
+    ``churn_pairs_per_worker`` (or pass an explicit ``churn_schedule``,
+    which both backends replay identically and truncate identically).
     """
+    dynamic = (
+        speeds is not None
+        or churn is not None
+        or churn_schedule is not None
+        or replan is not None
+    )
     if backend == "jax":
+        if controller is not None:
+            raise ValueError("backend='jax' takes replan=ReplanConfig(...), not controller")
+        if dynamic:
+            from .epoch_scan import simulate_epochs
+
+            rep = simulate_epochs(
+                dist,
+                n_workers,
+                n_batches,
+                np.zeros(n_samples),
+                1,
+                seed=seed,
+                cancel_redundant=cancel_redundant,
+                size_dependent=size_dependent,
+                n_tasks=n_tasks,
+                speeds=speeds,
+                churn=churn,
+                churn_schedule=churn_schedule,
+                replan=replan,
+                churn_pairs_per_worker=churn_pairs_per_worker,
+            )
+            return rep.compute_times[0]
         from .vectorized import frontier_job_times
 
         return frontier_job_times(
@@ -503,6 +598,10 @@ def sample_job_times(
         )[0]
     if backend != "python":
         raise ValueError(f"unknown backend {backend!r} (expected 'jax' or 'python')")
+    if replan is not None:
+        if controller is not None:
+            raise ValueError("pass either controller or replan, not both")
+        controller = replan.to_controller(n_workers)
     jobs = [
         Job(job_id=i, dist=dist, n_tasks=n_tasks if n_tasks is not None else n_workers)
         for i in range(n_samples)
@@ -513,6 +612,10 @@ def sample_job_times(
         n_batches=n_batches,
         cancel_redundant=cancel_redundant,
         size_dependent=size_dependent,
+        speeds=speeds,
+        churn=churn,
+        churn_schedule=churn_schedule,
+        controller=controller,
     )
     report = engine.run(jobs)
     return report.compute_times

@@ -22,9 +22,11 @@ Two entry points:
   replica otherwise), reproducing the engine's response times and its
   worker-seconds / cancelled-seconds-saved accounting.
 
-Not covered (fall back to the Python engine): fail/join churn, replica
-rescue, heterogeneous speeds, and online replanning -- dynamics whose
-control flow is data-dependent per event, not per job.
+Not covered here: fail/join churn, replica rescue, heterogeneous speeds, and
+online replanning live in :mod:`repro.cluster.epoch_scan`, which replays
+those dynamics as a ``lax.scan`` over churn epochs -- ``plan_cluster`` routes
+to it automatically when any dynamic knob is set, so no scenario falls back
+to the Python event engine anymore.
 
 Memory note: the padded frontier grid materializes
 ``(C, n_reps, B_pad, r_pad)`` draws.  For a full divisor frontier of N

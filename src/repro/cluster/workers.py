@@ -18,7 +18,14 @@ import numpy as np
 
 from ..core.service_time import ServiceTime
 
-__all__ = ["Worker", "WorkerPool", "ChurnProcess", "draw_batch_time"]
+__all__ = [
+    "Worker",
+    "WorkerPool",
+    "ChurnProcess",
+    "ChurnSchedule",
+    "sample_churn_schedule",
+    "draw_batch_time",
+]
 
 
 @dataclasses.dataclass
@@ -92,6 +99,80 @@ class ChurnProcess:
         if self.mean_downtime <= 0.0:
             return math.inf
         return float(rng.exponential(self.mean_downtime))
+
+
+@dataclasses.dataclass(frozen=True)
+class ChurnSchedule:
+    """An explicit, replayable fail/join timeline (the cluster's churn *epochs*).
+
+    Where :class:`ChurnProcess` describes churn as a stochastic law that the
+    engine samples while it runs, a schedule pins the realization: event k
+    flips worker ``wids[k]`` down (``ups[k]`` False) or up (True) at
+    ``times[k]``.  Both backends replay the same schedule -- the event engine
+    pushes the events onto its heap, the jax epoch-scan ``lax.scan``s over
+    them -- which is what lets the differential test harness compare churned
+    runs across backends on a shared timeline.
+
+    Per worker the events must alternate fail/join starting from alive, and
+    ``times`` must be globally sorted (ties allowed).
+    """
+
+    times: tuple
+    wids: tuple
+    ups: tuple
+
+    def __post_init__(self):
+        if not (len(self.times) == len(self.wids) == len(self.ups)):
+            raise ValueError("times/wids/ups must have equal length")
+        if any(t2 < t1 for t1, t2 in zip(self.times, self.times[1:])):
+            raise ValueError("schedule times must be sorted")
+        state: dict = {}
+        for t, w, up in zip(self.times, self.wids, self.ups):
+            if t < 0 or not math.isfinite(t):
+                raise ValueError(f"event times must be finite and >= 0, got {t}")
+            if bool(up) == state.get(w, True):
+                raise ValueError(f"worker {w}: fail/join events must alternate from alive")
+            state[w] = bool(up)
+
+    def __len__(self) -> int:
+        return len(self.times)
+
+
+def sample_churn_schedule(
+    churn: ChurnProcess,
+    n_workers: int,
+    rng: np.random.Generator,
+    pairs_per_worker: int = 8,
+) -> ChurnSchedule:
+    """One realization of ``churn``: the alternating-renewal timeline per worker.
+
+    Each worker alternates up ~ Exp(fail_rate) and down ~ Exp(mean_downtime)
+    intervals, exactly the law :class:`~repro.cluster.master.ClusterEngine`
+    samples online; after ``pairs_per_worker`` fail/join pairs the worker
+    stays up (the truncation both backends then share).  Zero ``fail_rate``
+    yields an empty schedule; zero ``mean_downtime`` makes failures permanent
+    (the join of each pair lands at infinity and is dropped).
+    """
+    events: list = []
+    for w in range(n_workers):
+        t = 0.0
+        for _ in range(pairs_per_worker):
+            up = churn.next_failure(rng)
+            if not math.isfinite(up):
+                break
+            t += up
+            events.append((t, w, False))
+            down = churn.downtime(rng)
+            if not math.isfinite(down):
+                break
+            t += down
+            events.append((t, w, True))
+    events.sort()
+    return ChurnSchedule(
+        times=tuple(e[0] for e in events),
+        wids=tuple(e[1] for e in events),
+        ups=tuple(e[2] for e in events),
+    )
 
 
 def draw_batch_time(

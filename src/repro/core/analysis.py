@@ -46,6 +46,30 @@ def feasible_B(n_workers: int) -> List[int]:
     return [b for b in range(1, n_workers + 1) if n_workers % b == 0]
 
 
+def divisor_table(n: int) -> np.ndarray:
+    """Rows m = 0..n of ``feasible_B(m)``, zero-padded to a rectangle.
+
+    The in-scan replanner of ``repro.cluster.epoch_scan`` indexes this by the
+    (traced) alive-worker count to re-pick B without leaving the device.
+    """
+    divs = [feasible_B(m) for m in range(n + 1)]
+    width = max((len(d) for d in divs), default=1)
+    tab = np.zeros((n + 1, max(width, 1)), dtype=np.int32)
+    for m, d in enumerate(divs):
+        tab[m, : len(d)] = d
+    return tab
+
+
+def harmonic_tables(n: int) -> tuple:
+    """(H_{(k,1)}, H_{(k,2)}) for k = 0..n as arrays (closed forms on device)."""
+    h1 = np.zeros(n + 1)
+    h2 = np.zeros(n + 1)
+    for k in range(1, n + 1):
+        h1[k] = h1[k - 1] + 1.0 / k
+        h2[k] = h2[k - 1] + 1.0 / k**2
+    return h1, h2
+
+
 # --------------------------------------------------------------------------
 # Exponential tasks  (§VI-A)
 # --------------------------------------------------------------------------

@@ -166,6 +166,12 @@ class RedundancyPlanner:
         size_dependent: bool = True,
         cancel_redundant: bool = False,
         backend: str = "jax",
+        speeds=None,
+        churn=None,
+        churn_schedule=None,
+        replan=None,
+        jobs_per_stream: int = 16,
+        churn_pairs_per_worker: int = 8,
     ) -> RedundancyPlan:
         """Pick (B, r) by *executing* each candidate on ``repro.cluster``.
 
@@ -176,24 +182,59 @@ class RedundancyPlanner:
         the cluster package loaded (cluster imports core).
 
         ``backend="jax"`` (default) scores the whole candidate frontier in
-        one batched device call via ``repro.cluster.vectorized``; it covers
-        exactly this method's scenario (single-job gangs, no churn).  Use
-        ``backend="python"`` to run the event-driven engine per candidate --
-        the path churn/replanning extensions of this method must take.
-        Replica cancellation reclaims worker-seconds but does not change
-        compute times, so both backends score the same statistic.
-        """
-        if backend == "jax":
-            from ..cluster.vectorized import frontier_job_times
+        batched device calls: the static grid kernel of
+        ``repro.cluster.vectorized`` when the cluster is static, or the
+        churn-epoch scan of ``repro.cluster.epoch_scan`` once any dynamic
+        knob is set -- ``speeds`` (heterogeneous workers), ``churn`` /
+        ``churn_schedule`` (fail/join dynamics with replica rescue), or
+        ``replan`` (a :class:`~repro.cluster.epoch_scan.ReplanConfig` running
+        the windowed online replanner while candidates are scored).  No
+        scenario falls back to the Python engine.  ``backend="python"`` runs
+        the event-driven engine per candidate over the same knobs -- the
+        reference the differential tests compare against.  Replica
+        cancellation reclaims worker-seconds but does not change compute
+        times, so both backends score the same statistic.
 
-            rows = frontier_job_times(
-                dist,
-                self.n_workers,
-                self.candidates,
-                n_reps,
-                seed=seed,
-                size_dependent=size_dependent,
-            )
+        Under churn, samples arrive in correlated serial streams of
+        ``jobs_per_stream`` jobs sharing one churn timeline (the Python
+        engine's structure); the static path keeps drawing i.i.d. jobs.
+        """
+        dynamic = (
+            speeds is not None
+            or churn is not None
+            or churn_schedule is not None
+            or replan is not None
+        )
+        if backend == "jax":
+            if dynamic:
+                from ..cluster.epoch_scan import frontier_job_times_dynamic
+
+                rows = frontier_job_times_dynamic(
+                    dist,
+                    self.n_workers,
+                    self.candidates,
+                    n_reps,
+                    seed=seed,
+                    n_jobs=jobs_per_stream,
+                    cancel_redundant=cancel_redundant,
+                    size_dependent=size_dependent,
+                    speeds=speeds,
+                    churn=churn,
+                    churn_schedule=churn_schedule,
+                    churn_pairs_per_worker=churn_pairs_per_worker,
+                    replan=replan,
+                )
+            else:
+                from ..cluster.vectorized import frontier_job_times
+
+                rows = frontier_job_times(
+                    dist,
+                    self.n_workers,
+                    self.candidates,
+                    n_reps,
+                    seed=seed,
+                    size_dependent=size_dependent,
+                )
         elif backend == "python":
             from ..cluster.master import sample_job_times
 
@@ -206,6 +247,10 @@ class RedundancyPlanner:
                     seed=seed + i,
                     size_dependent=size_dependent,
                     cancel_redundant=cancel_redundant,
+                    speeds=speeds,
+                    churn=churn,
+                    churn_schedule=churn_schedule,
+                    replan=replan,
                 )
                 for i, b in enumerate(self.candidates)
             ]
@@ -299,6 +344,12 @@ def plan_sweep(
     cancel_redundant: bool = False,
     backend: str = "jax",
     candidates: Iterable[int] | None = None,
+    speeds=None,
+    churn=None,
+    churn_schedule=None,
+    replan=None,
+    jobs_per_stream: int = 16,
+    churn_pairs_per_worker: int = 8,
 ) -> list:
     """Score redundancy frontiers for a (distribution x worker-budget) grid.
 
@@ -308,6 +359,14 @@ def plan_sweep(
     sweep that would take ``len(dists) * len(budgets) * len(candidates)``
     Python event loops is a handful of vectorized kernels -- the regime the
     §VI/§VII trade-off studies live in.
+
+    ``churn`` / ``churn_schedule`` / ``replan`` (plus the
+    ``jobs_per_stream`` / ``churn_pairs_per_worker`` stream-shape knobs)
+    extend the sweep to dynamic scenarios, forwarded to every grid point's
+    :meth:`plan_cluster` (scored on the churn-epoch scan under
+    ``backend="jax"``).  ``speeds`` takes either one per-worker sequence
+    (every budget must then equal its length) or a callable
+    ``budget -> speeds`` for heterogeneous grids.
 
     Grid point (i, j) uses seed ``seed + i * len(budgets) + j``; the
     property-test suite relies on that derivation to check each sweep entry
@@ -330,6 +389,12 @@ def plan_sweep(
                     size_dependent=size_dependent,
                     cancel_redundant=cancel_redundant,
                     backend=backend,
+                    speeds=speeds(n_workers) if callable(speeds) else speeds,
+                    churn=churn,
+                    churn_schedule=churn_schedule,
+                    replan=replan,
+                    jobs_per_stream=jobs_per_stream,
+                    churn_pairs_per_worker=churn_pairs_per_worker,
                 )
             )
         plans.append(row)

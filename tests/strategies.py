@@ -1,0 +1,145 @@
+"""Shared scenario generators for the cluster / backend / planner suites.
+
+One place to draw service-time distributions, worker setups (count + optional
+heterogeneous speeds), churn processes and explicit churn schedules, arrival
+processes, and candidate frontiers -- instead of every test file hand-rolling
+its own configs.  Everything composes from the ``st`` surface that both real
+hypothesis and the seeded fallback (``tests/_hypothesis_compat.py``) provide
+(``sampled_from`` / ``floats`` / ``tuples`` / ``lists`` / ``map`` /
+``flatmap``), so property tests run identically with or without the test
+extra installed.
+
+Two layers:
+
+  * hypothesis strategies (``service_dists()``, ``worker_setups()``, ...)
+    for ``@given`` property tests;
+  * seeded plain helpers (``seeded_schedule()``, ``seeded_speeds()``, ...)
+    for deterministic differential tests that need one shared realization
+    on both backends.
+"""
+import numpy as np
+
+try:
+    from hypothesis import strategies as st
+except ModuleNotFoundError:  # test extra not installed: seeded fallback engine
+    from _hypothesis_compat import st
+
+from repro.cluster.workers import ChurnProcess, ChurnSchedule, sample_churn_schedule
+from repro.core import analysis
+from repro.core.service_time import Exponential, Pareto, ShiftedExponential
+
+__all__ = [
+    "service_dists",
+    "light_tailed_dists",
+    "worker_counts",
+    "worker_setups",
+    "churn_processes",
+    "arrival_grids",
+    "objectives",
+    "frontier",
+    "seeded_speeds",
+    "seeded_schedule",
+]
+
+
+# --------------------------------------------------------------------------
+# hypothesis strategies
+# --------------------------------------------------------------------------
+
+
+def service_dists(include_heavy: bool = True):
+    """A fitted-family service-time distribution with sane parameters.
+
+    Pareto shapes stay above 1.6 so means/variances used in 3-sigma
+    comparisons exist; pass ``include_heavy=False`` where heavy tails would
+    make Monte-Carlo error bounds vacuous.
+    """
+    fams = [
+        st.floats(0.5, 3.0).map(lambda mu: Exponential(mu=mu)),
+        st.tuples(st.floats(0.2, 2.0), st.floats(0.5, 3.0)).map(
+            lambda p: ShiftedExponential(delta=p[0], mu=p[1])
+        ),
+    ]
+    if include_heavy:
+        fams.append(
+            st.tuples(st.floats(0.5, 2.0), st.floats(1.6, 3.0)).map(
+                lambda p: Pareto(sigma=p[0], alpha=p[1])
+            )
+        )
+    return st.sampled_from(fams).flatmap(lambda s: s)
+
+
+def light_tailed_dists():
+    return service_dists(include_heavy=False)
+
+
+def worker_counts(min_workers: int = 4, max_workers: int = 12):
+    """Even cluster sizes (rich divisor frontiers, affordable engine runs)."""
+    return st.sampled_from(list(range(min_workers, max_workers + 1, 2)))
+
+
+def worker_setups(min_workers: int = 4, max_workers: int = 12):
+    """(n_workers, speeds) with speeds None (homogeneous) or a per-worker tuple."""
+
+    def mk(n):
+        return st.tuples(
+            st.just(n),
+            st.sampled_from([False, True]).flatmap(
+                lambda het: st.lists(st.floats(0.5, 2.0), min_size=n, max_size=n).map(tuple)
+                if het
+                else st.just(None)
+            ),
+        )
+
+    return worker_counts(min_workers, max_workers).flatmap(mk)
+
+
+def churn_processes(max_fail_rate: float = 0.08):
+    """Fail/join dynamics mild enough that jobs still complete."""
+    return st.tuples(st.floats(0.01, max_fail_rate), st.floats(0.5, 3.0)).map(
+        lambda p: ChurnProcess(fail_rate=p[0], mean_downtime=p[1])
+    )
+
+
+def arrival_grids(max_jobs: int = 24):
+    """Evenly spaced arrival vectors (gap 0 = everything queued at t=0)."""
+    return st.tuples(st.integers(4, max_jobs), st.floats(0.0, 4.0)).map(
+        lambda p: np.arange(p[0]) * p[1]
+    )
+
+
+def objectives():
+    return st.sampled_from(["mean", "cov", "blend"])
+
+
+# --------------------------------------------------------------------------
+# seeded plain helpers (shared realizations for differential tests)
+# --------------------------------------------------------------------------
+
+
+def frontier(n_workers: int):
+    """The feasible candidate frontier B | N (plain list, not a strategy)."""
+    return analysis.feasible_B(n_workers)
+
+
+def seeded_speeds(n_workers: int, seed: int = 0, lo: float = 0.5, hi: float = 2.0):
+    """A reproducible heterogeneous speed vector."""
+    rng = np.random.default_rng(seed)
+    return tuple(float(s) for s in rng.uniform(lo, hi, size=n_workers))
+
+
+def seeded_schedule(
+    n_workers: int,
+    seed: int = 0,
+    fail_rate: float = 0.05,
+    mean_downtime: float = 1.0,
+    pairs_per_worker: int = 4,
+) -> ChurnSchedule:
+    """One shared churn realization both backends replay verbatim."""
+    rng = np.random.default_rng(seed)
+    return sample_churn_schedule(
+        ChurnProcess(fail_rate=fail_rate, mean_downtime=mean_downtime),
+        n_workers,
+        rng,
+        pairs_per_worker=pairs_per_worker,
+    )

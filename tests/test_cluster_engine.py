@@ -3,6 +3,13 @@ import jax
 import numpy as np
 import pytest
 
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ModuleNotFoundError:  # test extra not installed: seeded fallback engine
+    from _hypothesis_compat import given, settings, st
+
+import strategies as scn
 from repro.cluster import (
     ChurnProcess,
     ClusterEngine,
@@ -27,6 +34,51 @@ def test_deterministic_under_fixed_seed():
     assert np.array_equal(a, b)
     assert not np.array_equal(a, c)
     assert np.isfinite(a).all()
+
+
+@settings(max_examples=4, deadline=None)
+@given(
+    dist=scn.light_tailed_dists(),
+    setup=scn.worker_setups(4, 8),
+    seed=st.integers(0, 99),
+)
+def test_deterministic_on_generated_scenarios(dist, setup, seed):
+    """Shared-strategy scenarios (any fitted family, optional hetero speeds)
+    replay bit-for-bit under a fixed seed."""
+    n, speeds = setup
+    b = max(1, n // 2)
+    runs = []
+    for _ in range(2):
+        jobs = [Job(job_id=i, dist=dist, n_tasks=n) for i in range(10)]
+        runs.append(ClusterEngine(n, seed=seed, n_batches=b, speeds=speeds).run(jobs))
+    assert np.array_equal(runs[0].compute_times, runs[1].compute_times)
+    assert runs[0].worker_seconds == runs[1].worker_seconds
+
+
+def test_churn_schedule_replay_and_epoch_fields():
+    """An explicit ChurnSchedule replays verbatim, and the report exposes the
+    applied epoch boundaries + accounting (the cross-backend surface)."""
+    sched = scn.seeded_schedule(8, seed=1, fail_rate=0.05, mean_downtime=1.0, pairs_per_worker=2)
+    assert len(sched) > 0
+    jobs = [Job(job_id=i, dist=Pareto(1.0, 2.2), n_tasks=8) for i in range(40)]
+    rep = ClusterEngine(8, seed=2, n_batches=4, churn_schedule=sched).run(jobs)
+    jobs2 = [Job(job_id=i, dist=Pareto(1.0, 2.2), n_tasks=8) for i in range(40)]
+    rep2 = ClusterEngine(8, seed=2, n_batches=4, churn_schedule=sched).run(jobs2)
+    assert np.array_equal(rep.compute_times, rep2.compute_times)
+    assert rep.epoch_times == rep2.epoch_times
+    # boundaries are applied in order and come from the schedule
+    assert list(rep.epoch_times) == sorted(rep.epoch_times)
+    assert set(rep.epoch_times) <= set(sched.times)
+    assert rep.n_epochs == len(rep.epoch_times) + 1
+    assert rep.n_worker_failures == sum(1 for u in sched.ups if not u)
+    acc = rep.accounting()
+    assert set(acc) == {
+        "worker_seconds",
+        "cancelled_seconds_saved",
+        "n_worker_failures",
+        "n_replicas_rescued",
+        "n_replans",
+    }
 
 
 def test_full_report_replays_exactly():

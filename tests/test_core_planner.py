@@ -2,9 +2,27 @@
 import numpy as np
 import pytest
 
+try:
+    from hypothesis import given, settings
+except ModuleNotFoundError:  # test extra not installed: seeded fallback engine
+    from _hypothesis_compat import given, settings
+
+import strategies as scn
 from repro.core import analysis, traces
 from repro.core.planner import RedundancyPlanner, fit_service_time
 from repro.core.service_time import Empirical, Exponential, Pareto, ShiftedExponential
+
+
+@settings(max_examples=8, deadline=None)
+@given(dist=scn.service_dists(), n=scn.worker_counts())
+def test_plan_picks_frontier_argmin_on_generated_dists(dist, n):
+    """Any shared-strategy scenario: the plan's B sits at the argmin of its
+    own closed-form frontier, over exactly the feasible divisor set."""
+    plan = RedundancyPlanner(n).plan(dist, objective="mean")
+    assert plan.frontier_B == tuple(analysis.feasible_B(n))
+    finite = [m for m in plan.frontier_mean if np.isfinite(m)]
+    assert plan.predicted_mean == min(finite)
+    assert plan.n_batches * plan.replication <= n
 
 
 def test_plan_exponential_endpoints():

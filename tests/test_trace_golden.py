@@ -1,0 +1,103 @@
+"""Trace-driven golden regression: §VII planning summary stats, pinned.
+
+``core.traces.synthetic_google_jobs`` -> ``plan_sweep`` on both backends,
+with the resulting (B*, frontier means) pinned to a committed golden file.
+The nightly bench measures the §VII trace *speedup*; this test makes sure the
+underlying planning numbers cannot silently drift on every PR.
+
+Tolerances (documented contract):
+
+  * chosen ``B*`` and replication are pinned **exactly** -- both backends are
+    seeded and deterministic, so any change here is a semantic change;
+  * ``frontier_mean`` entries are pinned to ``rtol=5e-3`` -- wide enough for
+    cross-platform float reassociation (BLAS, accelerator math) but far
+    tighter than any statistical drift a semantics change would cause
+    (Monte-Carlo error at these sample sizes is ~2-5%).
+
+Regenerate (after an *intentional* semantic change) with:
+
+    PYTHONPATH=src:tests python tests/test_trace_golden.py --regen
+"""
+import json
+import pathlib
+
+import numpy as np
+
+from repro.core import traces
+from repro.core.planner import plan_sweep
+from repro.core.service_time import Empirical
+
+GOLDEN = pathlib.Path(__file__).parent / "golden" / "trace_plan_sweep.json"
+
+# job1: exponential family (plans at full parallelism); job6: heavy tail
+# (plans real redundancy) -- one of each keeps the regression surface small
+# enough to run on every PR while still covering both §VII regimes.
+TRACE_JOBS = ("job1", "job6")
+BUDGETS = (10,)
+N_REPS = 256
+SEED = 0
+
+
+def _summarize() -> dict:
+    jobs = {j.name: j for j in traces.synthetic_google_jobs()}
+    dists = [Empirical(samples=tuple(float(x) for x in jobs[n].task_times)) for n in TRACE_JOBS]
+    out = {}
+    for backend in ("jax", "python"):
+        plans = plan_sweep(
+            dists, list(BUDGETS), "mean", n_reps=N_REPS, seed=SEED, backend=backend
+        )
+        rows = {}
+        for name, row in zip(TRACE_JOBS, plans):
+            rows[name] = [
+                {
+                    "n_workers": p.n_workers,
+                    "B": p.n_batches,
+                    "replication": p.replication,
+                    "frontier_B": list(p.frontier_B),
+                    "frontier_mean": [float(m) for m in p.frontier_mean],
+                }
+                for p in row
+            ]
+        out[backend] = rows
+    return out
+
+
+def test_trace_plan_sweep_matches_golden():
+    assert GOLDEN.exists(), (
+        f"golden file missing: {GOLDEN} -- generate it with "
+        "`PYTHONPATH=src:tests python tests/test_trace_golden.py --regen` and commit it"
+    )
+    golden = json.loads(GOLDEN.read_text())
+    current = _summarize()
+    assert set(current) == set(golden)
+    for backend in golden:
+        for name in golden[backend]:
+            for cur, ref in zip(current[backend][name], golden[backend][name]):
+                ctx = (backend, name, ref["n_workers"])
+                assert cur["n_workers"] == ref["n_workers"], ctx
+                assert cur["B"] == ref["B"], ctx
+                assert cur["replication"] == ref["replication"], ctx
+                assert cur["frontier_B"] == ref["frontier_B"], ctx
+                np.testing.assert_allclose(
+                    cur["frontier_mean"], ref["frontier_mean"], rtol=5e-3, err_msg=str(ctx)
+                )
+
+
+def test_trace_golden_covers_both_regimes():
+    """Independent of the pinned numbers: the heavy-tail job must actually
+    use redundancy (B* < N) and the exponential job must not (B* = N)."""
+    golden = json.loads(GOLDEN.read_text()) if GOLDEN.exists() else _summarize()
+    for backend in golden:
+        assert golden[backend]["job1"][0]["B"] == BUDGETS[0]
+        assert golden[backend]["job6"][0]["B"] < BUDGETS[0]
+
+
+if __name__ == "__main__":
+    import sys
+
+    if "--regen" in sys.argv:
+        GOLDEN.parent.mkdir(parents=True, exist_ok=True)
+        GOLDEN.write_text(json.dumps(_summarize(), indent=2) + "\n")
+        print(f"wrote {GOLDEN}")
+    else:
+        print(__doc__)

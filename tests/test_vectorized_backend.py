@@ -17,6 +17,7 @@ try:
 except ModuleNotFoundError:  # test extra not installed: seeded fallback engine
     from _hypothesis_compat import given, settings, st
 
+import strategies as scn
 from repro.cluster import ClusterEngine, Job, sample_job_times, simulate_fifo
 from repro.cluster.vectorized import frontier_job_times
 from repro.core import analysis, simulator
@@ -172,8 +173,8 @@ def test_plan_cluster_jax_agrees_with_closed_form():
 
 @settings(max_examples=6, deadline=None)
 @given(
-    n=st.sampled_from([4, 6, 8, 10]),
-    objective=st.sampled_from(["mean", "cov", "blend"]),
+    n=scn.worker_counts(4, 10),
+    objective=scn.objectives(),
     seed=st.integers(0, 50),
 )
 def test_plan_sweep_matches_per_candidate_plan_cluster(n, objective, seed):
