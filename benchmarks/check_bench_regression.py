@@ -11,17 +11,22 @@ vary with the runner).  Two properties are load-bearing and fail the build:
      speeds vary, ratios of times on the same machine much less),
   2. planned redundancy keeps its heavy-tail speedup
      (``redundancy._summary.max_heavy_speedup`` does not regress beyond a
-     fractional tolerance of the baseline), and
-  3. the churn-epoch scan keeps its edge on the *churned/heterogeneous*
+     fractional tolerance of the baseline),
+  3. the epoch-scan step loop keeps its edge on the *churned/heterogeneous*
      sweep (``dynamic.min_speedup_warm`` above its own floor -- this is the
-     sweep that used to fall back to the Python engine entirely).
+     sweep that used to fall back to the Python engine entirely, and the
+     de-serialized step loop raised its floor from 3x to 25x), and
+  4. the dynamic path's cold start stays interactive
+     (``dynamic.dists.*.jax_seconds_cold``, first-call compile+run, below an
+     absolute ceiling -- compile-time regressions hide behind warm timings).
 
 Floors are env-overridable so a one-off noisy runner can be diagnosed
 without editing the workflow:
 
   BENCH_MIN_JAX_SPEEDUP          absolute floor on backend.min_speedup_warm (10)
   BENCH_HEAVY_TOLERANCE          fraction of baseline heavy speedup to keep (0.5)
-  BENCH_MIN_JAX_DYNAMIC_SPEEDUP  absolute floor on dynamic.min_speedup_warm (3)
+  BENCH_MIN_JAX_DYNAMIC_SPEEDUP  absolute floor on dynamic.min_speedup_warm (25)
+  BENCH_MAX_JAX_DYNAMIC_COLD_SECONDS  ceiling on dynamic cold seconds (4.0)
 """
 from __future__ import annotations
 
@@ -33,7 +38,8 @@ import sys
 
 DEFAULT_MIN_JAX_SPEEDUP = 10.0
 DEFAULT_HEAVY_TOLERANCE = 0.5
-DEFAULT_MIN_JAX_DYNAMIC_SPEEDUP = 3.0
+DEFAULT_MIN_JAX_DYNAMIC_SPEEDUP = 25.0
+DEFAULT_MAX_JAX_DYNAMIC_COLD_SECONDS = 4.0
 
 
 def check(
@@ -42,6 +48,7 @@ def check(
     min_jax_speedup: float,
     heavy_tolerance: float,
     min_jax_dynamic_speedup: float = DEFAULT_MIN_JAX_DYNAMIC_SPEEDUP,
+    max_jax_dynamic_cold_seconds: float = DEFAULT_MAX_JAX_DYNAMIC_COLD_SECONDS,
 ) -> list:
     """Return a list of human-readable failure strings (empty = gate passes)."""
     failures = []
@@ -75,6 +82,18 @@ def check(
             f"(baseline recorded {base_dyn:.1f}x)"
         )
 
+    cold = [
+        d.get("jax_seconds_cold")
+        for d in current.get("dynamic", {}).get("dists", {}).values()
+    ]
+    cold = [c for c in cold if c is not None]
+    if cold and max(cold) > max_jax_dynamic_cold_seconds:
+        failures.append(
+            f"dynamic cold start regressed: {max(cold):.2f}s "
+            f"> ceiling {max_jax_dynamic_cold_seconds:.2f}s "
+            f"(compile-time regressions hide behind warm timings)"
+        )
+
     return failures
 
 
@@ -95,8 +114,16 @@ def main() -> int:
     min_jax_dynamic = float(
         os.environ.get("BENCH_MIN_JAX_DYNAMIC_SPEEDUP", DEFAULT_MIN_JAX_DYNAMIC_SPEEDUP)
     )
+    max_dynamic_cold = float(
+        os.environ.get(
+            "BENCH_MAX_JAX_DYNAMIC_COLD_SECONDS", DEFAULT_MAX_JAX_DYNAMIC_COLD_SECONDS
+        )
+    )
 
-    failures = check(current, baseline, min_jax_speedup, heavy_tolerance, min_jax_dynamic)
+    failures = check(
+        current, baseline, min_jax_speedup, heavy_tolerance, min_jax_dynamic,
+        max_dynamic_cold,
+    )
 
     cur_b, base_b = current["backend"], baseline["backend"]
     print(
@@ -120,6 +147,16 @@ def main() -> int:
             f"(baseline {base_d['min_speedup_warm']:.1f}x"
             f"..{base_d['max_speedup_warm']:.1f}x, floor {min_jax_dynamic:.1f}x)"
         )
+        cold = [
+            d.get("jax_seconds_cold") for d in cur_d.get("dists", {}).values()
+        ]
+        cold = [c for c in cold if c is not None]
+        if cold:
+            print(
+                f"dynamic cold start: {max(cold):.2f}s "
+                f"(ceiling {max_dynamic_cold:.2f}s); "
+                f"peak RSS {cur_d.get('peak_rss_mb', float('nan')):.0f} MB"
+            )
 
     if failures:
         for f in failures:

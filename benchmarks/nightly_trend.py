@@ -1,0 +1,92 @@
+"""Nightly-bench trend summary: bench JSONs -> one markdown table.
+
+First step toward the ROADMAP's dashboard item: the nightly workflow keeps a
+90-day series of ``cluster_bench.py`` artifacts; this script folds any number
+of those JSONs (a directory of downloaded artifacts, or just the fresh run)
+into a compact markdown table of the load-bearing series -- the jax speed
+edges (static + dynamic sweeps), the dynamic cold start, and the heavy-tail
+redundancy speedup -- sorted by each file's recorded timestamp-ish name.
+
+Usage::
+
+    python benchmarks/nightly_trend.py artifacts_dir_or_json [more ...]
+    python benchmarks/nightly_trend.py bench.json >> "$GITHUB_STEP_SUMMARY"
+
+For the full trend, download the artifact series first (e.g. ``gh run
+download --name cluster-bench-nightly -D artifacts/``) and point this at the
+directory.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+
+def _load(paths: list[pathlib.Path]) -> list[tuple[str, dict]]:
+    rows = []
+    for p in paths:
+        candidates = sorted(p.glob("**/*.json")) if p.is_dir() else [p]
+        for f in candidates:
+            try:
+                rows.append((f.stem, json.loads(f.read_text())))
+            except (OSError, json.JSONDecodeError) as ex:
+                print(f"skipping {f}: {ex}", file=sys.stderr)
+    return rows
+
+
+def _get(d: dict, *keys, default=None):
+    for k in keys:
+        if not isinstance(d, dict) or k not in d:
+            return default
+        d = d[k]
+    return d
+
+
+def trend_table(rows: list[tuple[str, dict]]) -> str:
+    """Markdown table over the load-bearing nightly series."""
+    header = (
+        "| run | static edge (min..max) | dynamic edge (min..max) "
+        "| dynamic cold (s) | peak RSS (MB) | heavy-tail speedup |\n"
+        "|---|---|---|---|---|---|"
+    )
+    lines = [header]
+    for name, d in rows:
+        b = _get(d, "backend") or {}
+        dy = _get(d, "dynamic") or {}
+        heavy = _get(d, "redundancy", "_summary", "max_heavy_speedup")
+
+        def fmt(v, spec=".1f", suffix=""):
+            return format(v, spec) + suffix if isinstance(v, (int, float)) else "-"
+
+        lines.append(
+            "| {} | {}..{} | {}..{} | {} | {} | {} |".format(
+                name,
+                fmt(b.get("min_speedup_warm"), ".0f", "x"),
+                fmt(b.get("max_speedup_warm"), ".0f", "x"),
+                fmt(dy.get("min_speedup_warm"), ".0f", "x"),
+                fmt(dy.get("max_speedup_warm"), ".0f", "x"),
+                fmt(dy.get("max_cold_seconds"), ".2f"),
+                fmt(dy.get("peak_rss_mb"), ".0f"),
+                fmt(heavy, ".2f", "x"),
+            )
+        )
+    return "\n".join(lines)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("paths", nargs="+", type=pathlib.Path, help="bench JSONs or dirs")
+    args = ap.parse_args()
+    rows = _load(args.paths)
+    if not rows:
+        print("no bench JSONs found", file=sys.stderr)
+        return 1
+    print("### cluster bench trend\n")
+    print(trend_table(rows))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -27,10 +27,12 @@ Public surface:
     ``plan_cluster(backend="jax")`` / ``plan_sweep``
   * epoch_scan  -- batched jax replay of the *dynamic* semantics: fail/join
     churn with replica rescue, heterogeneous speeds, and windowed online
-    replanning as a ``lax.scan`` over churn epochs (``simulate_epochs``,
-    ``frontier_job_times_dynamic``) -- the path ``plan_cluster`` takes when
-    any dynamic knob is set, so ``backend="jax"`` no longer falls back to
-    the Python engine for churned/heterogeneous scenarios
+    replanning as a bounded event-step loop (``simulate_epochs``,
+    ``frontier_job_times_dynamic``; bucketed compiles, ``rep_chunk``
+    memory chunking, ``devices`` sharding, float64 lanes) -- the path
+    ``plan_cluster`` takes when any dynamic knob is set, so
+    ``backend="jax"`` never falls back to the Python engine for
+    churned/heterogeneous scenarios
 """
 from . import control, epoch_scan, events, master, vectorized, workers
 from .control import OnlineReplanner

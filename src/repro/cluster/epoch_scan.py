@@ -4,25 +4,38 @@ This module closes the vectorization gap left by :mod:`repro.cluster.vectorized`
 (which covers the static case): it replays the *dynamic* semantics of the
 event-driven :class:`~repro.cluster.master.ClusterEngine` -- worker fail/join
 churn, replica rescue, per-worker speed factors, FIFO multi-job dispatch, and
-windowed online replanning -- as a ``lax.scan`` over **churn epochs**, batched
-over Monte-Carlo reps (and, for planning, over a whole candidate frontier).
+windowed online replanning -- as a bounded device loop, batched over
+Monte-Carlo reps (and, for planning, over a whole candidate frontier).
 
 The structural insight making this vectorizable: between two churn events the
 alive set is constant, so no replica can die and no rescue can be requested --
 every job that starts and ends inside an epoch is a pure masked
 ``max_b min_r`` cover computation (the shared
 :func:`~repro.core.simulator.gang_cover_times` semantics), and the only
-sequential state is the one job straddling the boundary.  The scan therefore
-carries the in-flight job's padded ``(B_pad, r_pad)`` slot grid (slot ->
-worker id, start, scheduled end) across epochs; each step
+sequential state is the one job straddling the boundary.  Earlier revisions
+expressed this as a ``lax.scan`` over churn epochs whose steps ran
+progress-gated ``while_loop``s for rescue dispatch and commit/dispatch; under
+``vmap`` those loops serialize -- every lane waits for the slowest lane's trip
+count at every scan step.  The current formulation removes the inner loops
+entirely: one flat, trip-count-static step loop in which **each step performs
+exactly one action** --
 
-  1. applies one fail/join event (killing the dead worker's replica and
-     queueing a rescue when a batch loses its last live replica),
-  2. dispatches pending rescues onto the earliest-freeing alive workers
-     (a bounded ``fori_loop`` -- at most one rescue per batch per epoch),
-  3. runs a ``while_loop`` that alternately *commits* completions up to the
-     epoch's end (batch wins, sibling cancellation accounting, job finishes)
-     and *dispatches* queued jobs once every alive worker is free.
+  * *rescue*: dispatch the oldest pending rescue onto the earliest-freeing
+    alive worker (engine: first free worker, FIFO rescue queue), or
+  * *commit + dispatch*: commit batch wins up to the next churn boundary
+    (batch wins, sibling cancellation accounting, job finishes, replanner
+    observations) and gang-dispatch the next queued job, or
+  * *commit + boundary*: apply one fail/join event (replica kill, rescue
+    queueing, the engine's sim-over churn truncation).
+
+The step budget is static (``#events + #jobs + rescue allowance``), chunked
+under an early-exit ``while_loop`` so finished lanes stop paying for churn
+noise past their last job.  State is O(workers) -- per-worker gang assignment
+vectors plus one rescue slot per batch -- instead of the previous
+O(workers^2) slot grid, which shrinks both the compiled graph and the
+per-step work.  Shapes are padded to buckets (workers to multiples of 4,
+jobs to multiples of 32, events and lanes to powers of two), so frontier/grid
+sweeps of nearby sizes share one compile (see :func:`runner_cache_stats`).
 
 Replanning mirrors :class:`~repro.cluster.control.OnlineReplanner` in jax: a
 ring buffer of censoring-tagged task-time observations, maximum-likelihood
@@ -36,9 +49,16 @@ off)`` holds per rep in churn-free runs, and the report exposes the same
 counter fields (:meth:`EpochReport.accounting`) as
 :class:`~repro.cluster.master.EngineReport` for the differential tests.
 
-Precision note: the scan runs in float32 on absolute simulation time, so keep
-timescales moderate (the engine runs float64); tests compare with ~1e-4
-relative tolerances where the engine asserts 1e-9.
+Reproducibility contract: every lane (one Monte-Carlo rep of one candidate)
+derives its draws host-side from
+``numpy.random.default_rng(SeedSequence((seed, global_lane_index)))`` -- a
+pure function of the global lane index -- so results are bit-identical
+whether reps run in one call or chunked (``rep_chunk``) and whether lanes run
+on one device or sharded across several (``devices``).
+
+Precision: lanes default to float32 absolute simulation time; pass
+``dtype="float64"`` (with jax x64 enabled) for long-horizon workloads where
+float32 quantizes large arrival offsets -- the engine always runs float64.
 """
 from __future__ import annotations
 
@@ -60,6 +80,8 @@ __all__ = [
     "EpochReport",
     "simulate_epochs",
     "frontier_job_times_dynamic",
+    "runner_cache_stats",
+    "clear_runner_cache",
 ]
 
 
@@ -142,19 +164,86 @@ class EpochReport:
 
 
 # --------------------------------------------------------------------------
-# the per-lane scan (one Monte-Carlo rep of one candidate), vmapped + jitted
+# shape buckets and the bucketed jit cache
 # --------------------------------------------------------------------------
 
 _RUNNERS: dict = {}
+_STEP_CHUNK = 16  # steps per early-exit check
 
 
-def _get_runner(n: int, cancel: bool, size_dep: bool, replan: Optional[ReplanConfig]):
-    key = (n, cancel, size_dep, replan)
-    if key in _RUNNERS:
-        return _RUNNERS[key]
+def _pow2(x: int) -> int:
+    """Smallest power of two >= max(x, 1): the shape-bucket rounding."""
+    return 1 << (max(int(x), 1) - 1).bit_length()
 
+
+def _bucket_workers(n: int) -> int:
+    """Worker counts bucket to multiples of 4: most per-step work is O(n),
+    so a finer granularity than power-of-two buys back real element count
+    (16 -> 12 for the common mid-size clusters) at a few extra compiles."""
+    return max(4, -(-int(n) // 4) * 4)
+
+
+def runner_cache_stats() -> dict:
+    """Compiled-runner cache: ``{bucket_key: number_of_jit_cache_entries}``.
+
+    One entry per *shape bucket* (padded worker/job/event/lane sizes plus the
+    static cancel/size-dep/replan/dtype/devices knobs).  The jit cache size of
+    each runner counts actual compiles (one per distinct lane-batch shape);
+    the regression test asserts a dynamic ``plan_sweep`` grid stays at one.
+    """
+    return {key: fn._cache_size() for key, fn in _RUNNERS.items()}
+
+
+def clear_runner_cache() -> None:
+    """Drop all cached compiled runners (test/bench isolation helper)."""
+    _RUNNERS.clear()
+
+
+@dataclasses.dataclass(frozen=True)
+class _RunnerCfg:
+    """Static configuration of one compiled runner (the bucket key)."""
+
+    n: int  # padded worker count
+    jobs_pad: int
+    ev_pad: int
+    resc_cap: int
+    n_chunks: int
+    cancel: bool
+    size_dep: bool
+    replan: Optional[ReplanConfig]
+    dtype: str
+    devices: int
+    # False drops the per-event epoch-times buffer and the per-job B/r
+    # records plus their per-step scatters; the cheap scalar counters stay.
+    # The plan_cluster/plan_sweep hot path only reads starts/finishes.
+    full_outputs: bool = True
+
+
+# --------------------------------------------------------------------------
+# the per-lane step loop (one Monte-Carlo rep of one candidate)
+# --------------------------------------------------------------------------
+
+
+def _build_lane(cfg: _RunnerCfg):
+    n, jobs_pad, ev_pad = cfg.n, cfg.jobs_pad, cfg.ev_pad
+    replan = cfg.replan
+    dt = jnp.dtype(cfg.dtype)
     bidx = jnp.arange(n)
+    wid = jnp.arange(n)
+    # replica slots: [0, n) gang replica of worker i, [n, 2n) rescue replica
+    # of batch i - n.  One flat axis keeps every per-replica reduction a
+    # single vector op (the de-serialized sibling of gang_cover_times).
+    rp_batch_rescue = bidx  # rescue slot i hosts batch i
     W = replan.window if replan is not None else 0
+
+    def _seg_min(seg, vals, mask):
+        """Per-batch min of ``vals`` over entries with ``mask`` (inf empty).
+
+        ``seg`` is always in-bounds; masked-out entries contribute the
+        neutral inf, so only the values need masking."""
+        return (
+            jnp.full(n + 1, jnp.inf, dt).at[seg].min(jnp.where(mask, vals, jnp.inf))[:n]
+        )
 
     def _obs_push(st, vals, comps, times, valid):
         # ring-buffer push in completion-time order: valid entries take ranks
@@ -177,7 +266,7 @@ def _get_runner(n: int, cancel: bool, size_dep: bool, replan: Optional[ReplanCon
         # (control._inverse_min), closed-form frontier argmin over the
         # divisors of the current alive count (core.analysis forms).
         m = jnp.arange(W) < st["obs_count"]
-        nobs = jnp.maximum(st["obs_count"], 1).astype(jnp.float32)
+        nobs = jnp.maximum(st["obs_count"], 1).astype(dt)
         x = st["obs_val"]
         sx = jnp.where(m, x, 0.0).sum()
         mean = sx / nobs
@@ -205,9 +294,9 @@ def _get_runner(n: int, cancel: bool, size_dep: bool, replan: Optional[ReplanCon
         n_alive = st["alive"].sum()
         cands = div_tab[n_alive]  # (D,) zero-padded
         vb = cands > 0
-        b = jnp.maximum(cands, 1).astype(jnp.float32)
+        b = jnp.maximum(cands, 1).astype(dt)
         H1, H2 = h1[jnp.maximum(cands, 1)], h2[jnp.maximum(cands, 1)]
-        na = n_alive.astype(jnp.float32)
+        na = n_alive.astype(dt)
         mean_e = H1 / mu_e
         cov_e = jnp.sqrt(H2) / H1
         mean_s = na * xmin / b + H1 / mu_s
@@ -251,382 +340,462 @@ def _get_runner(n: int, cancel: bool, size_dep: bool, replan: Optional[ReplanCon
         new_b = cands[jnp.argmin(score)]
         return jnp.where(n_alive > 0, jnp.maximum(new_b, 1), st["plan_b"])
 
-    def lane(tau, tau_resc, ev_t, ev_w, ev_up, next_t, arrivals, speeds, b0, n_tasks,
-             blend, div_tab, h1, h2):
-        n_jobs = tau.shape[0]
+    def lane(tau, tau_resc, ev_t, ev_w, ev_up, b0, arrivals, speeds, n_real, jobs_real,
+             n_tasks, blend, div_tab, h1, h2):
+        inf = jnp.asarray(jnp.inf, dt)
 
         def batch_scale(job_b):
-            return n_tasks / job_b.astype(jnp.float32) if size_dep else jnp.float32(1.0)
+            return n_tasks / job_b.astype(dt) if cfg.size_dep else jnp.asarray(1.0, dt)
 
-        def commit(st, t_limit):
-            """Commit completions up to t_limit: batch wins, cancellation,
-            accounting, job finish, observations, and the replan hook."""
-            live = st["slot_live"]
-            end = st["slot_end"]
-            masked = jnp.where(live, end, jnp.inf)
-            win = jnp.min(masked, axis=1)  # (B,)
-            newly = (~st["batch_done"]) & (win <= t_limit) & jnp.isfinite(win)
-            if cancel:
-                nb = newly[:, None] & live
-                busy_add = jnp.where(nb, win[:, None] - st["slot_start"], 0.0).sum()
-                saved_add = jnp.where(nb, end - win[:, None], 0.0).sum()
-                live2 = live & ~nb
-                t_new = jnp.max(jnp.where(newly, win, -jnp.inf))
+        def step(st):
+            """One action per step -- rescue, else commit + (dispatch |
+            boundary) -- applied as a single gated pass: every update is
+            masked by its action predicate, so no state branching/merging
+            is materialized (the predicates are mutually exclusive)."""
+            st = {**st}
+            e = st["e"]
+            t_next = ev_t[e]
+            # replica slot -> (batch, worker), gang half then rescue half
+            rp_b = jnp.concatenate([st["g_b"], rp_batch_rescue])
+            rp_w = jnp.concatenate([wid, st["rb_w"]])
+            win = _seg_min(rp_b, st["rp_end"], st["rp_live"])
+
+            # -- rescue: oldest pending rescue onto the earliest-freeing
+            # alive worker (engine: first free worker, FIFO rescue queue).
+            # Computed on the pre-commit state so projected worker free
+            # times still see replicas that commit later this epoch.
+            if cfg.cancel:
+                # with cancellation a worker frees at its batch's win
+                proj_vals = jnp.where(st["rp_live"], win[rp_b], -inf)
             else:
-                done_slots = live & (end <= t_limit)
-                busy_add = jnp.where(done_slots, end - st["slot_start"], 0.0).sum()
+                proj_vals = jnp.where(st["rp_live"], st["rp_end"], -inf)
+            # rp_w of a dead rescue slot may be stale but is always in
+            # bounds, and its -inf value is the scatter-max neutral
+            proj = jnp.full(n + 1, -jnp.inf, dt).at[rp_w].max(proj_vals)[:n]
+            # pending rescues block commits/dispatches, so t_cursor has been
+            # floored to the request boundary: it is the epoch start time
+            wfree = jnp.where(st["alive"], jnp.maximum(proj, st["t_cursor"]), inf)
+            wfree = jnp.where(wfree <= t_next, wfree, inf)
+            tgt = jnp.argmin(jnp.where(st["resc_pending"], st["resc_t"], inf))
+            wstar = jnp.argmin(wfree)
+            can_r = st["resc_pending"].any() & jnp.isfinite(wfree[wstar]) & st["job_active"]
+            td_r = wfree[wstar]
+            rk = jnp.clip(st["resc_k"], 0, cfg.resc_cap - 1)
+            dur_r = tau_resc[rk, tgt] * batch_scale(st["job_b"]) / speeds[wstar]
+            # gated writes: the index goes out of bounds when the action is
+            # off, and jax scatters drop out-of-bounds updates
+            i_tgt = jnp.where(can_r, tgt, n)
+            i_slot = jnp.where(can_r, n + tgt, 2 * n)
+            st["rb_w"] = st["rb_w"].at[i_tgt].set(wstar.astype(jnp.int32))
+            st["rp_start"] = st["rp_start"].at[i_slot].set(td_r)
+            st["rp_end"] = st["rp_end"].at[i_slot].set(td_r + dur_r)
+            st["rp_live"] = st["rp_live"].at[i_slot].set(True)
+            st["resc_pending"] = st["resc_pending"].at[i_tgt].set(False)
+            st["n_resc"] = st["n_resc"] + can_r
+            st["resc_k"] = st["resc_k"] + can_r
+
+            # -- commit completions up to the next boundary (masked out
+            # entirely on rescue steps: pending rescues must dispatch before
+            # any commit clears the replicas their free times project from)
+            newly = (~st["batch_done"]) & (win <= t_next) & jnp.isfinite(win) & ~can_r
+            if cfg.cancel:
+                win_r = win[rp_b]
+                done_r = st["rp_live"] & newly[rp_b]
+                busy_add = jnp.where(done_r, win_r - st["rp_start"], 0.0).sum()
+                saved_add = jnp.where(done_r, st["rp_end"] - win_r, 0.0).sum()
+                t_new = jnp.max(jnp.where(newly, win, -inf))
+            else:
+                done_r = st["rp_live"] & (st["rp_end"] <= t_next) & ~can_r
+                busy_add = jnp.where(done_r, st["rp_end"] - st["rp_start"], 0.0).sum()
                 saved_add = 0.0
-                live2 = live & ~done_slots
-                t_new = jnp.max(jnp.where(done_slots, end, -jnp.inf))
+                t_new = jnp.max(jnp.where(done_r, st["rp_end"], -inf))
+            live2 = st["rp_live"] & ~done_r
             done2 = st["batch_done"] | newly
             done_t2 = jnp.where(newly, win, st["batch_done_t"])
             all_done = jnp.all(done2)
-            fin = jnp.max(jnp.where(bidx < st["job_b"], done_t2, -jnp.inf))
-            completes = st["job_active"] & all_done
+            fin = jnp.max(jnp.where(bidx < st["job_b"], done_t2, -inf))
+            completes = st["job_active"] & all_done & ~can_r
             qa = st["q_active"]
-
-            st2 = {**st}
-            st2["slot_live"] = live2
-            st2["busy"] = st["busy"] + busy_add
-            st2["saved"] = st["saved"] + saved_add
-            st2["batch_done"] = done2
-            st2["batch_done_t"] = done_t2
-            st2["t_cursor"] = jnp.maximum(
-                st["t_cursor"], jnp.maximum(t_new, jnp.where(completes, fin, -jnp.inf))
+            st["rp_live"] = live2
+            st["busy"] = st["busy"] + busy_add
+            st["saved"] = st["saved"] + saved_add
+            st["batch_done"] = done2
+            st["batch_done_t"] = done_t2
+            st["t_cursor"] = jnp.maximum(
+                st["t_cursor"], jnp.maximum(t_new, jnp.where(completes, fin, -inf))
             )
-            st2["fins"] = st["fins"].at[qa].set(jnp.where(completes, fin, st["fins"][qa]))
-            st2["job_active"] = st["job_active"] & ~all_done
-            st2["resc_pending"] = st["resc_pending"] & ~completes
+            st["fins"] = st["fins"].at[jnp.where(completes, qa, jobs_pad)].set(fin)
+            st["job_active"] = st["job_active"] & ~(all_done & ~can_r)
+            st["resc_pending"] = st["resc_pending"] & ~completes
 
             if replan is not None:
                 sc = batch_scale(st["job_b"])
-                spd = speeds[jnp.clip(st["slot_w"], 0, n - 1)]
-                if cancel:
+                spd = speeds[rp_w]
+                if cfg.cancel:
                     # one observation per newly-won batch: the winner's task
                     # time, censored by however many rivals it raced
-                    widx = jnp.argmin(masked, axis=1)  # (B,)
-                    dur = win - jnp.take_along_axis(
-                        st["slot_start"], widx[:, None], axis=1
-                    )[:, 0]
-                    spd_w = jnp.take_along_axis(spd, widx[:, None], axis=1)[:, 0]
-                    vals = dur * spd_w / sc
-                    comps = live.sum(axis=1).astype(jnp.float32)
-                    st2 = _obs_push(st2, vals, comps, win, newly)
+                    cand = (st["rp_live"] | done_r) & (st["rp_end"] <= win[rp_b])
+                    win_slot = (
+                        jnp.full(n + 1, 2 * n, jnp.int32)
+                        .at[jnp.where(cand, rp_b, n)]
+                        .min(jnp.arange(2 * n, dtype=jnp.int32))[:n]
+                    )
+                    ws = jnp.clip(win_slot, 0, 2 * n - 1)
+                    vals = (win - st["rp_start"][ws]) * spd[ws] / sc
+                    comps = (
+                        jnp.zeros(n + 1, jnp.int32)
+                        .at[jnp.where(st["rp_live"] | done_r, rp_b, n)]
+                        .add(1)[:n]
+                    ).astype(dt)
+                    st = _obs_push(st, vals, comps, win, newly)
                 else:
                     # every replica that completes while its job is active is
                     # an uncensored observation (the engine drops stragglers
                     # that outlive their job)
-                    fin_limit = jnp.where(completes, fin, jnp.inf)
-                    ovalid = done_slots & st["job_active"] & (end <= fin_limit)
-                    vals = (end - st["slot_start"]) * spd / sc
-                    ones = jnp.ones_like(vals)
-                    st2 = _obs_push(
-                        st2, vals.ravel(), ones.ravel(), end.ravel(), ovalid.ravel()
+                    fin_limit = jnp.where(completes, fin, inf)
+                    ovalid = done_r & (st["job_active"] | completes) & (
+                        st["rp_end"] <= fin_limit
                     )
+                    vals = (st["rp_end"] - st["rp_start"]) * spd / sc
+                    st = _obs_push(st, vals, jnp.ones_like(vals), st["rp_end"], ovalid)
                 do_replan = (
                     completes
-                    & (st2["obs_count"] >= replan.min_observations)
-                    & (st2["since_refit"] >= replan.refit_every)
+                    & (st["obs_count"] >= replan.min_observations)
+                    & (st["since_refit"] >= replan.refit_every)
                 )
                 # _replan_pick runs unconditionally: under vmap a lax.cond on
                 # the (batched) do_replan lowers to a select that evaluates
                 # both branches anyway, so gating would add bookkeeping
                 # without skipping the work
-                new_b = _replan_pick(st2, div_tab, h1, h2, blend)
-                st2["plan_b"] = jnp.where(do_replan, new_b, st2["plan_b"])
-                st2["n_replans"] = st2["n_replans"] + do_replan
-                st2["since_refit"] = jnp.where(do_replan, 0, st2["since_refit"])
-            return st2
+                new_b = _replan_pick(st, div_tab, h1, h2, blend)
+                st["plan_b"] = jnp.where(do_replan, new_b, st["plan_b"])
+                st["n_replans"] = st["n_replans"] + do_replan
+                st["since_refit"] = jnp.where(do_replan, 0, st["since_refit"])
 
-        def boundary(st, ev_t, ev_w, ev_up):
-            """Apply one fail/join event (the engine stops replaying churn
-            once every job is recorded -- mirror with the sim_over gate)."""
-            sim_over = (st["q"] >= n_jobs) & ~st["job_active"]
-            act = (ev_w >= 0) & jnp.isfinite(ev_t) & ~sim_over
-            w = jnp.clip(ev_w, 0, n - 1)
-            was = st["alive"][w]
-            do_fail = act & ~ev_up & was
-            do_join = act & ev_up & ~was
-            st2 = {**st}
-            st2["alive"] = st["alive"].at[w].set(
-                jnp.where(do_fail, False, jnp.where(do_join, True, was))
+            # -- gang-dispatch the next queued job (engine: whole-cluster
+            # FIFO gangs); mutually exclusive with rescue via job_active
+            n_alive = st["alive"].sum(dtype=jnp.int32)
+            q = st["q"]
+            can_d = (
+                (~st["job_active"])
+                & (q < jobs_real)
+                & (n_alive > 0)
+                & ~st["rp_live"].any()
+                & ~can_r
             )
-            kill = st["slot_live"] & (st["slot_w"] == w) & do_fail
-            st2["busy"] = st["busy"] + jnp.where(kill, ev_t - st["slot_start"], 0.0).sum()
-            live2 = st["slot_live"] & ~kill
-            st2["slot_live"] = live2
-            lost = kill.any(axis=1) & ~live2.any(axis=1) & ~st["batch_done"]
-            st2["resc_pending"] = st["resc_pending"] | lost
-            st2["resc_t"] = jnp.where(lost, ev_t, st["resc_t"])
-            st2["n_fail"] = st["n_fail"] + do_fail
+            # out-of-range job gathers clamp (jax default), and can_d is
+            # already false there -- no explicit clip needed
+            td = jnp.maximum(st["t_cursor"], arrivals[q])
+            can_d = can_d & (td < t_next)
+            b = jnp.where(st["plan_b"] > 0, st["plan_b"], n_alive)
+            b = jnp.clip(b, 1, jnp.maximum(n_alive, 1))
+            r = n_alive // jnp.maximum(b, 1)
+            rank = jnp.cumsum(st["alive"]) - 1
+            sel = st["alive"] & (rank < b * r)
+            # draw index = alive-rank (the engine assigns free workers in wid
+            # order, drawing sequentially); batch = rank mod b
+            dur = tau[q][rank] * batch_scale(b) / speeds
+            sel2 = jnp.concatenate([sel, jnp.zeros(n, bool)])
+            end2 = jnp.concatenate([td + dur, jnp.full(n, jnp.inf, dt)])
+            st["g_b"] = jnp.where(can_d & sel, (rank % b).astype(jnp.int32), st["g_b"])
+            st["rp_live"] = jnp.where(can_d, sel2, st["rp_live"])
+            st["rp_start"] = jnp.where(can_d & sel2, td, st["rp_start"])
+            st["rp_end"] = jnp.where(can_d & sel2, end2, st["rp_end"])
+            st["batch_done"] = jnp.where(can_d, bidx >= b, st["batch_done"])
+            st["batch_done_t"] = jnp.where(
+                can_d, jnp.where(bidx >= b, -inf, inf), st["batch_done_t"]
+            )
+            st["job_active"] = st["job_active"] | can_d
+            st["job_b"] = jnp.where(can_d, b, st["job_b"])
+            st["q_active"] = jnp.where(can_d, st["q"], st["q_active"])
+            i_q = jnp.where(can_d, q, jobs_pad)
+            st["starts"] = st["starts"].at[i_q].set(td)
+            if cfg.full_outputs:
+                st["br"] = st["br"].at[i_q].set((b << 16 | r).astype(jnp.int32))
+            st["q"] = st["q"] + can_d
+
+            # -- otherwise apply one fail/join event (the engine stops
+            # replaying churn once every job is recorded: the sim_over gate)
+            t_ev, w_raw, up = ev_t[e], ev_w[e], ev_up[e]
+            do_b = ~can_r & ~can_d
+            sim_over = (st["q"] >= jobs_real) & ~st["job_active"]
+            act = do_b & (w_raw >= 0) & jnp.isfinite(t_ev) & ~sim_over
+            w = jnp.clip(w_raw, 0, n - 1)
+            was = st["alive"][w]
+            do_fail = act & ~up & was
+            do_join = act & up & ~was
+            # a fail flips alive to False (= up), a join to True (= up)
+            st["alive"] = st["alive"].at[jnp.where(do_fail | do_join, w, n)].set(up)
+            kill = st["rp_live"] & (rp_w == w) & do_fail
+            st["busy"] = st["busy"] + jnp.where(kill, t_ev - st["rp_start"], 0.0).sum()
+            live3 = st["rp_live"] & ~kill
+            st["rp_live"] = live3
+            # a batch that just lost its last live replica needs a rescue:
+            # one segment count carries both indicators (kills in the low
+            # bits, survivors shifted past any possible kill count)
+            seg = jnp.zeros(n + 1, jnp.int32).at[rp_b].add(kill + 4096 * live3)[:n]
+            lost = (seg & 4095) > 0
+            lost = lost & (seg < 4096) & ~st["batch_done"]
+            st["resc_pending"] = st["resc_pending"] | lost
+            st["resc_t"] = jnp.where(lost, t_ev, st["resc_t"])
+            st["n_fail"] = st["n_fail"] + do_fail
             # No dispatch in this epoch can precede its boundary: when the
             # *churn event itself* is what frees the gang (a fail killing the
             # last straggler, or a join reviving a dead cluster), the engine
             # dispatches at the event time -- not at the stale last-completion
             # cursor.  Floor the cursor at the (finite) boundary.
-            st2["t_cursor"] = jnp.maximum(
+            st["t_cursor"] = jnp.maximum(
                 st["t_cursor"],
-                jnp.where(jnp.isfinite(ev_t), jnp.maximum(ev_t, 0.0), -jnp.inf),
+                jnp.where(do_b & jnp.isfinite(t_ev), jnp.maximum(t_ev, 0.0), -inf),
             )
-            applied_t = jnp.where(do_fail | do_join, ev_t, jnp.inf)
-            return st2, applied_t
-
-        def rescues(st, t_start, t_next, tau_row):
-            """Dispatch pending rescues onto the earliest-freeing alive
-            workers (engine: first free worker, FIFO rescue queue).
-
-            Progress-gated while_loop: one trip per dispatched rescue plus a
-            final no-op trip, so churn epochs with nothing pending (the vast
-            majority) pay a single cheap iteration instead of a fixed
-            n-worker unroll."""
-
-            def body(st):
-                live = st["slot_live"]
-                masked = jnp.where(live, st["slot_end"], jnp.inf)
-                win = jnp.min(masked, axis=1)
-                slot_free = jnp.broadcast_to(win[:, None], (n, n)) if cancel else st["slot_end"]
-                flat_w = jnp.where(live, st["slot_w"], n).ravel()
-                vals = jnp.where(live, slot_free, -jnp.inf).ravel()
-                wbusy = jnp.full(n + 1, -jnp.inf).at[flat_w].max(vals)[:n]
-                wfree = jnp.where(st["alive"], jnp.maximum(wbusy, t_start), jnp.inf)
-                wfree = jnp.where(wfree <= t_next, wfree, jnp.inf)
-                tgt = jnp.argmin(jnp.where(st["resc_pending"], st["resc_t"], jnp.inf))
-                wstar = jnp.argmin(wfree)
-                can = st["resc_pending"].any() & jnp.isfinite(wfree[wstar]) & st["job_active"]
-                td = wfree[wstar]
-                dur = tau_row[tgt] * batch_scale(st["job_b"]) / speeds[wstar]
-                st2 = {**st}
-                st2["slot_w"] = st["slot_w"].at[tgt, 0].set(
-                    jnp.where(can, wstar, st["slot_w"][tgt, 0])
-                )
-                st2["slot_start"] = st["slot_start"].at[tgt, 0].set(
-                    jnp.where(can, td, st["slot_start"][tgt, 0])
-                )
-                st2["slot_end"] = st["slot_end"].at[tgt, 0].set(
-                    jnp.where(can, td + dur, st["slot_end"][tgt, 0])
-                )
-                st2["slot_live"] = st["slot_live"].at[tgt, 0].set(
-                    jnp.where(can, True, st["slot_live"][tgt, 0])
-                )
-                st2["resc_pending"] = st["resc_pending"].at[tgt].set(
-                    jnp.where(can, False, st["resc_pending"][tgt])
-                )
-                st2["n_resc"] = st["n_resc"] + can
-                return can, st2
-
-            def loop_body(cs):
-                _, st = cs
-                return body(st)
-
-            _, st = jax.lax.while_loop(lambda cs: cs[0], loop_body, (jnp.array(True), st))
+            if cfg.full_outputs:
+                st["ep_times"] = st["ep_times"].at[
+                    jnp.where(do_fail | do_join, e, ev_pad)
+                ].set(t_ev)
+            st["e"] = jnp.minimum(e + do_b, ev_pad - 1)
             return st
 
-        def dispatch_loop(st, t_next):
-            """Alternate commit / gang-dispatch until nothing more can start
-            inside this epoch (engine: whole-cluster FIFO gangs)."""
-
-            def cond(cs):
-                return cs[0]
-
-            def body(cs):
-                _, st = cs
-                st = commit(st, t_next)
-                n_alive = st["alive"].sum()
-                qsafe = jnp.clip(st["q"], 0, n_jobs - 1)
-                can = (
-                    (~st["job_active"])
-                    & (st["q"] < n_jobs)
-                    & (n_alive > 0)
-                    & ~st["slot_live"].any()
-                )
-                td = jnp.maximum(st["t_cursor"], arrivals[qsafe])
-                can = can & (td < t_next)
-                b = jnp.where(st["plan_b"] > 0, st["plan_b"], n_alive)
-                b = jnp.clip(b, 1, jnp.maximum(n_alive, 1))
-                r = n_alive // jnp.maximum(b, 1)
-                rank = jnp.cumsum(st["alive"]) - 1
-                sel = st["alive"] & (rank < b * r)
-                flat_slot = jnp.where(sel, (rank % b) * n + (rank // b), n * n)
-                new_w = (
-                    jnp.full(n * n + 1, -1, jnp.int32)
-                    .at[flat_slot]
-                    .set(jnp.arange(n, dtype=jnp.int32))[: n * n]
-                    .reshape(n, n)
-                )
-                slot_i = bidx[:, None]
-                slot_j = bidx[None, :]
-                active_slot = (slot_i < b) & (slot_j < r)
-                flat_idx = jnp.clip(slot_j * b + slot_i, 0, n - 1)
-                spd = speeds[jnp.clip(new_w, 0, n - 1)]
-                dur = tau[qsafe][flat_idx] * batch_scale(b) / spd
-                st2 = {**st}
-                st2["slot_w"] = jnp.where(can, new_w, st["slot_w"])
-                st2["slot_live"] = jnp.where(can, active_slot, st["slot_live"])
-                st2["slot_start"] = jnp.where(can, td, st["slot_start"])
-                st2["slot_end"] = jnp.where(
-                    can, jnp.where(active_slot, td + dur, jnp.inf), st["slot_end"]
-                )
-                st2["batch_done"] = jnp.where(can, bidx >= b, st["batch_done"])
-                st2["batch_done_t"] = jnp.where(
-                    can, jnp.where(bidx >= b, -jnp.inf, jnp.inf), st["batch_done_t"]
-                )
-                st2["job_active"] = st["job_active"] | can
-                st2["job_b"] = jnp.where(can, b, st["job_b"])
-                st2["job_r"] = jnp.where(can, r, st["job_r"])
-                st2["q_active"] = jnp.where(can, st["q"], st["q_active"])
-                st2["starts"] = st["starts"].at[qsafe].set(
-                    jnp.where(can, td, st["starts"][qsafe])
-                )
-                st2["bs"] = st["bs"].at[qsafe].set(jnp.where(can, b, st["bs"][qsafe]))
-                st2["rs"] = st["rs"].at[qsafe].set(jnp.where(can, r, st["rs"][qsafe]))
-                st2["q"] = st["q"] + can
-                return can, st2
-
-            _, st = jax.lax.while_loop(cond, body, (jnp.array(True), st))
-            return st
-
-        def step(st, xs):
-            ev_t, ev_w, ev_up, t_next, tau_row = xs
-            st, applied_t = boundary(st, ev_t, ev_w, ev_up)
-            st = rescues(st, jnp.maximum(ev_t, 0.0), t_next, tau_row)
-            st = dispatch_loop(st, t_next)
-            return st, applied_t
+        def done(st):
+            return (st["q"] >= jobs_real) & ~st["job_active"]
 
         st = {
-            "t_cursor": jnp.float32(0.0),
-            "alive": jnp.ones(n, dtype=bool),
+            "t_cursor": jnp.asarray(0.0, dt),
+            "e": jnp.int32(0),
+            "alive": wid < n_real,
             "q": jnp.int32(0),
             "job_active": jnp.array(False),
             "job_b": jnp.int32(1),
-            "job_r": jnp.int32(1),
             "q_active": jnp.int32(0),
-            "slot_w": jnp.full((n, n), -1, jnp.int32),
-            "slot_live": jnp.zeros((n, n), dtype=bool),
-            "slot_start": jnp.zeros((n, n), jnp.float32),
-            "slot_end": jnp.full((n, n), jnp.inf, jnp.float32),
-            "batch_done": jnp.ones(n, dtype=bool),
-            "batch_done_t": jnp.full(n, -jnp.inf, jnp.float32),
-            "resc_pending": jnp.zeros(n, dtype=bool),
-            "resc_t": jnp.full(n, jnp.inf, jnp.float32),
-            "busy": jnp.float32(0.0),
-            "saved": jnp.float32(0.0),
+            "g_b": jnp.zeros(n, jnp.int32),
+            "rb_w": jnp.zeros(n, jnp.int32),
+            "rp_live": jnp.zeros(2 * n, bool),
+            "rp_start": jnp.zeros(2 * n, dt),
+            "rp_end": jnp.full(2 * n, jnp.inf, dt),
+            "batch_done": jnp.ones(n, bool),
+            "batch_done_t": jnp.full(n, -jnp.inf, dt),
+            "resc_pending": jnp.zeros(n, bool),
+            "resc_t": jnp.full(n, jnp.inf, dt),
+            "resc_k": jnp.int32(0),
+            "busy": jnp.asarray(0.0, dt),
+            "saved": jnp.asarray(0.0, dt),
             "n_fail": jnp.int32(0),
             "n_resc": jnp.int32(0),
             "n_replans": jnp.int32(0),
-            "plan_b": jnp.asarray(b0, jnp.int32),
-            "starts": jnp.full(n_jobs, jnp.inf, jnp.float32),
-            "fins": jnp.full(n_jobs, jnp.inf, jnp.float32),
-            "bs": jnp.zeros(n_jobs, jnp.int32),
-            "rs": jnp.zeros(n_jobs, jnp.int32),
+            "plan_b": b0.astype(jnp.int32),
+            "starts": jnp.full(jobs_pad, jnp.inf, dt),
+            "fins": jnp.full(jobs_pad, jnp.inf, dt),
         }
+        if cfg.full_outputs:
+            st["br"] = jnp.zeros(jobs_pad, jnp.int32)
+            st["ep_times"] = jnp.full(ev_pad, jnp.inf, dt)
         if replan is not None:
             st.update(
-                obs_val=jnp.zeros(W, jnp.float32),
-                obs_comp=jnp.ones(W, jnp.float32),
+                obs_val=jnp.zeros(W, dt),
+                obs_comp=jnp.ones(W, dt),
                 obs_head=jnp.int32(0),
                 obs_count=jnp.int32(0),
                 since_refit=jnp.int32(0),
             )
-        st, applied = jax.lax.scan(step, st, (ev_t, ev_w, ev_up, next_t, tau_resc))
-        return {
+
+        def chunk_body(carry):
+            st, it = carry
+            st = jax.lax.fori_loop(0, _STEP_CHUNK, lambda _, s: step(s), st)
+            return st, it + 1
+
+        def chunk_cond(carry):
+            st, it = carry
+            return (it < cfg.n_chunks) & ~done(st)
+
+        st, _ = jax.lax.while_loop(chunk_cond, chunk_body, (st, jnp.int32(0)))
+        # flush replicas still in flight: their full duration is committed
+        # worker time (it will burn whether or not we simulate it), which
+        # keeps the invariant  ws(cancel on) + saved == ws(cancel off)
+        flush = jnp.where(st["rp_live"], st["rp_end"] - st["rp_start"], 0.0).sum()
+        out = {
             "starts": st["starts"],
             "finishes": st["fins"],
-            "bs": st["bs"],
-            "rs": st["rs"],
-            "worker_seconds": st["busy"],
+            "worker_seconds": st["busy"] + flush,
             "cancelled_seconds_saved": st["saved"],
             "n_worker_failures": st["n_fail"],
             "n_replicas_rescued": st["n_resc"],
             "n_replans": st["n_replans"],
-            "epoch_times": applied,
         }
+        if cfg.full_outputs:
+            out["br"] = st["br"]
+            out["epoch_times"] = st["ep_times"]
+        return out
 
-    runner = jax.jit(
-        jax.vmap(
-            lane,
-            in_axes=(0, 0, 0, 0, 0, 0, None, None, 0, None, None, None, None, None),
+    return lane
+
+
+def _get_runner(cfg: _RunnerCfg):
+    if cfg in _RUNNERS:
+        return _RUNNERS[cfg]
+    lane = _build_lane(cfg)
+    fn = jax.vmap(lane, in_axes=(0,) * 6 + (None,) * 9)
+    if cfg.devices > 1:
+        from jax.sharding import Mesh, PartitionSpec as P
+
+        from ..distributed.compat import shard_map
+
+        mesh = Mesh(np.array(jax.devices()[: cfg.devices]), ("lanes",))
+        # check_vma=False: the early-exit while_loop has no replication rule,
+        # and every lane is independent anyway (out_specs split the lane axis)
+        fn = shard_map(
+            fn,
+            mesh=mesh,
+            in_specs=(P("lanes"),) * 6 + (P(),) * 9,
+            out_specs=P("lanes"),
+            check_vma=False,
         )
-    )
-    _RUNNERS[key] = runner
+    # donating the big per-lane buffers lets XLA reuse them for the loop
+    # carry; CPU does not support donation (it would only warn), so gate it
+    donate = () if jax.default_backend() == "cpu" else (0, 1, 2, 3, 4, 5)
+    runner = jax.jit(fn, donate_argnums=donate)
+    _RUNNERS[cfg] = runner
     return runner
 
 
 # --------------------------------------------------------------------------
-# churn realization sampling / schedule packing
+# per-lane draw preparation (chunk- and shard-invariant seed derivation)
 # --------------------------------------------------------------------------
 
 
-def _pack_schedule(schedule: ChurnSchedule, n_lanes: int):
-    k = max(len(schedule), 1)
-    t = np.full(k, np.inf, np.float32)
-    w = np.full(k, -1, np.int32)
-    u = np.zeros(k, bool)
-    if len(schedule):
-        t[: len(schedule)] = np.asarray(schedule.times, np.float32)
+def _sample_churn_np(rng, churn: ChurnProcess, n_workers: int, pairs: int):
+    """One lane's alternating-renewal fail/join timeline, the engine's law."""
+    ups = rng.exponential(1.0 / churn.fail_rate, (n_workers, pairs))
+    if churn.mean_downtime > 0.0:
+        downs = rng.exponential(churn.mean_downtime, (n_workers, pairs))
+    else:
+        downs = np.full((n_workers, pairs), np.inf)
+    iv = np.stack([ups, downs], axis=-1).reshape(n_workers, 2 * pairs)
+    t = np.cumsum(iv, axis=-1)  # fail at even positions, join at odd
+    u = np.broadcast_to((np.arange(2 * pairs) % 2).astype(bool), t.shape).ravel()
+    w = np.broadcast_to(np.arange(n_workers, dtype=np.int32)[:, None], t.shape).ravel()
+    t = t.ravel()
+    order = np.argsort(t, kind="stable")
+    t, w, u = t[order], w[order], u[order]
+    return t, np.where(np.isfinite(t), w, -1), u
+
+
+def _pack_schedule(schedule: Optional[ChurnSchedule], n_lanes: int, ev_pad: int, dtype):
+    """Shared explicit timeline (or the no-churn stream), inf-padded."""
+    t = np.full(ev_pad, np.inf, np.float64)
+    w = np.full(ev_pad, -1, np.int32)
+    u = np.zeros(ev_pad, bool)
+    if schedule is not None and len(schedule):
+        t[: len(schedule)] = np.asarray(schedule.times, np.float64)
         w[: len(schedule)] = np.asarray(schedule.wids, np.int32)
         u[: len(schedule)] = np.asarray(schedule.ups, bool)
     tile = lambda a: jnp.broadcast_to(jnp.asarray(a), (n_lanes,) + a.shape)  # noqa: E731
-    return tile(t), tile(w), tile(u)
+    return tile(t.astype(dtype)), tile(w), tile(u)
 
 
-def _sample_churn(key, churn: ChurnProcess, n_workers: int, n_lanes: int, pairs: int):
-    """Per-lane alternating-renewal timelines, the engine's churn law."""
-    if churn.fail_rate <= 0.0 or pairs <= 0:
-        shape = (n_lanes, 1)
-        return (
-            jnp.full(shape, jnp.inf, jnp.float32),
-            jnp.full(shape, -1, jnp.int32),
-            jnp.zeros(shape, bool),
-        )
-    ku, kd = jax.random.split(key)
-    ups = jax.random.exponential(ku, (n_lanes, n_workers, pairs)) / churn.fail_rate
-    if churn.mean_downtime > 0.0:
-        downs = jax.random.exponential(kd, (n_lanes, n_workers, pairs)) * churn.mean_downtime
-    else:
-        downs = jnp.full((n_lanes, n_workers, pairs), jnp.inf)
-    iv = jnp.stack([ups, downs], axis=-1).reshape(n_lanes, n_workers, 2 * pairs)
-    t = jnp.cumsum(iv, axis=-1)  # fail at even positions, join at odd
-    up_kind = (jnp.arange(2 * pairs) % 2).astype(bool)
-    wid = jnp.broadcast_to(
-        jnp.arange(n_workers, dtype=jnp.int32)[None, :, None], t.shape
-    )
-    kinds = jnp.broadcast_to(up_kind[None, None, :], t.shape)
-    t = t.reshape(n_lanes, -1)
-    order = jnp.argsort(t, axis=-1)
-    t = jnp.take_along_axis(t, order, axis=-1)
-    w = jnp.take_along_axis(wid.reshape(n_lanes, -1), order, axis=-1)
-    u = jnp.take_along_axis(kinds.reshape(n_lanes, -1), order, axis=-1)
-    w = jnp.where(jnp.isfinite(t), w, -1)
-    return t.astype(jnp.float32), w, u
-
-
-def _prepend_sentinel(ev_t, ev_w, ev_up):
-    """Step 0 carries no event: epoch [0, first event)."""
-    s = ev_t.shape[0]
-    ev_t = jnp.concatenate([jnp.full((s, 1), -jnp.inf, ev_t.dtype), ev_t], axis=1)
-    ev_w = jnp.concatenate([jnp.full((s, 1), -1, ev_w.dtype), ev_w], axis=1)
-    ev_up = jnp.concatenate([jnp.zeros((s, 1), bool), ev_up], axis=1)
-    next_t = jnp.concatenate([ev_t[:, 1:], jnp.full((s, 1), jnp.inf, ev_t.dtype)], axis=1)
-    return ev_t, ev_w, ev_up, next_t
-
-
-def _prepare_lanes(dist, n_workers, n_lanes, n_jobs, seed, churn, churn_schedule, pairs):
+def _prepare_lanes(dist, n_workers, n_pad, lane_idx, n_real, jobs_pad, ev_pad, resc_cap,
+                   seed, churn, churn_schedule, pairs, dtype):
     """Per-lane inputs shared by both entry points: service draws, rescue
-    draws, and the sentinel-prefixed churn event stream."""
-    key = jax.random.key(seed)
-    k_svc, k_resc, k_churn = jax.random.split(key, 3)
-    tau = dist.sample(k_svc, (n_lanes, n_jobs, n_workers))
-    if churn is not None:
-        ev_t, ev_w, ev_up = _sample_churn(k_churn, churn, n_workers, n_lanes, pairs)
-    elif churn_schedule is not None:
-        ev_t, ev_w, ev_up = _pack_schedule(churn_schedule, n_lanes)
+    draws, and the churn event stream.
+
+    Host-side numpy on purpose: lane ``i`` draws from
+    ``default_rng(SeedSequence((seed, i)))``, a pure function of the global
+    lane index, so results are bit-identical under ``rep_chunk`` chunking,
+    ``devices`` sharding, and shape-bucket padding -- and the cold path pays
+    zero sampling compiles (the fastest jax program is the one never traced).
+
+    Only the first ``n_real`` lanes carry results; bucket-padding lanes get
+    constant durations (their outputs are sliced off, no need to sample).
+    Rescue draws are sampled only when churn events can actually create
+    rescues -- tau is drawn first per lane, so skipping them changes nothing.
+    """
+    n_lanes = len(lane_idx)
+    seed = int(seed)
+    sample_churn = churn is not None and churn.fail_rate > 0.0 and pairs > 0
+    need_resc = sample_churn or (churn_schedule is not None and len(churn_schedule))
+    tau = np.ones((n_lanes, jobs_pad, n_pad), dtype)
+    tau_resc = np.ones((n_lanes, resc_cap, n_pad), dtype)
+    if sample_churn:
+        ev_t = np.full((n_lanes, ev_pad), np.inf, dtype)
+        ev_w = np.full((n_lanes, ev_pad), -1, np.int32)
+        ev_up = np.zeros((n_lanes, ev_pad), bool)
+    for i, lane in enumerate(lane_idx[:n_real]):
+        rng = np.random.default_rng(np.random.SeedSequence((seed, int(lane))))
+        tau[i] = dist.sample_np(rng, (jobs_pad, n_pad))
+        if need_resc:
+            tau_resc[i] = dist.sample_np(rng, (resc_cap, n_pad))
+        if sample_churn:
+            t, w, u = _sample_churn_np(rng, churn, n_workers, pairs)
+            k = min(len(t), ev_pad)
+            ev_t[i, :k], ev_w[i, :k], ev_up[i, :k] = t[:k], w[:k], u[:k]
+    if not sample_churn:
+        ev_t, ev_w, ev_up = _pack_schedule(churn_schedule, n_lanes, ev_pad, dtype)
     else:
-        ev_t = jnp.full((n_lanes, 1), jnp.inf, jnp.float32)
-        ev_w = jnp.full((n_lanes, 1), -1, jnp.int32)
-        ev_up = jnp.zeros((n_lanes, 1), bool)
-    ev_t, ev_w, ev_up, next_t = _prepend_sentinel(ev_t, ev_w, ev_up)
-    tau_resc = dist.sample(k_resc, (n_lanes, ev_t.shape[1], n_workers))
-    return tau, tau_resc, ev_t, ev_w, ev_up, next_t
+        ev_t, ev_w, ev_up = jnp.asarray(ev_t), jnp.asarray(ev_w), jnp.asarray(ev_up)
+    return jnp.asarray(tau), jnp.asarray(tau_resc), ev_t, ev_w, ev_up
+
+
+def _shapes(n_workers, n_jobs, churn, churn_schedule, pairs):
+    n_pad = _bucket_workers(n_workers)
+    # per-job output arrays are scattered into every step: bucket them at a
+    # finer granularity than power-of-two (32) to keep the carried elements
+    # close to the real job count
+    jobs_pad = _pow2(n_jobs) if n_jobs < 32 else -(-n_jobs // 32) * 32
+    if churn is not None and churn.fail_rate > 0.0 and pairs > 0:
+        ev_real = 2 * pairs * n_workers
+    elif churn_schedule is not None:
+        ev_real = len(churn_schedule)
+    else:
+        ev_real = 0
+    ev_pad = _pow2(ev_real + 1)
+    # rescue dispatches are bounded by worker failures, at most half the
+    # event stream under the alternating fail/join law
+    resc_cap = max(8, ev_pad // 2)
+    # step budget: one step per job dispatch + one per churn event + a rescue
+    # allowance, plus one trailing commit; overruns leave jobs at inf exactly
+    # like the engine's max_events cap
+    budget = jobs_pad + ev_pad + resc_cap + 2
+    n_chunks = -(-budget // _STEP_CHUNK)
+    return n_pad, jobs_pad, ev_pad, resc_cap, n_chunks
+
+
+def _run_lanes(dist, cfg, n_workers, lane_idx, b0, arrivals_pad, n_jobs_real, seed,
+               speeds, churn, churn_schedule, pairs, n_tasks, replan):
+    """Pad the lane batch to its bucket, run the compiled runner, unpad."""
+    lanes = len(lane_idx)
+    lanes_pad = _pow2(lanes)
+    if cfg.devices > 1 and lanes_pad % cfg.devices:
+        lanes_pad = -(-lanes_pad // cfg.devices) * cfg.devices
+    idx = np.concatenate([lane_idx, np.arange(lanes_pad - lanes) + (1 << 30)])
+    b0 = np.concatenate([b0, np.zeros(lanes_pad - lanes, np.int32)])
+    dtype = jnp.dtype(cfg.dtype)
+    tau, tau_resc, ev_t, ev_w, ev_up = _prepare_lanes(
+        dist, n_workers, cfg.n, idx, lanes, cfg.jobs_pad, cfg.ev_pad, cfg.resc_cap,
+        seed, churn, churn_schedule, pairs, dtype,
+    )
+    div_tab, (h1, h2) = divisor_table(n_workers), harmonic_tables(n_workers)
+    div_pad = np.zeros((cfg.n + 1, _pow2(div_tab.shape[1])), div_tab.dtype)
+    div_pad[: div_tab.shape[0], : div_tab.shape[1]] = div_tab
+    h_pad = np.zeros(cfg.n + 1)
+    hp1, hp2 = h_pad.copy(), h_pad.copy()
+    hp1[: len(h1)], hp2[: len(h2)] = h1, h2
+    runner = _get_runner(cfg)
+    out = runner(
+        tau,
+        tau_resc,
+        ev_t,
+        ev_w,
+        ev_up,
+        jnp.asarray(b0, jnp.int32),
+        jnp.asarray(arrivals_pad, dtype),
+        jnp.asarray(speeds, dtype),
+        jnp.int32(n_workers),
+        jnp.int32(n_jobs_real),
+        jnp.asarray(n_tasks, dtype),
+        jnp.asarray(replan.blend if replan is not None else 0.5, dtype),
+        jnp.asarray(div_pad),
+        jnp.asarray(hp1, dtype),
+        jnp.asarray(hp2, dtype),
+    )
+    return {k: np.asarray(v)[:lanes] for k, v in out.items()}
 
 
 # --------------------------------------------------------------------------
@@ -634,11 +803,11 @@ def _prepare_lanes(dist, n_workers, n_lanes, n_jobs, seed, churn, churn_schedule
 # --------------------------------------------------------------------------
 
 
-def _validate_common(n_workers, speeds, churn, churn_schedule, replan):
+def _validate_common(n_workers, speeds, churn, churn_schedule, replan, dtype, devices):
     if speeds is None:
-        speeds = np.ones(n_workers, np.float32)
+        speeds = np.ones(n_workers)
     else:
-        speeds = np.asarray(speeds, np.float32)
+        speeds = np.asarray(speeds, np.float64)
         if speeds.shape != (n_workers,):
             raise ValueError("speeds must have one entry per worker")
         if (speeds <= 0).any():
@@ -653,7 +822,26 @@ def _validate_common(n_workers, speeds, churn, churn_schedule, replan):
             raise ValueError(f"unknown objective {replan.objective!r}")
         if replan.window < n_workers:
             raise ValueError("replan.window must be >= n_workers (ring push bound)")
-    return speeds
+    if dtype not in ("float32", "float64"):
+        raise ValueError(f"dtype must be 'float32' or 'float64', got {dtype!r}")
+    if dtype == "float64" and not jax.config.jax_enable_x64:
+        raise ValueError(
+            "dtype='float64' needs jax x64 enabled (jax.config.update('jax_enable_x64', True))"
+        )
+    if devices < 1:
+        raise ValueError("devices must be >= 1")
+    if devices > len(jax.devices()):
+        raise ValueError(f"devices={devices} but only {len(jax.devices())} jax devices visible")
+    pad = _bucket_workers(n_workers) - n_workers
+    return np.concatenate([speeds, np.ones(pad)])
+
+
+def _rep_slices(total: int, rep_chunk: Optional[int]):
+    if rep_chunk is None or rep_chunk >= total:
+        return [(0, total)]
+    if rep_chunk < 1:
+        raise ValueError("rep_chunk must be >= 1")
+    return [(lo, min(lo + rep_chunk, total)) for lo in range(0, total, rep_chunk)]
 
 
 def simulate_epochs(
@@ -672,6 +860,9 @@ def simulate_epochs(
     churn_schedule: Optional[ChurnSchedule] = None,
     churn_pairs_per_worker: int = 8,
     replan: Optional[ReplanConfig] = None,
+    dtype: str = "float32",
+    rep_chunk: Optional[int] = None,
+    devices: int = 1,
 ) -> EpochReport:
     """Replay the full engine semantics on the jax epoch scan.
 
@@ -682,10 +873,14 @@ def simulate_epochs(
     ``churn_schedule`` + degenerate service times).  ``n_batches=None`` means
     full parallelism (B = alive workers at dispatch), like the engine.
 
-    Each Monte-Carlo rep redraws every replica duration and (when ``churn`` is
-    given) its own fail/join timeline of ``churn_pairs_per_worker`` up/down
-    pairs per worker -- after which that worker stays up: the truncation an
-    explicit ``churn_schedule`` makes shared and exact.
+    Each Monte-Carlo rep derives every draw (replica durations, rescue draws,
+    and -- when ``churn`` is given -- its own fail/join timeline of
+    ``churn_pairs_per_worker`` up/down pairs per worker, after which that
+    worker stays up) from ``default_rng(SeedSequence((seed, rep)))``, so results are
+    bit-identical under ``rep_chunk`` chunking (bounding device memory for
+    rep budgets in the hundreds-to-thousands) and under multi-device
+    ``devices`` sharding.  ``dtype="float64"`` runs the scan lanes in double
+    precision for long-horizon workloads (requires jax x64).
     """
     arrivals = np.asarray(arrivals, dtype=np.float64)
     if arrivals.ndim != 1 or arrivals.size == 0:
@@ -694,43 +889,42 @@ def simulate_epochs(
         raise ValueError("arrivals must be sorted (FIFO order)")
     if n_batches is not None and not (1 <= int(n_batches) <= n_workers):
         raise ValueError(f"n_batches must lie in [1, {n_workers}] or be None")
-    speeds = _validate_common(n_workers, speeds, churn, churn_schedule, replan)
+    speeds = _validate_common(n_workers, speeds, churn, churn_schedule, replan, dtype, devices)
     if n_tasks is None:
         n_tasks = n_workers
-    n_jobs, s = arrivals.size, int(n_reps)
-    tau, tau_resc, ev_t, ev_w, ev_up, next_t = _prepare_lanes(
-        dist, n_workers, s, n_jobs, seed, churn, churn_schedule, churn_pairs_per_worker
+    n_jobs = arrivals.size
+    n_pad, jobs_pad, ev_pad, resc_cap, n_chunks = _shapes(
+        n_workers, n_jobs, churn, churn_schedule, churn_pairs_per_worker
     )
-    div_tab, (h1, h2) = divisor_table(n_workers), harmonic_tables(n_workers)
-    runner = _get_runner(n_workers, bool(cancel_redundant), bool(size_dependent), replan)
-    out = runner(
-        tau,
-        tau_resc,
-        ev_t,
-        ev_w,
-        ev_up,
-        next_t,
-        jnp.asarray(arrivals, jnp.float32),
-        jnp.asarray(speeds),
-        jnp.full(s, 0 if n_batches is None else int(n_batches), jnp.int32),
-        jnp.float32(n_tasks),
-        jnp.float32(replan.blend if replan is not None else 0.5),
-        jnp.asarray(div_tab),
-        jnp.asarray(h1, jnp.float32),
-        jnp.asarray(h2, jnp.float32),
+    cfg = _RunnerCfg(
+        n_pad, jobs_pad, ev_pad, resc_cap, n_chunks,
+        bool(cancel_redundant), bool(size_dependent), replan, dtype, int(devices),
     )
+    arrivals_pad = np.concatenate([arrivals, np.full(jobs_pad - n_jobs, np.inf)])
+    b0_val = 0 if n_batches is None else int(n_batches)
+    chunks = []
+    for lo, hi in _rep_slices(int(n_reps), rep_chunk):
+        chunks.append(
+            _run_lanes(
+                dist, cfg, n_workers, np.arange(lo, hi), np.full(hi - lo, b0_val, np.int32),
+                arrivals_pad, n_jobs, seed, speeds, churn, churn_schedule,
+                churn_pairs_per_worker, n_tasks, replan,
+            )
+        )
+    out = {k: np.concatenate([c[k] for c in chunks], axis=0) for k in chunks[0]}
+    br = np.asarray(out["br"])[:, :n_jobs]
     return EpochReport(
         arrivals=arrivals,
-        starts=np.asarray(out["starts"], np.float64),
-        finishes=np.asarray(out["finishes"], np.float64),
-        n_batches_used=np.asarray(out["bs"]),
-        replication_used=np.asarray(out["rs"]),
+        starts=np.asarray(out["starts"], np.float64)[:, :n_jobs],
+        finishes=np.asarray(out["finishes"], np.float64)[:, :n_jobs],
+        n_batches_used=br >> 16,
+        replication_used=br & 0xFFFF,
         worker_seconds=np.asarray(out["worker_seconds"], np.float64),
         cancelled_seconds_saved=np.asarray(out["cancelled_seconds_saved"], np.float64),
         n_worker_failures=np.asarray(out["n_worker_failures"]),
         n_replicas_rescued=np.asarray(out["n_replicas_rescued"]),
         n_replans=np.asarray(out["n_replans"]),
-        epoch_times=np.asarray(out["epoch_times"], np.float64)[:, 1:],
+        epoch_times=np.asarray(out["epoch_times"], np.float64),
     )
 
 
@@ -750,6 +944,9 @@ def frontier_job_times_dynamic(
     churn_schedule: Optional[ChurnSchedule] = None,
     churn_pairs_per_worker: int = 8,
     replan: Optional[ReplanConfig] = None,
+    dtype: str = "float32",
+    rep_chunk: Optional[int] = None,
+    devices: int = 1,
 ) -> np.ndarray:
     """Per-candidate job compute times under churn/hetero/replan dynamics.
 
@@ -761,39 +958,46 @@ def frontier_job_times_dynamic(
     streams) across ``ceil(n_reps / n_jobs)`` independent reps.  Returns
     ``(len(candidates), >= n_reps)`` compute times; unfinished jobs are inf
     (callers filter, like ``planner._frontier_stats``).
+
+    ``rep_chunk`` bounds device memory by scoring at most that many streams
+    per candidate per device call; ``devices`` shards the (candidate x
+    stream) lane grid via ``shard_map``.  Both are bit-identical to the
+    single-call single-device result (per-lane ``SeedSequence`` derivation).
     """
     bs = np.asarray(list(candidates), dtype=np.int32)
     if bs.size == 0:
         raise ValueError("need at least one candidate B")
     if (bs < 1).any() or (bs > n_workers).any():
         raise ValueError(f"candidates must lie in [1, {n_workers}], got {bs.tolist()}")
-    speeds = _validate_common(n_workers, speeds, churn, churn_schedule, replan)
+    speeds = _validate_common(n_workers, speeds, churn, churn_schedule, replan, dtype, devices)
     if n_tasks is None:
         n_tasks = n_workers
     n_jobs = max(1, min(int(n_jobs), int(n_reps)))
     s = math.ceil(n_reps / n_jobs)
     c = len(bs)
-    lanes = c * s
-    tau, tau_resc, ev_t, ev_w, ev_up, next_t = _prepare_lanes(
-        dist, n_workers, lanes, n_jobs, seed, churn, churn_schedule, churn_pairs_per_worker
+    n_pad, jobs_pad, ev_pad, resc_cap, n_chunks = _shapes(
+        n_workers, n_jobs, churn, churn_schedule, churn_pairs_per_worker
     )
-    div_tab, (h1, h2) = divisor_table(n_workers), harmonic_tables(n_workers)
-    runner = _get_runner(n_workers, bool(cancel_redundant), bool(size_dependent), replan)
-    out = runner(
-        tau,
-        tau_resc,
-        ev_t,
-        ev_w,
-        ev_up,
-        next_t,
-        jnp.zeros(n_jobs, jnp.float32),
-        jnp.asarray(speeds),
-        jnp.repeat(jnp.asarray(bs), s),
-        jnp.float32(n_tasks),
-        jnp.float32(replan.blend if replan is not None else 0.5),
-        jnp.asarray(div_tab),
-        jnp.asarray(h1, jnp.float32),
-        jnp.asarray(h2, jnp.float32),
+    cfg = _RunnerCfg(
+        n_pad, jobs_pad, ev_pad, resc_cap, n_chunks,
+        bool(cancel_redundant), bool(size_dependent), replan, dtype, int(devices),
+        full_outputs=False,  # planning reads starts/finishes only
     )
-    t = np.asarray(out["finishes"], np.float64) - np.asarray(out["starts"], np.float64)
-    return t.reshape(c, s * n_jobs)
+    arrivals_pad = np.concatenate([np.zeros(n_jobs), np.full(jobs_pad - n_jobs, np.inf)])
+    chunks = []
+    for lo, hi in _rep_slices(s, rep_chunk):
+        # lane (ci, rep) has global index ci * s + rep: chunking over reps
+        # keeps every lane's SeedSequence identity, hence its draws, unchanged
+        lane_idx = (np.arange(c)[:, None] * s + np.arange(lo, hi)[None, :]).ravel()
+        b0 = np.repeat(bs, hi - lo)
+        out = _run_lanes(
+            dist, cfg, n_workers, lane_idx, b0, arrivals_pad, n_jobs, seed,
+            speeds, churn, churn_schedule, churn_pairs_per_worker, n_tasks, replan,
+        )
+        fin = np.asarray(out["finishes"], np.float64)
+        start = np.asarray(out["starts"], np.float64)
+        # unfinished jobs (inf start and finish) score inf, not inf - inf
+        with np.errstate(invalid="ignore"):
+            t = np.where(np.isfinite(fin), fin - start, np.inf)
+        chunks.append(t[:, :n_jobs].reshape(c, (hi - lo) * n_jobs))
+    return np.concatenate(chunks, axis=1)

@@ -532,6 +532,9 @@ def sample_job_times(
     controller: Optional[OnlineReplanner] = None,
     replan=None,
     churn_pairs_per_worker: int = 8,
+    dtype: str = "float32",
+    rep_chunk: Optional[int] = None,
+    devices: int = 1,
 ) -> np.ndarray:
     """Job compute-time samples from the engine (i.i.d. when the cluster is
     static; correlated through the shared churn timeline otherwise).
@@ -548,6 +551,11 @@ def sample_job_times(
     ``controller`` (an :class:`OnlineReplanner`) drives the Python engine;
     ``replan`` (a :class:`~repro.cluster.epoch_scan.ReplanConfig`) drives the
     jax path -- pass one matching the other for differential runs.
+
+    ``dtype``/``rep_chunk``/``devices`` apply to the jax dynamic path only:
+    float64 scan lanes for long-horizon workloads, chunked rep batches to
+    bound device memory, and multi-device lane sharding (see
+    :func:`repro.cluster.epoch_scan.simulate_epochs`).
 
     Churn-horizon caveat: the jax path truncates sampled ``churn`` after
     ``churn_pairs_per_worker`` fail/join pairs per worker (each worker then
@@ -583,6 +591,9 @@ def sample_job_times(
                 churn_schedule=churn_schedule,
                 replan=replan,
                 churn_pairs_per_worker=churn_pairs_per_worker,
+                dtype=dtype,
+                rep_chunk=rep_chunk,
+                devices=devices,
             )
             return rep.compute_times[0]
         from .vectorized import frontier_job_times

@@ -24,15 +24,19 @@ Two entry points:
 
 Not covered here: fail/join churn, replica rescue, heterogeneous speeds, and
 online replanning live in :mod:`repro.cluster.epoch_scan`, which replays
-those dynamics as a ``lax.scan`` over churn epochs -- ``plan_cluster`` routes
+those dynamics as a bounded event-step loop (one rescue / dispatch /
+churn-boundary action per trip-count-static step, sharing this module's
+masked ``max_b min_r`` cover semantics per batch) -- ``plan_cluster`` routes
 to it automatically when any dynamic knob is set, so no scenario falls back
 to the Python event engine anymore.
 
 Memory note: the padded frontier grid materializes
 ``(C, n_reps, B_pad, r_pad)`` draws.  For a full divisor frontier of N
 workers that is ``C * n_reps * N**2`` floats -- fine for the N <= a few
-hundred regimes the planner sweeps; chunk ``n_reps`` at the call site for
-larger grids.
+hundred regimes the planner sweeps; pass ``rep_chunk`` to
+:func:`frontier_job_times` to bound device memory for larger grids (chunked
+calls derive draws per rep via ``fold_in``, so any chunking of the same
+``rep_chunk``-enabled call is bit-identical).
 """
 from __future__ import annotations
 
@@ -74,6 +78,24 @@ def _frontier_cover(flat: jax.Array, idx: jax.Array, bs: jax.Array, rs: jax.Arra
     return jax.vmap(one)(flat, idx, bs, rs, scales)
 
 
+@jax.jit
+def _frontier_cover_pallas(flat, idx, bs, rs, scales):
+    """Pallas-fused sibling of :func:`_frontier_cover` (TPU opt-in only:
+    ``repro.kernels.cover`` records that interpret mode loses on CPU)."""
+    from ..kernels.cover import masked_cover_times
+
+    def one(f, ix, b, r, s):
+        return masked_cover_times(f[:, ix] * s, b, r, interpret=False)
+
+    return jax.vmap(one)(flat, idx, bs, rs, scales)
+
+
+def _cover_impl():
+    from ..kernels.cover import pallas_cover_wins
+
+    return _frontier_cover_pallas if pallas_cover_wins() else _frontier_cover
+
+
 def frontier_job_times(
     dist: ServiceTime,
     n_workers: int,
@@ -83,6 +105,7 @@ def frontier_job_times(
     seed: int = 0,
     size_dependent: bool = True,
     n_tasks: int | None = None,
+    rep_chunk: int | None = None,
 ) -> np.ndarray:
     """i.i.d. job compute times for every candidate B in one device call.
 
@@ -91,6 +114,14 @@ def frontier_job_times(
     on the Python engine (single job, no churn, homogeneous workers) and to
     ``simulate_balanced`` -- the equivalence the test suite enforces at
     3 sigma.
+
+    ``rep_chunk`` bounds device memory to ``C * rep_chunk * n_slots`` draws
+    per call.  Chunked calls derive rep ``k``'s draws from
+    ``fold_in(key(seed), k)`` -- a pure function of the rep index -- so
+    ``rep_chunk=N`` in one chunk and the same budget split across ``k``
+    chunks are bit-identical on device (a different, equally valid stream
+    from the default single-draw path, which is kept for baseline/golden
+    stability).
     """
     bs, rs = _candidate_grid(n_workers, candidates)
     if n_tasks is None:
@@ -100,17 +131,28 @@ def frontier_job_times(
     idx = np.zeros((len(bs), b_pad, r_pad), dtype=np.int32)
     for c, (b, r) in enumerate(zip(bs, rs)):
         idx[c, :b, :r] = np.arange(b * r, dtype=np.int32).reshape(b, r)
-    key = jax.random.key(seed)
-    flat = dist.sample(key, (len(bs), int(n_reps), n_slots))
     scales = (n_tasks / bs) if size_dependent else np.ones(len(bs))
-    t = _frontier_cover(
-        flat,
-        jnp.asarray(idx),
-        jnp.asarray(bs),
-        jnp.asarray(rs),
-        jnp.asarray(scales, dtype=flat.dtype),
-    )
-    return np.asarray(t)
+    idx_j, bs_j, rs_j = jnp.asarray(idx), jnp.asarray(bs), jnp.asarray(rs)
+    cover = _cover_impl()
+    if rep_chunk is None:
+        key = jax.random.key(seed)
+        flat = dist.sample(key, (len(bs), int(n_reps), n_slots))
+        t = cover(flat, idx_j, bs_j, rs_j, jnp.asarray(scales, flat.dtype))
+        return np.asarray(t)
+    if rep_chunk < 1:
+        raise ValueError("rep_chunk must be >= 1")
+    base = jax.random.key(seed)
+    parts = []
+    for lo in range(0, int(n_reps), int(rep_chunk)):
+        hi = min(lo + int(rep_chunk), int(n_reps))
+        keys = jax.vmap(lambda k: jax.random.fold_in(base, k))(
+            jnp.arange(lo, hi, dtype=jnp.uint32)
+        )
+        flat = jax.vmap(lambda k: dist.sample(k, (len(bs), n_slots)))(keys)
+        flat = jnp.moveaxis(flat, 0, 1)  # (C, chunk, n_slots)
+        t = cover(flat, idx_j, bs_j, rs_j, jnp.asarray(scales, flat.dtype))
+        parts.append(np.asarray(t))
+    return np.concatenate(parts, axis=1)
 
 
 # --------------------------------------------------------------------------

@@ -172,6 +172,9 @@ class RedundancyPlanner:
         replan=None,
         jobs_per_stream: int = 16,
         churn_pairs_per_worker: int = 8,
+        dtype: str = "float32",
+        rep_chunk=None,
+        devices: int = 1,
     ) -> RedundancyPlan:
         """Pick (B, r) by *executing* each candidate on ``repro.cluster``.
 
@@ -184,7 +187,7 @@ class RedundancyPlanner:
         ``backend="jax"`` (default) scores the whole candidate frontier in
         batched device calls: the static grid kernel of
         ``repro.cluster.vectorized`` when the cluster is static, or the
-        churn-epoch scan of ``repro.cluster.epoch_scan`` once any dynamic
+        bounded epoch-scan step loop of ``repro.cluster.epoch_scan`` once any dynamic
         knob is set -- ``speeds`` (heterogeneous workers), ``churn`` /
         ``churn_schedule`` (fail/join dynamics with replica rescue), or
         ``replan`` (a :class:`~repro.cluster.epoch_scan.ReplanConfig` running
@@ -198,6 +201,17 @@ class RedundancyPlanner:
         Under churn, samples arrive in correlated serial streams of
         ``jobs_per_stream`` jobs sharing one churn timeline (the Python
         engine's structure); the static path keeps drawing i.i.d. jobs.
+
+        Scale knobs: ``rep_chunk`` bounds device memory by scoring at most
+        that many reps/streams per device call (any chunk size is
+        bit-identical to any other; on the *dynamic* path it also matches
+        the unchunked run exactly, while the static path's chunked
+        derivation is a separate, equally valid stream).  ``dtype="float64"``
+        (double-precision scan lanes for long-horizon workloads) and
+        ``devices`` (``shard_map`` over the lane grid, seed-identical to
+        single-device) apply to the dynamic epoch scan only -- the static
+        frontier path raises if they are set, rather than silently ignoring
+        them.
         """
         dynamic = (
             speeds is not None
@@ -223,8 +237,16 @@ class RedundancyPlanner:
                     churn_schedule=churn_schedule,
                     churn_pairs_per_worker=churn_pairs_per_worker,
                     replan=replan,
+                    dtype=dtype,
+                    rep_chunk=rep_chunk,
+                    devices=devices,
                 )
             else:
+                if dtype != "float32" or devices != 1:
+                    raise ValueError(
+                        "dtype/devices apply to dynamic scenarios (the epoch scan); "
+                        "the static frontier path supports rep_chunk only"
+                    )
                 from ..cluster.vectorized import frontier_job_times
 
                 rows = frontier_job_times(
@@ -234,6 +256,7 @@ class RedundancyPlanner:
                     n_reps,
                     seed=seed,
                     size_dependent=size_dependent,
+                    rep_chunk=rep_chunk,
                 )
         elif backend == "python":
             from ..cluster.master import sample_job_times
@@ -350,6 +373,9 @@ def plan_sweep(
     replan=None,
     jobs_per_stream: int = 16,
     churn_pairs_per_worker: int = 8,
+    dtype: str = "float32",
+    rep_chunk=None,
+    devices: int = 1,
 ) -> list:
     """Score redundancy frontiers for a (distribution x worker-budget) grid.
 
@@ -363,7 +389,7 @@ def plan_sweep(
     ``churn`` / ``churn_schedule`` / ``replan`` (plus the
     ``jobs_per_stream`` / ``churn_pairs_per_worker`` stream-shape knobs)
     extend the sweep to dynamic scenarios, forwarded to every grid point's
-    :meth:`plan_cluster` (scored on the churn-epoch scan under
+    :meth:`plan_cluster` (scored on the epoch-scan step loop under
     ``backend="jax"``).  ``speeds`` takes either one per-worker sequence
     (every budget must then equal its length) or a callable
     ``budget -> speeds`` for heterogeneous grids.
@@ -371,6 +397,13 @@ def plan_sweep(
     Grid point (i, j) uses seed ``seed + i * len(budgets) + j``; the
     property-test suite relies on that derivation to check each sweep entry
     against an identically-seeded per-candidate :meth:`plan_cluster` call.
+
+    Dynamic grid points share compiled kernels across the whole sweep: the
+    epoch scan pads worker/job/event/lane counts to shape buckets, so nearby
+    budgets hit one compile (``repro.cluster.epoch_scan.runner_cache_stats``
+    counts them).  ``dtype``/``rep_chunk``/``devices`` forward to every grid
+    point -- ``devices > 1`` shards each point's lane grid via ``shard_map``
+    with results identical to single-device execution.
     """
     dists = list(dists)
     budgets = [int(n) for n in budgets]
@@ -395,6 +428,9 @@ def plan_sweep(
                     replan=replan,
                     jobs_per_stream=jobs_per_stream,
                     churn_pairs_per_worker=churn_pairs_per_worker,
+                    dtype=dtype,
+                    rep_chunk=rep_chunk,
+                    devices=devices,
                 )
             )
         plans.append(row)

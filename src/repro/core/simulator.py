@@ -78,11 +78,12 @@ def gang_cover_times(
     padded ``(B_pad, r_pad)`` grid serves a whole frontier of (B, r)
     candidates -- the vectorized cluster backend (``repro.cluster.vectorized``)
     vmaps this kernel over candidates, while ``simulate_balanced`` and the
-    event engine's semantics are its unmasked special case.  The churn-epoch
-    scan (``repro.cluster.epoch_scan``) realizes the same contract
-    incrementally: its per-epoch commit step takes the masked min over each
-    batch's live replicas and the max over batches, which reduces to this
-    kernel whenever a job fits inside one epoch.
+    event engine's semantics are its unmasked special case.  The epoch-scan
+    step loop (``repro.cluster.epoch_scan``) realizes the same contract
+    incrementally: each commit step takes a segment-min over each batch's
+    live replicas and the max over batches, which reduces to this kernel
+    whenever a job fits inside one churn epoch; ``repro.kernels.cover``
+    carries the Pallas-fused formulation (TPU opt-in).
     """
     b_pad, r_pad = draws.shape[-2], draws.shape[-1]
     if replication is not None:

@@ -2,9 +2,13 @@
 
 The paper's contribution is a scheduling algorithm (no custom kernel of its
 own); these kernels serve the model substrate that the replication-planned
-training runs on: flash attention (the prefill/train hot-spot) and fused
-RMSNorm.  Validated on CPU with interpret=True against ref.py oracles.
+training runs on -- flash attention (the prefill/train hot-spot) and fused
+RMSNorm -- plus ``cover.py``, the fused masked earliest-cover reduction
+behind the cluster backends' frontier sweeps (TPU opt-in; CPU keeps the XLA
+fusion, see its recorded measurement).  Validated on CPU with
+interpret=True against oracles (ref.py / core.simulator).
 """
+from .cover import bench_masked_cover, masked_cover_times
 from .ops import attention, rmsnorm
 
-__all__ = ["attention", "rmsnorm"]
+__all__ = ["attention", "rmsnorm", "masked_cover_times", "bench_masked_cover"]

@@ -1,0 +1,131 @@
+"""Pallas masked earliest-cover reduction (the ``max_b min_r`` kernel).
+
+The vectorized cluster backends spend their inner loop on one reduction:
+mask a padded ``(B_pad, r_pad)`` replica grid to the candidate's (B, r) and
+take the earliest-cover time ``max_b min_r`` (`repro.core.simulator
+.gang_cover_times`).  XLA fuses the two reductions well on CPU; this module
+carries the fused Pallas formulation so the masked mask+min+max runs as one
+VMEM pass per rep tile on TPU, plus the measurement hook that decides
+whether routing the frontier kernel through it is worth it on the current
+backend.
+
+Measurement (recorded by ``bench_masked_cover``): on this repo's CPU CI the
+kernel only runs under ``interpret=True``, where it loses to the XLA fusion
+-- ~10x at 16k reps and ~60x at 64k reps x (16, 16) grids (interpret
+overhead scales with the grid) -- so :func:`repro.cluster.vectorized` keeps
+the jnp path unless ``REPRO_PALLAS_COVER=1`` is set *and* a TPU backend is
+present.  On TPU the fused pass saves one VMEM round-trip of the
+``(reps, B_pad)`` batch-min intermediate; re-run ``bench_masked_cover()``
+there before flipping the default.
+"""
+from __future__ import annotations
+
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+__all__ = ["masked_cover_times", "bench_masked_cover", "pallas_cover_wins"]
+
+
+def _kernel(d_ref, b_ref, r_ref, o_ref):
+    d = d_ref[...]  # (rows, B_pad, r_pad)
+    b, r = b_ref[0], r_ref[0]
+    b_pad, r_pad = d.shape[-2], d.shape[-1]
+    masked = jnp.where(jax.lax.iota(jnp.int32, r_pad)[None, None, :] < r, d, jnp.inf)
+    t_batch = jnp.min(masked, axis=-1)  # (rows, B_pad)
+    t_batch = jnp.where(
+        jax.lax.iota(jnp.int32, b_pad)[None, :] < b, t_batch, -jnp.inf
+    )
+    o_ref[...] = jnp.max(t_batch, axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def masked_cover_times(
+    draws: jax.Array,  # (reps, B_pad, r_pad) replica durations
+    n_batches: jax.Array,  # scalar B (traced ok)
+    replication: jax.Array,  # scalar r
+    block_rows: int = 512,
+    interpret: bool = True,
+) -> jax.Array:
+    """Fused masked ``max_b min_r`` over a padded replica grid.
+
+    Semantically identical to ``gang_cover_times(draws, n_batches,
+    replication)``; one VMEM pass per ``block_rows`` tile of reps.
+    ``interpret=True`` (the default) runs everywhere for differential
+    testing; pass ``interpret=False`` on a real TPU backend.
+    """
+    reps, b_pad, r_pad = draws.shape
+    br = min(block_rows, max(reps, 1))
+    pad = (-reps) % br
+    if pad:
+        draws = jnp.pad(draws, ((0, pad), (0, 0), (0, 0)))
+    grid = ((reps + pad) // br,)
+    out = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((br, b_pad, r_pad), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((br,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((reps + pad,), draws.dtype),
+        interpret=interpret,
+    )(
+        draws,
+        jnp.asarray(n_batches, jnp.int32).reshape(1),
+        jnp.asarray(replication, jnp.int32).reshape(1),
+    )
+    return out[:reps]
+
+
+def pallas_cover_wins() -> bool:
+    """Should the frontier kernel route through the Pallas cover reduction?
+
+    Only when a TPU backend can compile it natively -- interpret mode on
+    CPU loses to the XLA fusion by orders of magnitude (see module note).
+    """
+    import os
+
+    if os.environ.get("REPRO_PALLAS_COVER") != "1":
+        return False
+    return jax.default_backend() == "tpu"
+
+
+def bench_masked_cover(reps: int = 4096, b_pad: int = 8, r_pad: int = 8, iters: int = 5):
+    """Wall-clock the Pallas cover kernel against the XLA jnp fusion.
+
+    Returns ``{"pallas_seconds", "jnp_seconds", "pallas_wins"}`` -- the
+    measurement the tentpole asked for, runnable on any backend (interpret
+    mode off-TPU).
+    """
+    from ..core.simulator import gang_cover_times
+
+    key = jax.random.key(0)
+    draws = jax.random.exponential(key, (reps, b_pad, r_pad))
+    b = jnp.asarray(b_pad // 2, jnp.int32)
+    r = jnp.asarray(r_pad // 2, jnp.int32)
+    interpret = jax.default_backend() != "tpu"
+    oracle = jax.jit(gang_cover_times)
+
+    jax.block_until_ready(masked_cover_times(draws, b, r, interpret=interpret))
+    jax.block_until_ready(oracle(draws, b, r))
+    t_pallas, t_jnp = [], []
+    for _ in range(iters):
+        t0 = time.time()
+        jax.block_until_ready(masked_cover_times(draws, b, r, interpret=interpret))
+        t_pallas.append(time.time() - t0)
+        t0 = time.time()
+        jax.block_until_ready(oracle(draws, b, r))
+        t_jnp.append(time.time() - t0)
+    out = {
+        "pallas_seconds": float(np.min(t_pallas)),
+        "jnp_seconds": float(np.min(t_jnp)),
+        "interpret": interpret,
+    }
+    out["pallas_wins"] = out["pallas_seconds"] < out["jnp_seconds"]
+    return out

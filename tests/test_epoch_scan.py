@@ -431,3 +431,144 @@ def test_validation_errors():
             ClusterEngine(4, churn_schedule=bad)
         with pytest.raises(ValueError, match="worker ids"):
             simulate_epochs(d, 4, 2, np.zeros(2), 2, churn_schedule=bad)
+
+
+# --------------------------------------------------------------------------
+# scale-out contracts: rep chunking, device sharding, float64 lanes, buckets
+# --------------------------------------------------------------------------
+
+
+def test_rep_chunk_bit_identical():
+    """n_reps in one chunk vs k chunks: per-lane seed derivation makes the
+    device results bit-identical, not merely statistically equivalent."""
+    d = Pareto(1.0, 2.0)
+    churn = ChurnProcess(fail_rate=0.05, mean_downtime=1.0)
+    kw = dict(seed=7, churn=churn, churn_pairs_per_worker=2, cancel_redundant=True)
+    one = simulate_epochs(d, 6, 3, np.zeros(8), 30, **kw)
+    for chunk in (7, 13, 30):
+        part = simulate_epochs(d, 6, 3, np.zeros(8), 30, rep_chunk=chunk, **kw)
+        assert np.array_equal(one.finishes, part.finishes)
+        assert np.array_equal(one.starts, part.starts)
+        assert np.array_equal(one.worker_seconds, part.worker_seconds)
+        assert np.array_equal(one.cancelled_seconds_saved, part.cancelled_seconds_saved)
+        assert np.array_equal(one.epoch_times, part.epoch_times)
+    rows = frontier_job_times_dynamic(
+        d, 6, [1, 2, 3], 60, seed=3, n_jobs=10, churn=churn, churn_pairs_per_worker=2
+    )
+    for chunk in (2, 4):
+        rows_c = frontier_job_times_dynamic(
+            d, 6, [1, 2, 3], 60, seed=3, n_jobs=10, churn=churn,
+            churn_pairs_per_worker=2, rep_chunk=chunk,
+        )
+        assert np.array_equal(rows, rows_c)
+    with pytest.raises(ValueError, match="rep_chunk"):
+        simulate_epochs(d, 6, 3, np.zeros(4), 8, rep_chunk=0)
+
+
+def test_sharded_devices_match_single_device():
+    """devices > 1 shards the lane grid via shard_map; per-lane seed
+    derivation keeps the results exactly equal to single-device runs."""
+    import subprocess
+    import sys
+    import textwrap
+
+    code = textwrap.dedent("""
+        import numpy as np, jax
+        from repro.cluster import ChurnProcess, simulate_epochs
+        from repro.cluster.epoch_scan import frontier_job_times_dynamic
+        from repro.core.service_time import Exponential
+        assert len(jax.devices()) >= 4, jax.devices()
+        d, churn = Exponential(1.0), ChurnProcess(0.05, 1.0)
+        kw = dict(seed=2, churn=churn, churn_pairs_per_worker=2)
+        a = simulate_epochs(d, 6, 3, np.zeros(6), 10, devices=1, **kw)
+        b = simulate_epochs(d, 6, 3, np.zeros(6), 10, devices=4, **kw)
+        assert np.array_equal(a.finishes, b.finishes)
+        assert np.array_equal(a.worker_seconds, b.worker_seconds)
+        assert np.array_equal(a.n_replicas_rescued, b.n_replicas_rescued)
+        ra = frontier_job_times_dynamic(d, 6, [1, 2, 3, 6], 40, n_jobs=8,
+                                        devices=1, **kw)
+        rb = frontier_job_times_dynamic(d, 6, [1, 2, 3, 6], 40, n_jobs=8,
+                                        devices=4, **kw)
+        assert np.array_equal(ra, rb)
+        print("PASS")
+    """)
+    import os
+
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (
+        env.get("XLA_FLAGS", "") + " --xla_force_host_platform_device_count=4"
+    ).strip()
+    env["PYTHONPATH"] = os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src"
+    )
+    r = subprocess.run(
+        [sys.executable, "-c", code], capture_output=True, text=True, env=env,
+        timeout=600,
+    )
+    assert r.returncode == 0, f"STDOUT:\n{r.stdout[-2000:]}\nSTDERR:\n{r.stderr[-4000:]}"
+    assert "PASS" in r.stdout
+    # on the in-process (single device) backend, over-asking must be a
+    # clear error, not a silent fallback
+    with pytest.raises(ValueError, match="devices"):
+        simulate_epochs(
+            Exponential(1.0), 4, 2, np.zeros(2), 2, devices=len(__import__("jax").devices()) + 1
+        )
+
+
+def test_float64_lanes_fix_large_arrival_offsets():
+    """The documented float32 caveat, now fixed by dtype='float64': absolute
+    times ~1e7 quantize float32 queue waits, while float64 lanes track the
+    (float64) engine to ~1e-6."""
+    import jax
+
+    d = Empirical(samples=(1.3,))
+    n, b, n_jobs = 6, 3, 6
+    off = 1.0e7
+    arr = off + np.arange(n_jobs) * 1.5
+    speeds = (1.0, 1.5, 0.7, 1.2, 0.9, 1.1)
+    jobs = [
+        Job(job_id=i, dist=d, n_tasks=n, arrival=float(t)) for i, t in enumerate(arr)
+    ]
+    er = ClusterEngine(n, seed=3, n_batches=b, speeds=speeds).run(jobs)
+    e_start = np.array([r.start for r in er.records])
+    e_fin = np.array([r.finish for r in er.records])
+    f32 = simulate_epochs(d, n, b, arr, 1, seed=3, speeds=speeds)
+    prev = jax.config.jax_enable_x64
+    jax.config.update("jax_enable_x64", True)
+    try:
+        f64 = simulate_epochs(d, n, b, arr, 1, seed=3, speeds=speeds, dtype="float64")
+    finally:
+        jax.config.update("jax_enable_x64", prev)
+    err32 = np.max(np.abs(f32.finishes[0] - e_fin))
+    err64 = np.max(np.abs(f64.finishes[0] - e_fin))
+    assert err64 < 1e-6, err64
+    assert np.max(np.abs(f64.starts[0] - e_start)) < 1e-6
+    assert err32 > 0.1  # float32 eps at 1e7 is ~1: the caveat is real
+    # float64 without x64 enabled is a loud error, not silent downcast
+    with pytest.raises(ValueError, match="x64"):
+        simulate_epochs(d, n, b, arr, 1, seed=3, dtype="float64")
+    with pytest.raises(ValueError, match="dtype"):
+        simulate_epochs(d, n, b, arr, 1, seed=3, dtype="float16")
+
+
+def test_plan_sweep_one_compile_per_shape_bucket():
+    """A dynamic (distribution x budget) sweep whose budgets share one shape
+    bucket compiles the step runner exactly once (the bucketed jit cache);
+    host-side draw prep keeps distributions out of the compile key."""
+    from repro.cluster.epoch_scan import clear_runner_cache, runner_cache_stats
+
+    clear_runner_cache()
+    churn = ChurnProcess(fail_rate=0.03, mean_downtime=1.0)
+    plans = plan_sweep(
+        [Exponential(1.0), Exponential(2.0), ShiftedExponential(delta=0.5, mu=1.0)],
+        [6, 5],
+        n_reps=32,
+        seed=0,
+        churn=churn,
+        candidates=[1, 2],
+        jobs_per_stream=8,
+        churn_pairs_per_worker=2,
+    )
+    assert len(plans) == 3 and len(plans[0]) == 2
+    stats = runner_cache_stats()
+    assert sum(stats.values()) == 1, stats

@@ -126,3 +126,37 @@ def test_rmsnorm_matches_model_layer():
     w = jnp.ones((48,)) * 1.3
     got = rms_norm_fused(x, w, interpret=True)
     np.testing.assert_allclose(got, rms_norm(x, w), atol=1e-6, rtol=1e-6)
+
+
+# ------------------------------------------------------------- masked cover
+
+
+def test_masked_cover_matches_oracle():
+    """Fused Pallas ``max_b min_r`` == gang_cover_times on a (B, r) sweep,
+    including padded slots and non-divisible rep/block shapes."""
+    from repro.core.simulator import gang_cover_times
+    from repro.kernels.cover import bench_masked_cover, masked_cover_times
+
+    draws = jax.random.exponential(jax.random.key(3), (37, 6, 4))
+    for b, r in [(1, 1), (3, 2), (6, 4), (2, 4), (6, 1)]:
+        got = masked_cover_times(draws, jnp.int32(b), jnp.int32(r), block_rows=16)
+        want = gang_cover_times(draws, b, r)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+    # the measurement hook runs everywhere and reports honestly: interpret
+    # mode off-TPU, where the XLA fusion is expected to keep winning
+    m = bench_masked_cover(reps=256, iters=1)
+    assert set(m) == {"pallas_seconds", "jnp_seconds", "interpret", "pallas_wins"}
+    if jax.default_backend() != "tpu":
+        assert m["interpret"]
+
+
+def test_pallas_cover_routing_is_opt_in(monkeypatch):
+    from repro.cluster import vectorized
+    from repro.kernels.cover import pallas_cover_wins
+
+    monkeypatch.delenv("REPRO_PALLAS_COVER", raising=False)
+    assert not pallas_cover_wins()
+    assert vectorized._cover_impl() is vectorized._frontier_cover
+    monkeypatch.setenv("REPRO_PALLAS_COVER", "1")
+    if jax.default_backend() != "tpu":
+        assert not pallas_cover_wins()  # interpret mode loses: stay on XLA
