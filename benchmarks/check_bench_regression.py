@@ -18,7 +18,11 @@ vary with the runner).  Two properties are load-bearing and fail the build:
      de-serialized step loop raised its floor from 3x to 25x), and
   4. the dynamic path's cold start stays interactive
      (``dynamic.dists.*.jax_seconds_cold``, first-call compile+run, below an
-     absolute ceiling -- compile-time regressions hide behind warm timings).
+     absolute ceiling -- compile-time regressions hide behind warm timings),
+  5. space sharing keeps paying off and keeps its backend edge
+     (``space_sharing.response_ratio_packed_vs_gang`` stays below a ceiling
+     -- packed concurrent narrow jobs must beat the serial gang -- and
+     ``space_sharing.min_speedup_warm`` stays above its own floor).
 
 Floors are env-overridable so a one-off noisy runner can be diagnosed
 without editing the workflow:
@@ -27,6 +31,8 @@ without editing the workflow:
   BENCH_HEAVY_TOLERANCE          fraction of baseline heavy speedup to keep (0.5)
   BENCH_MIN_JAX_DYNAMIC_SPEEDUP  absolute floor on dynamic.min_speedup_warm (25)
   BENCH_MAX_JAX_DYNAMIC_COLD_SECONDS  ceiling on dynamic cold seconds (4.0)
+  BENCH_MIN_JAX_SPACE_SPEEDUP    absolute floor on space_sharing.min_speedup_warm (8)
+  BENCH_MAX_SPACE_RESPONSE_RATIO ceiling on packed/gang response ratio (0.85)
 """
 from __future__ import annotations
 
@@ -40,6 +46,8 @@ DEFAULT_MIN_JAX_SPEEDUP = 10.0
 DEFAULT_HEAVY_TOLERANCE = 0.5
 DEFAULT_MIN_JAX_DYNAMIC_SPEEDUP = 25.0
 DEFAULT_MAX_JAX_DYNAMIC_COLD_SECONDS = 4.0
+DEFAULT_MIN_JAX_SPACE_SPEEDUP = 8.0
+DEFAULT_MAX_SPACE_RESPONSE_RATIO = 0.85
 
 
 def check(
@@ -49,6 +57,8 @@ def check(
     heavy_tolerance: float,
     min_jax_dynamic_speedup: float = DEFAULT_MIN_JAX_DYNAMIC_SPEEDUP,
     max_jax_dynamic_cold_seconds: float = DEFAULT_MAX_JAX_DYNAMIC_COLD_SECONDS,
+    min_jax_space_speedup: float = DEFAULT_MIN_JAX_SPACE_SPEEDUP,
+    max_space_response_ratio: float = DEFAULT_MAX_SPACE_RESPONSE_RATIO,
 ) -> list:
     """Return a list of human-readable failure strings (empty = gate passes)."""
     failures = []
@@ -94,6 +104,29 @@ def check(
             f"(compile-time regressions hide behind warm timings)"
         )
 
+    cur_sp = current.get("space_sharing", {})
+    base_sp = baseline.get("space_sharing", {})
+    if not cur_sp or not base_sp:
+        failures.append("space_sharing section missing from current or baseline")
+    else:
+        ratio = cur_sp.get("response_ratio_packed_vs_gang")
+        if ratio is None or ratio > max_space_response_ratio:
+            failures.append(
+                f"space sharing stopped paying off: packed/gang response ratio "
+                f"{ratio if ratio is None else format(ratio, '.2f')} "
+                f"> ceiling {max_space_response_ratio:.2f} "
+                f"(baseline recorded "
+                f"{base_sp.get('response_ratio_packed_vs_gang', float('nan')):.2f})"
+            )
+        sp_edge = cur_sp.get("min_speedup_warm")
+        if sp_edge is None or sp_edge < min_jax_space_speedup:
+            failures.append(
+                f"jax space lane lost its edge: space_sharing.min_speedup_warm "
+                f"{sp_edge if sp_edge is None else format(sp_edge, '.1f')}x "
+                f"< floor {min_jax_space_speedup:.1f}x "
+                f"(baseline recorded {base_sp.get('min_speedup_warm', float('nan')):.1f}x)"
+            )
+
     return failures
 
 
@@ -119,10 +152,16 @@ def main() -> int:
             "BENCH_MAX_JAX_DYNAMIC_COLD_SECONDS", DEFAULT_MAX_JAX_DYNAMIC_COLD_SECONDS
         )
     )
+    min_jax_space = float(
+        os.environ.get("BENCH_MIN_JAX_SPACE_SPEEDUP", DEFAULT_MIN_JAX_SPACE_SPEEDUP)
+    )
+    max_space_ratio = float(
+        os.environ.get("BENCH_MAX_SPACE_RESPONSE_RATIO", DEFAULT_MAX_SPACE_RESPONSE_RATIO)
+    )
 
     failures = check(
         current, baseline, min_jax_speedup, heavy_tolerance, min_jax_dynamic,
-        max_dynamic_cold,
+        max_dynamic_cold, min_jax_space, max_space_ratio,
     )
 
     cur_b, base_b = current["backend"], baseline["backend"]
@@ -157,6 +196,19 @@ def main() -> int:
                 f"(ceiling {max_dynamic_cold:.2f}s); "
                 f"peak RSS {cur_d.get('peak_rss_mb', float('nan')):.0f} MB"
             )
+
+    cur_sp = current.get("space_sharing", {})
+    base_sp = baseline.get("space_sharing", {})
+    if cur_sp and base_sp:
+        print(
+            f"space sharing: packed/gang response "
+            f"x{cur_sp.get('response_ratio_packed_vs_gang', float('nan')):.2f} "
+            f"(baseline x{base_sp.get('response_ratio_packed_vs_gang', float('nan')):.2f}, "
+            f"ceiling {max_space_ratio:.2f}); "
+            f"jax space sweep edge {cur_sp.get('min_speedup_warm', float('nan')):.1f}x"
+            f"..{cur_sp.get('max_speedup_warm', float('nan')):.1f}x "
+            f"(floor {min_jax_space:.1f}x)"
+        )
 
     if failures:
         for f in failures:

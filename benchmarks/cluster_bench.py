@@ -23,6 +23,13 @@ Six scenarios on the synthetic Google-trace jobs (and parametric tails):
     used to fall back to Python entirely.  Records warm speed edge (min-of-3),
     per-dist cold compile+run seconds, and the process peak-RSS column; the
     regression gate keys on the warm edge *and* the cold seconds.
+  * ``space_sharing`` -- the space-sharing scheduler: mean response-time
+    ratio of ``packed`` (narrow concurrent jobs on disjoint subsets) vs the
+    ``fifo_gang`` baseline on one saturated workload, plus the jax-vs-python
+    warm edge on a space-shared full-frontier ``plan_cluster`` sweep (the
+    space lane of ``repro.cluster.epoch_scan`` vs the per-candidate Python
+    engine).  The regression gate keys on both: packed must keep beating
+    the gang, and the space lane must keep its speed edge.
 
 ``--smoke`` shrinks every sample count so the whole file runs in seconds --
 CI executes it on every PR, gates on the JSON against the committed
@@ -55,7 +62,14 @@ import numpy as np
 
 sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
 
-from repro.cluster import ChurnProcess, ClusterEngine, Job, jobs_from_traces, sample_job_times
+from repro.cluster import (
+    ChurnProcess,
+    ClusterEngine,
+    Job,
+    jobs_from_traces,
+    sample_job_times,
+    simulate_fifo,
+)
 from repro.core import traces
 from repro.core.planner import RedundancyPlanner
 from repro.core.service_time import Empirical, Exponential, Pareto
@@ -74,6 +88,8 @@ def _cfg(smoke: bool) -> dict:
             "backend_reps": 800,
             "dyn_workers": 12,
             "dyn_reps": 960,
+            "space_workers": 12,
+            "space_reps": 768,
         }
     return {
         "n_workers": 20,
@@ -84,6 +100,8 @@ def _cfg(smoke: bool) -> dict:
         "backend_reps": 1000,
         "dyn_workers": 16,
         "dyn_reps": 2048,
+        "space_workers": 16,
+        "space_reps": 2048,
     }
 
 
@@ -291,6 +309,76 @@ def bench_dynamic(cfg: dict, seed: int = 0) -> dict:
     return out
 
 
+def bench_space_sharing(cfg: dict, seed: int = 0) -> dict:
+    """Space-sharing scheduler: packed-vs-gang response ratio + jax edge.
+
+    Two measurements: (1) the scheduling effect itself -- a saturated stream
+    of narrow jobs (``workers_per_job = n/3``) finishes with a much lower
+    mean response under ``packed`` space sharing than under the whole-cluster
+    FIFO gang, because disjoint subsets run three jobs at once; (2) the
+    backend effect -- scoring a space-shared candidate frontier on the jax
+    space lane vs one Python event loop per candidate (warm min-of-3, like
+    ``bench_dynamic``; cold = compile+run).  The regression gate keys on the
+    response ratio staying below 1 with margin and the warm edge floor.
+    """
+    from repro.cluster.epoch_scan import clear_runner_cache
+    from repro.core import analysis
+
+    n, reps = cfg["space_workers"], cfg["space_reps"]
+    wpj = max(2, n // 3)
+    n_jobs = 24
+    arr = np.zeros(n_jobs)
+    d_ratio = Pareto(1.0, 1.8)
+    gang = simulate_fifo(d_ratio, n, 2, arr, max(64, reps // 8), seed=seed)
+    packed = simulate_fifo(
+        d_ratio, n, 2, arr, max(64, reps // 8), seed=seed,
+        scheduler="packed", workers_per_job=wpj,
+    )
+    ratio = float(packed.response_times.mean() / gang.response_times.mean())
+    out = {
+        "n_workers": n,
+        "n_reps": reps,
+        "workers_per_job": wpj,
+        "response_ratio_packed_vs_gang": ratio,
+        "dists": {},
+    }
+    cands = analysis.feasible_B(wpj)
+    for name, dist in [("exponential", Exponential(1.0)), ("pareto_heavy", Pareto(1.0, 1.8))]:
+        planner = RedundancyPlanner(n, candidates=cands)
+        kw = dict(
+            n_reps=reps, seed=seed, scheduler="packed", workers_per_job=wpj,
+            jobs_per_stream=48,
+        )
+        clear_runner_cache()
+        jax.clear_caches()  # same shapes across dists: force a real compile
+        t0 = time.time()
+        planner.plan_cluster(dist, **kw, backend="jax")
+        cold = time.time() - t0
+        warms = []
+        for _ in range(3):
+            t0 = time.time()
+            plan_jax = planner.plan_cluster(dist, **kw, backend="jax")
+            warms.append(time.time() - t0)
+        t_jax = min(warms)
+        t0 = time.time()
+        plan_py = planner.plan_cluster(dist, **kw, backend="python")
+        t_py = time.time() - t0
+        out["dists"][name] = {
+            "frontier_size": len(cands),
+            "python_seconds": t_py,
+            "jax_seconds_warm": t_jax,
+            "jax_seconds_cold": cold,
+            "speedup_warm": t_py / max(t_jax, 1e-9),
+            "B_python": plan_py.n_batches,
+            "B_jax": plan_jax.n_batches,
+        }
+    speedups = [d["speedup_warm"] for d in out["dists"].values()]
+    out["min_speedup_warm"] = min(speedups)
+    out["max_speedup_warm"] = max(speedups)
+    out["max_cold_seconds"] = max(d["jax_seconds_cold"] for d in out["dists"].values())
+    return out
+
+
 def run_all(smoke: bool = True, seed: int = 0) -> list:
     """CSV rows for the benchmark aggregator (smoke sizes by default)."""
     cfg = _cfg(smoke)
@@ -353,6 +441,17 @@ def run_all(smoke: bool = True, seed: int = 0) -> list:
             f"..{dy['max_speedup_warm']:.0f}x vs python engine",
         )
     )
+    t0 = time.time()
+    sp = bench_space_sharing(cfg, seed)
+    rows.append(
+        (
+            "cluster_space_sharing",
+            (time.time() - t0) * 1e6 / max(cfg["space_reps"], 1),
+            f"packed/gang response x{sp['response_ratio_packed_vs_gang']:.2f}, "
+            f"jax space sweep {sp['min_speedup_warm']:.0f}x"
+            f"..{sp['max_speedup_warm']:.0f}x",
+        )
+    )
     return rows
 
 
@@ -378,6 +477,7 @@ def main() -> None:
         "churn": bench_churn(cfg, args.seed),
         "backend": bench_backend(cfg, args.seed),
         "dynamic": bench_dynamic(cfg, args.seed),
+        "space_sharing": bench_space_sharing(cfg, args.seed),
     }
     if args.backend in ("python", "both"):
         result["redundancy"] = bench_redundancy(cfg, args.seed, backend="python")

@@ -1,27 +1,50 @@
 """Nightly-bench trend summary: bench JSONs -> one markdown table.
 
-First step toward the ROADMAP's dashboard item: the nightly workflow keeps a
-90-day series of ``cluster_bench.py`` artifacts; this script folds any number
-of those JSONs (a directory of downloaded artifacts, or just the fresh run)
-into a compact markdown table of the load-bearing series -- the jax speed
-edges (static + dynamic sweeps), the dynamic cold start, and the heavy-tail
-redundancy speedup -- sorted by each file's recorded timestamp-ish name.
+The nightly workflow keeps a 90-day series of ``cluster_bench.py``
+artifacts; this script folds any number of those JSONs (a directory of
+downloaded artifacts, or just the fresh run) into a compact markdown table
+of the load-bearing series -- the jax speed edges (static + dynamic + space
+sweeps), the packed-vs-gang response ratio, the dynamic cold start, and the
+heavy-tail redundancy speedup.  Rows are labelled by the run id carried in
+the artifact path (``gh run download`` lands each artifact in its own
+directory) and sorted naturally, so the table reads chronologically.
 
 Usage::
 
     python benchmarks/nightly_trend.py artifacts_dir_or_json [more ...]
-    python benchmarks/nightly_trend.py bench.json >> "$GITHUB_STEP_SUMMARY"
+    python benchmarks/nightly_trend.py bench-history fresh.json >> "$GITHUB_STEP_SUMMARY"
 
-For the full trend, download the artifact series first (e.g. ``gh run
-download --name cluster-bench-nightly -D artifacts/``) and point this at the
-directory.
+The nightly workflow downloads the retained artifact series into
+``bench-history/run-<id>/`` and points this script at the directory plus the
+fresh run's JSON.
 """
 from __future__ import annotations
 
 import argparse
 import json
 import pathlib
+import re
 import sys
+
+
+def _natkey(label: str) -> tuple:
+    """Natural sort key: digit runs compare numerically (run-9 < run-10)."""
+    return tuple(
+        int(chunk) if chunk.isdigit() else chunk
+        for chunk in re.split(r"(\d+)", label)
+    )
+
+
+def _label(root: pathlib.Path, f: pathlib.Path) -> str:
+    """Row label for one bench JSON: the most specific path component that
+    carries a run id (a digit sequence), falling back to the stem.  Keeps
+    downloaded-artifact layouts (``run-<id>/<artifact>/bench.json``, where
+    every stem is identical) distinguishable in the table."""
+    parts = (f.relative_to(root).parts if root.is_dir() else ()) + (f.stem,)
+    for part in parts:
+        if any(c.isdigit() for c in part):
+            return part.removesuffix(".json")
+    return f.stem
 
 
 def _load(paths: list[pathlib.Path]) -> list[tuple[str, dict]]:
@@ -30,9 +53,13 @@ def _load(paths: list[pathlib.Path]) -> list[tuple[str, dict]]:
         candidates = sorted(p.glob("**/*.json")) if p.is_dir() else [p]
         for f in candidates:
             try:
-                rows.append((f.stem, json.loads(f.read_text())))
+                rows.append((_label(p, f), json.loads(f.read_text())))
             except (OSError, json.JSONDecodeError) as ex:
                 print(f"skipping {f}: {ex}", file=sys.stderr)
+    # run-id labels sort naturally; a digit-less label is the freshly
+    # produced run (tonight's JSON has no run id yet -- the artifact name
+    # gains one only on upload) and belongs at the bottom, newest last
+    rows.sort(key=lambda r: (0 if any(c.isdigit() for c in r[0]) else 1, _natkey(r[0])))
     return rows
 
 
@@ -48,25 +75,30 @@ def trend_table(rows: list[tuple[str, dict]]) -> str:
     """Markdown table over the load-bearing nightly series."""
     header = (
         "| run | static edge (min..max) | dynamic edge (min..max) "
-        "| dynamic cold (s) | peak RSS (MB) | heavy-tail speedup |\n"
-        "|---|---|---|---|---|---|"
+        "| space edge (min..max) | packed/gang resp | dynamic cold (s) "
+        "| peak RSS (MB) | heavy-tail speedup |\n"
+        "|---|---|---|---|---|---|---|---|"
     )
     lines = [header]
     for name, d in rows:
         b = _get(d, "backend") or {}
         dy = _get(d, "dynamic") or {}
+        sp = _get(d, "space_sharing") or {}
         heavy = _get(d, "redundancy", "_summary", "max_heavy_speedup")
 
         def fmt(v, spec=".1f", suffix=""):
             return format(v, spec) + suffix if isinstance(v, (int, float)) else "-"
 
         lines.append(
-            "| {} | {}..{} | {}..{} | {} | {} | {} |".format(
+            "| {} | {}..{} | {}..{} | {}..{} | {} | {} | {} | {} |".format(
                 name,
                 fmt(b.get("min_speedup_warm"), ".0f", "x"),
                 fmt(b.get("max_speedup_warm"), ".0f", "x"),
                 fmt(dy.get("min_speedup_warm"), ".0f", "x"),
                 fmt(dy.get("max_speedup_warm"), ".0f", "x"),
+                fmt(sp.get("min_speedup_warm"), ".0f", "x"),
+                fmt(sp.get("max_speedup_warm"), ".0f", "x"),
+                fmt(sp.get("response_ratio_packed_vs_gang"), ".2f", "x"),
                 fmt(dy.get("max_cold_seconds"), ".2f"),
                 fmt(dy.get("peak_rss_mb"), ".0f"),
                 fmt(heavy, ".2f", "x"),

@@ -125,7 +125,8 @@ def bench_fig10_pareto_cov():
     _save("fig10_pareto_cov", curves)
     us = (time.time() - t0) * 1e6 / (4 * len(analysis.feasible_B(n)))
     all_dev = all(v == 1 for v in argmins.values())
-    return [("fig10_pareto_cov", us, f"B*={argmins}: {'full diversity (Thm 10 ok)' if all_dev else 'VIOLATED'}")]
+    verdict = "full diversity (Thm 10 ok)" if all_dev else "VIOLATED"
+    return [("fig10_pareto_cov", us, f"B*={argmins}: {verdict}")]
 
 
 def run_all():

@@ -20,6 +20,9 @@ Public surface:
   * events     -- event heap, simulation clock, named RNG streams
   * workers    -- Worker/WorkerPool, ChurnProcess, service draws
   * master     -- Job/JobRecord/EngineReport, ClusterEngine, workload helpers
+  * scheduler  -- space-sharing placement policies (fifo_gang | packed |
+    balanced) and per-job ``JobPlan`` overrides: concurrent jobs on
+    disjoint worker subsets, each with its own (B, r, cancellation) plan
   * control    -- OnlineReplanner (sliding-window refit + replan)
   * vectorized -- batched jax replay of the static engine semantics:
     whole-frontier candidate scoring (``frontier_job_times``) and FIFO
@@ -34,7 +37,7 @@ Public surface:
     ``backend="jax"`` never falls back to the Python engine for
     churned/heterogeneous scenarios
 """
-from . import control, epoch_scan, events, master, vectorized, workers
+from . import control, epoch_scan, events, master, scheduler, vectorized, workers
 from .control import OnlineReplanner
 from .epoch_scan import (
     EpochReport,
@@ -42,6 +45,7 @@ from .epoch_scan import (
     frontier_job_times_dynamic,
     simulate_epochs,
 )
+from .scheduler import JobPlan, Scheduler, make_scheduler
 from .master import (
     ClusterEngine,
     EngineReport,
@@ -58,8 +62,12 @@ __all__ = [
     "epoch_scan",
     "events",
     "master",
+    "scheduler",
     "vectorized",
     "workers",
+    "JobPlan",
+    "Scheduler",
+    "make_scheduler",
     "OnlineReplanner",
     "ClusterEngine",
     "EngineReport",

@@ -49,6 +49,16 @@ off)`` holds per rep in churn-free runs, and the report exposes the same
 counter fields (:meth:`EpochReport.accounting`) as
 :class:`~repro.cluster.master.EngineReport` for the differential tests.
 
+Space sharing (the scheduler subsystem of :mod:`repro.cluster.scheduler`)
+runs on a second lane builder, :func:`_build_space_lane`: per-worker
+job-assignment and availability-timestamp vectors plus per-job plan tables
+replay concurrent jobs on disjoint worker subsets under heterogeneous
+(B, r, cancellation) plans -- ``packed`` / ``balanced`` / gang-mode
+``fifo_gang`` placement, first-fit dispatch by earliest feasible time, and
+churn-aware rescue regrants.  ``scheduler`` / ``workers_per_job`` /
+``job_plans`` on the public entry points select it; the default
+configuration keeps the legacy single-gang lane untouched.
+
 Reproducibility contract: every lane (one Monte-Carlo rep of one candidate)
 derives its draws host-side from
 ``numpy.random.default_rng(SeedSequence((seed, global_lane_index)))`` -- a
@@ -73,6 +83,7 @@ from jax.scipy.special import gammaln
 
 from ..core.analysis import divisor_table, harmonic_tables
 from ..core.service_time import ServiceTime
+from .scheduler import SCHEDULERS, JobPlan, is_space
 from .workers import ChurnProcess, ChurnSchedule
 
 __all__ = [
@@ -217,6 +228,9 @@ class _RunnerCfg:
     # records plus their per-step scatters; the cheap scalar counters stay.
     # The plan_cluster/plan_sweep hot path only reads starts/finishes.
     full_outputs: bool = True
+    # None selects the legacy single-gang lane; a policy name selects the
+    # space-sharing lane (per-worker job assignment, per-job plan tables).
+    scheduler: Optional[str] = None
 
 
 # --------------------------------------------------------------------------
@@ -628,10 +642,341 @@ def _build_lane(cfg: _RunnerCfg):
     return lane
 
 
+# --------------------------------------------------------------------------
+# the space-sharing lane: concurrent jobs on disjoint worker subsets
+# --------------------------------------------------------------------------
+
+
+def _build_space_lane(cfg: _RunnerCfg):
+    """One lane of the space-sharing replay (packed / balanced / fifo_gang).
+
+    Extends the event-step formulation with per-worker vectors -- ``w_job``
+    (queue index of the owning job, ``jobs_pad`` = unallocated), ``w_avail``
+    (the *time* the worker is next available: set to the replica's scheduled
+    end at placement, corrected down to the batch win under cancellation,
+    to the job finish at release, to inf on fail and the join time on join)
+    and ``w_load`` (cumulative assigned wall-clock, the 'balanced' metric) --
+    plus per-job plan tables (worker request, B, cancellation mode) indexed
+    by queue position, so concurrent jobs run heterogeneous plans.
+
+    Batches of in-flight jobs live in *segment slots*: a (n,)-sized id space
+    mapping each unfinished batch to its rescue bookkeeping and win
+    reduction.  n slots always suffice -- rescues are served before any
+    dispatch, so at dispatch time every unfinished batch of every active job
+    holds a live replica on a distinct worker, and slots are freed the
+    moment a batch wins.
+
+    Each step still performs exactly one action, chosen by earliest time
+    (rescues outrank dispatches at equal times, matching the engine's
+    rescues-first event handlers):
+
+      * *rescue*: the earliest-serveable pending rescue onto the earliest
+        available worker -- free workers of the job's own allocation first,
+        else a free unallocated worker is regranted (churn-aware
+        reassignment);
+      * *dispatch*: the first-fit queued job (earliest feasible time, ties
+        by queue order) onto the policy's choice of free unallocated
+        workers (packed: lowest wids; balanced: least ``w_load``;
+        fifo_gang: the whole alive set);
+      * *boundary*: one fail/join event.
+
+    Batch wins and replica retirements up to the next churn boundary are
+    committed at the top of every step -- timestamps in ``w_avail`` make
+    commit order irrelevant to placement decisions, unlike the legacy
+    lane's projection from live replica state.
+    """
+    n, jobs_pad, ev_pad = cfg.n, cfg.jobs_pad, cfg.ev_pad
+    dt = jnp.dtype(cfg.dtype)
+    widx = jnp.arange(n)
+    J = jobs_pad  # sentinel: unallocated worker / free segment slot
+    balanced = cfg.scheduler == "balanced"
+
+    def lane(tau, tau_resc, ev_t, ev_w, ev_up, b0, arrivals, speeds, n_real, jobs_real,
+             n_tasks, req_tab, b_tab, cancel_tab, default_req):
+        inf = jnp.asarray(jnp.inf, dt)
+        jidx = jnp.arange(jobs_pad)
+
+        def bscale(b):
+            return n_tasks / b.astype(dt) if cfg.size_dep else jnp.asarray(1.0, dt)
+
+        def step(st):
+            st = {**st}
+            e = st["e"]
+            t_next = ev_t[e]
+            rp_seg = jnp.concatenate([st["g_s"], widx])
+            rp_w = jnp.concatenate([widx, st["rb_w"]])
+            seg_of = jnp.clip(rp_seg, 0, n - 1)
+            occupied = st["seg_job"] < J
+
+            # -- commit batch wins and replica retirements up to t_next
+            win = (
+                jnp.full(n + 1, jnp.inf, dt)
+                .at[rp_seg].min(jnp.where(st["rp_live"], st["rp_end"], jnp.inf))[:n]
+            )
+            newly = occupied & jnp.isfinite(win) & (win <= t_next)
+            on_win = st["rp_live"] & newly[seg_of] & (rp_seg < n)
+            win_r = win[seg_of]
+            # cancellation: every replica of a winning segment stops at the
+            # win (the winner by construction, the losers reclaimed)
+            kill_c = on_win & st["rp_cancel"]
+            st["busy"] = st["busy"] + jnp.where(kill_c, win_r - st["rp_start"], 0.0).sum()
+            st["saved"] = st["saved"] + jnp.where(kill_c, st["rp_end"] - win_r, 0.0).sum()
+            st["w_avail"] = st["w_avail"].at[jnp.where(kill_c, rp_w, 2 * n)].set(
+                jnp.where(kill_c, win_r, 0.0)
+            )
+            # non-cancel replicas retire individually at their own end
+            retire = st["rp_live"] & ~st["rp_cancel"] & (st["rp_end"] <= t_next)
+            st["busy"] = st["busy"] + jnp.where(
+                retire, st["rp_end"] - st["rp_start"], 0.0
+            ).sum()
+            live2 = st["rp_live"] & ~(kill_c | retire)
+            st["rp_live"] = live2
+            # non-cancel survivors of a winning segment detach: the batch is
+            # done but the straggler replica keeps burning to its end
+            gone = ~live2[:n] | (newly[jnp.clip(st["g_s"], 0, n - 1)] & (st["g_s"] < n))
+            st["g_s"] = jnp.where(gone, n, st["g_s"])
+
+            # -- job bookkeeping: wins decrement the owner's open count
+            segj = st["seg_job"]
+            i_new = jnp.where(newly, jnp.clip(segj, 0, J - 1), J)
+            st["job_left"] = st["job_left"].at[i_new].add(-1)
+            st["job_fin"] = st["job_fin"].at[i_new].max(win)
+            st["seg_job"] = jnp.where(newly, J, segj)  # freed at the win
+            st["resc_pending"] = st["resc_pending"] & ~newly
+            comp = st["dispatched"] & (st["job_left"] == 0) & ~st["recorded"]
+            st["fins"] = jnp.where(comp, st["job_fin"], st["fins"])
+            st["recorded"] = st["recorded"] | comp
+            st["n_done"] = st["n_done"] + comp.sum(dtype=jnp.int32)
+            wj = jnp.clip(st["w_job"], 0, J - 1)
+            rel = (st["w_job"] < J) & comp[wj]
+            st["w_avail"] = jnp.where(
+                rel, jnp.maximum(st["w_avail"], st["job_fin"][wj]), st["w_avail"]
+            )
+            st["w_job"] = jnp.where(rel, J, st["w_job"])
+
+            # -- rescue: earliest-serveable pending segment, oldest first on
+            # ties; eligible workers are the job's own free allocation plus
+            # free unallocated workers (regrant)
+            pend = st["resc_pending"]
+            segjob = jnp.clip(st["seg_job"], 0, J - 1)
+            free_w = st["alive"] & (st["w_job"] == J)
+            elig = (free_w[None, :] | (st["w_job"][None, :] == segjob[:, None])) & (
+                st["alive"][None, :] & pend[:, None]
+            )
+            serve0 = jnp.min(jnp.where(elig, st["w_avail"][None, :], jnp.inf), axis=1)
+            serve_t = jnp.where(pend, jnp.maximum(st["resc_t"], serve0), jnp.inf)
+            serve_min = jnp.min(serve_t)
+            m1 = serve_t == serve_min
+            r_min = jnp.min(jnp.where(m1, st["resc_t"], jnp.inf))
+            s_star = jnp.argmin(jnp.where(m1 & (st["resc_t"] == r_min), widx, n))
+            can_r = pend.any() & jnp.isfinite(serve_min) & (serve_min <= t_next)
+            j_star = segjob[s_star]
+            cand = st["alive"] & (st["w_avail"] <= serve_min) & (
+                (st["w_job"] == j_star) | (st["w_job"] == J)
+            )
+            # space policies serve rescues from the job's own free workers
+            # before regranting an unallocated one; the gang engine has no
+            # allocations and just takes the policy-first free worker
+            if cfg.scheduler == "fifo_gang":
+                tier = jnp.zeros(n, jnp.int32)
+            else:
+                tier = jnp.where(st["w_job"] == j_star, 0, 1)
+            key2 = st["w_load"] if balanced else widx.astype(dt)
+            mt = cand & (tier == jnp.min(jnp.where(cand, tier, 2)))
+            mk = mt & (key2 == jnp.min(jnp.where(mt, key2, jnp.inf)))
+            w_star = jnp.argmin(jnp.where(mk, widx, n))
+            rk = jnp.clip(st["resc_k"], 0, cfg.resc_cap - 1)
+            dur_r = (
+                tau_resc[rk, s_star]
+                * bscale(jnp.maximum(st["job_b"][j_star], 1))
+                / speeds[w_star]
+            )
+            i_w = jnp.where(can_r, w_star, n)
+            i_s = jnp.where(can_r, s_star, n)
+            i_slot = jnp.where(can_r, n + s_star, 2 * n)
+            st["rb_w"] = st["rb_w"].at[i_s].set(w_star.astype(jnp.int32))
+            st["rp_start"] = st["rp_start"].at[i_slot].set(serve_min)
+            st["rp_end"] = st["rp_end"].at[i_slot].set(serve_min + dur_r)
+            st["rp_live"] = st["rp_live"].at[i_slot].set(True)
+            st["rp_cancel"] = st["rp_cancel"].at[i_slot].set(cancel_tab[j_star])
+            st["resc_pending"] = st["resc_pending"].at[i_s].set(False)
+            st["w_job"] = st["w_job"].at[i_w].set(j_star.astype(jnp.int32))
+            st["w_avail"] = st["w_avail"].at[i_w].set(serve_min + dur_r)
+            st["w_load"] = st["w_load"].at[i_w].add(dur_r)
+            st["n_resc"] = st["n_resc"] + can_r
+            st["resc_k"] = st["resc_k"] + can_r
+
+            # -- dispatch: first-fit over undispatched jobs -- earliest
+            # feasible time (req-th smallest availability among free
+            # unallocated workers, floored at the job's arrival and the
+            # epoch start), ties broken by queue order
+            n_alive = st["alive"].sum(dtype=jnp.int32)
+            free_w2 = st["alive"] & (st["w_job"] == J)
+            sa = jnp.sort(jnp.where(free_w2, st["w_avail"], jnp.inf))
+            req = jnp.where(
+                req_tab > 0, req_tab, jnp.where(default_req > 0, default_req, n_alive)
+            )
+            req_eff = jnp.clip(req, 1, jnp.maximum(n_alive, 1))
+            kth = sa[jnp.clip(req_eff - 1, 0, n - 1)]
+            segfree = st["seg_job"] == J
+            seg_rank = jnp.cumsum(segfree) - 1
+            n_segfree = segfree.sum(dtype=jnp.int32)
+            bq = jnp.clip(
+                jnp.where(b_tab > 0, b_tab, jnp.where(b0 > 0, b0, req_eff)), 1, req_eff
+            )
+            t_q = jnp.maximum(arrivals, jnp.maximum(kth, st["t_epoch"]))
+            t_q = jnp.where(
+                (~st["dispatched"]) & (jidx < jobs_real) & (n_alive > 0)
+                & (bq <= n_segfree),
+                t_q,
+                jnp.inf,
+            )
+            q_star = jnp.argmin(t_q)  # first min: lowest queue index
+            td = t_q[q_star]
+            can_d = ~can_r & jnp.isfinite(td) & (td < t_next)
+            b_d = bq[q_star]
+            r_d = req_eff[q_star] // b_d
+            elig_d = free_w2 & (st["w_avail"] <= td)
+            keyd = jnp.where(elig_d, st["w_load"] if balanced else widx.astype(dt), jnp.inf)
+            rank = jnp.argsort(jnp.argsort(keyd, stable=True), stable=True)
+            sel_rep = elig_d & (rank < b_d * r_d)
+            sel_alloc = elig_d & (rank < req_eff[q_star])
+            # the beta-th dispatched batch takes the beta-th free segment
+            seg_by_beta = (
+                jnp.full(n + 1, n, jnp.int32)
+                .at[jnp.where(segfree, seg_rank, n)]
+                .set(widx.astype(jnp.int32))[:n]
+            )
+            w_seg = seg_by_beta[jnp.clip(rank % jnp.maximum(b_d, 1), 0, n - 1)]
+            # draw index = policy rank: the engine draws in placement order
+            dur = tau[q_star][jnp.clip(rank, 0, n - 1)] * bscale(b_d) / speeds
+            sel2 = jnp.concatenate([can_d & sel_rep, jnp.zeros(n, bool)])
+            st["g_s"] = jnp.where(can_d & sel_rep, w_seg, st["g_s"])
+            st["rp_live"] = st["rp_live"] | sel2
+            st["rp_start"] = jnp.where(sel2, td, st["rp_start"])
+            st["rp_end"] = jnp.where(
+                sel2, jnp.concatenate([td + dur, jnp.zeros(n, dt)]), st["rp_end"]
+            )
+            st["rp_cancel"] = jnp.where(sel2, cancel_tab[q_star], st["rp_cancel"])
+            st["w_job"] = jnp.where(can_d & sel_alloc, q_star.astype(jnp.int32), st["w_job"])
+            st["w_avail"] = jnp.where(
+                can_d & sel_rep,
+                td + dur,
+                jnp.where(can_d & sel_alloc, td, st["w_avail"]),
+            )
+            st["w_load"] = st["w_load"] + jnp.where(can_d & sel_rep, dur, 0.0)
+            st["seg_job"] = jnp.where(
+                can_d & segfree & (seg_rank < b_d), q_star.astype(jnp.int32), st["seg_job"]
+            )
+            i_q = jnp.where(can_d, q_star, jobs_pad)
+            st["starts"] = st["starts"].at[i_q].set(td)
+            st["dispatched"] = st["dispatched"].at[i_q].set(True)
+            st["job_left"] = st["job_left"].at[i_q].set(b_d)
+            st["job_b"] = st["job_b"].at[i_q].set(b_d)
+            if cfg.full_outputs:
+                st["br"] = st["br"].at[i_q].set((b_d << 16 | r_d).astype(jnp.int32))
+
+            # -- otherwise apply one fail/join event (sim-over gated)
+            do_b = ~can_r & ~can_d
+            sim_over = st["n_done"] >= jobs_real
+            t_ev, w_raw, up = ev_t[e], ev_w[e], ev_up[e]
+            act = do_b & (w_raw >= 0) & jnp.isfinite(t_ev) & ~sim_over
+            w = jnp.clip(w_raw, 0, n - 1)
+            was = st["alive"][w]
+            do_fail = act & ~up & was
+            do_join = act & up & ~was
+            st["alive"] = st["alive"].at[jnp.where(do_fail | do_join, w, n)].set(up)
+            kill = st["rp_live"] & (rp_w == w) & do_fail
+            st["busy"] = st["busy"] + jnp.where(kill, t_ev - st["rp_start"], 0.0).sum()
+            live3 = st["rp_live"] & ~kill
+            st["rp_live"] = live3
+            rp_seg3 = jnp.concatenate([st["g_s"], widx])
+            seg_cnt = jnp.zeros(n + 1, jnp.int32).at[rp_seg3].add(kill + 4096 * live3)[:n]
+            lost = ((seg_cnt & 4095) > 0) & (seg_cnt < 4096) & (st["seg_job"] < J)
+            st["resc_pending"] = st["resc_pending"] | lost
+            st["resc_t"] = jnp.where(lost, t_ev, st["resc_t"])
+            st["g_s"] = jnp.where(do_fail & (widx == w), n, st["g_s"])
+            st["w_job"] = st["w_job"].at[jnp.where(do_fail | do_join, w, n)].set(J)
+            st["w_avail"] = st["w_avail"].at[jnp.where(do_fail, w, n)].set(jnp.inf)
+            st["w_avail"] = st["w_avail"].at[jnp.where(do_join, w, n)].set(t_ev)
+            st["n_fail"] = st["n_fail"] + do_fail
+            st["t_epoch"] = jnp.maximum(
+                st["t_epoch"],
+                jnp.where(do_b & jnp.isfinite(t_ev), jnp.maximum(t_ev, 0.0), -inf),
+            )
+            if cfg.full_outputs:
+                st["ep_times"] = st["ep_times"].at[
+                    jnp.where(do_fail | do_join, e, ev_pad)
+                ].set(t_ev)
+            st["e"] = jnp.minimum(e + do_b, ev_pad - 1)
+            return st
+
+        st = {
+            "t_epoch": jnp.asarray(0.0, dt),
+            "e": jnp.int32(0),
+            "alive": widx < n_real,
+            "w_job": jnp.full(n, J, jnp.int32),
+            "w_avail": jnp.where(widx < n_real, 0.0, jnp.inf).astype(dt),
+            "w_load": jnp.zeros(n, dt),
+            "g_s": jnp.full(n, n, jnp.int32),
+            "rb_w": jnp.zeros(n, jnp.int32),
+            "rp_live": jnp.zeros(2 * n, bool),
+            "rp_start": jnp.zeros(2 * n, dt),
+            "rp_end": jnp.full(2 * n, jnp.inf, dt),
+            "rp_cancel": jnp.zeros(2 * n, bool),
+            "seg_job": jnp.full(n, J, jnp.int32),
+            "resc_pending": jnp.zeros(n, bool),
+            "resc_t": jnp.full(n, jnp.inf, dt),
+            "resc_k": jnp.int32(0),
+            "busy": jnp.asarray(0.0, dt),
+            "saved": jnp.asarray(0.0, dt),
+            "n_fail": jnp.int32(0),
+            "n_resc": jnp.int32(0),
+            "n_done": jnp.int32(0),
+            "dispatched": jnp.zeros(jobs_pad, bool),
+            "recorded": jnp.zeros(jobs_pad, bool),
+            "job_left": jnp.zeros(jobs_pad, jnp.int32),
+            "job_b": jnp.ones(jobs_pad, jnp.int32),
+            "job_fin": jnp.full(jobs_pad, -jnp.inf, dt),
+            "starts": jnp.full(jobs_pad, jnp.inf, dt),
+            "fins": jnp.full(jobs_pad, jnp.inf, dt),
+        }
+        if cfg.full_outputs:
+            st["br"] = jnp.zeros(jobs_pad, jnp.int32)
+            st["ep_times"] = jnp.full(ev_pad, jnp.inf, dt)
+
+        def chunk_body(carry):
+            s, it = carry
+            s = jax.lax.fori_loop(0, _STEP_CHUNK, lambda _, x: step(x), s)
+            return s, it + 1
+
+        def chunk_cond(carry):
+            s, it = carry
+            return (it < cfg.n_chunks) & (s["n_done"] < jobs_real)
+
+        st, _ = jax.lax.while_loop(chunk_cond, chunk_body, (st, jnp.int32(0)))
+        flush = jnp.where(st["rp_live"], st["rp_end"] - st["rp_start"], 0.0).sum()
+        out = {
+            "starts": st["starts"],
+            "finishes": st["fins"],
+            "worker_seconds": st["busy"] + flush,
+            "cancelled_seconds_saved": st["saved"],
+            "n_worker_failures": st["n_fail"],
+            "n_replicas_rescued": st["n_resc"],
+            "n_replans": jnp.int32(0),
+        }
+        if cfg.full_outputs:
+            out["br"] = st["br"]
+            out["epoch_times"] = st["ep_times"]
+        return out
+
+    return lane
+
+
 def _get_runner(cfg: _RunnerCfg):
     if cfg in _RUNNERS:
         return _RUNNERS[cfg]
-    lane = _build_lane(cfg)
+    lane = _build_space_lane(cfg) if cfg.scheduler is not None else _build_lane(cfg)
     fn = jax.vmap(lane, in_axes=(0,) * 6 + (None,) * 9)
     if cfg.devices > 1:
         from jax.sharding import Mesh, PartitionSpec as P
@@ -758,8 +1103,15 @@ def _shapes(n_workers, n_jobs, churn, churn_schedule, pairs):
 
 
 def _run_lanes(dist, cfg, n_workers, lane_idx, b0, arrivals_pad, n_jobs_real, seed,
-               speeds, churn, churn_schedule, pairs, n_tasks, replan):
-    """Pad the lane batch to its bucket, run the compiled runner, unpad."""
+               speeds, churn, churn_schedule, pairs, n_tasks, replan, space_tabs=None):
+    """Pad the lane batch to its bucket, run the compiled runner, unpad.
+
+    ``space_tabs`` carries the space-sharing lane's per-job plan tables
+    ``(req_tab, b_tab, cancel_tab, default_req)``; the legacy lane instead
+    receives the replanner's blend/divisor/harmonic tables.  Both variants
+    take 15 arguments with the same batched/broadcast split, so one vmap /
+    shard_map wrapper serves either.
+    """
     lanes = len(lane_idx)
     lanes_pad = _pow2(lanes)
     if cfg.devices > 1 and lanes_pad % cfg.devices:
@@ -771,12 +1123,27 @@ def _run_lanes(dist, cfg, n_workers, lane_idx, b0, arrivals_pad, n_jobs_real, se
         dist, n_workers, cfg.n, idx, lanes, cfg.jobs_pad, cfg.ev_pad, cfg.resc_cap,
         seed, churn, churn_schedule, pairs, dtype,
     )
-    div_tab, (h1, h2) = divisor_table(n_workers), harmonic_tables(n_workers)
-    div_pad = np.zeros((cfg.n + 1, _pow2(div_tab.shape[1])), div_tab.dtype)
-    div_pad[: div_tab.shape[0], : div_tab.shape[1]] = div_tab
-    h_pad = np.zeros(cfg.n + 1)
-    hp1, hp2 = h_pad.copy(), h_pad.copy()
-    hp1[: len(h1)], hp2[: len(h2)] = h1, h2
+    if cfg.scheduler is not None:
+        req_tab, b_tab, cancel_tab, default_req = space_tabs
+        tail = (
+            jnp.asarray(req_tab, jnp.int32),
+            jnp.asarray(b_tab, jnp.int32),
+            jnp.asarray(cancel_tab, bool),
+            jnp.int32(default_req),
+        )
+    else:
+        div_tab, (h1, h2) = divisor_table(n_workers), harmonic_tables(n_workers)
+        div_pad = np.zeros((cfg.n + 1, _pow2(div_tab.shape[1])), div_tab.dtype)
+        div_pad[: div_tab.shape[0], : div_tab.shape[1]] = div_tab
+        h_pad = np.zeros(cfg.n + 1)
+        hp1, hp2 = h_pad.copy(), h_pad.copy()
+        hp1[: len(h1)], hp2[: len(h2)] = h1, h2
+        tail = (
+            jnp.asarray(replan.blend if replan is not None else 0.5, dtype),
+            jnp.asarray(div_pad),
+            jnp.asarray(hp1, dtype),
+            jnp.asarray(hp2, dtype),
+        )
     runner = _get_runner(cfg)
     out = runner(
         tau,
@@ -790,10 +1157,7 @@ def _run_lanes(dist, cfg, n_workers, lane_idx, b0, arrivals_pad, n_jobs_real, se
         jnp.int32(n_workers),
         jnp.int32(n_jobs_real),
         jnp.asarray(n_tasks, dtype),
-        jnp.asarray(replan.blend if replan is not None else 0.5, dtype),
-        jnp.asarray(div_pad),
-        jnp.asarray(hp1, dtype),
-        jnp.asarray(hp2, dtype),
+        *tail,
     )
     return {k: np.asarray(v)[:lanes] for k, v in out.items()}
 
@@ -836,6 +1200,59 @@ def _validate_common(n_workers, speeds, churn, churn_schedule, replan, dtype, de
     return np.concatenate([speeds, np.ones(pad)])
 
 
+def _space_tabs(scheduler, workers_per_job, job_plans, n_jobs, jobs_pad, n_workers,
+                cancel_default, replan):
+    """Resolve space-sharing routing and build the per-job plan tables.
+
+    Returns ``(scheduler_name_or_None, tabs)``: ``None`` means the legacy
+    single-gang lane (scheduler ``fifo_gang`` with no per-job plans -- the
+    bit-compatible fast path); otherwise the space lane runs with
+    ``tabs = (req_tab, b_tab, cancel_tab, default_req)``, zero meaning
+    "inherit the engine-wide default" exactly like
+    :class:`~repro.cluster.scheduler.JobPlan`'s None fields.
+    """
+    if scheduler is None:
+        scheduler = "fifo_gang"
+    if scheduler not in SCHEDULERS:
+        raise ValueError(
+            f"unknown scheduler {scheduler!r} (expected one of {sorted(SCHEDULERS)})"
+        )
+    if not is_space(scheduler, workers_per_job, job_plans):
+        return None, None
+    if replan is not None:
+        raise ValueError(
+            "replan is not supported with space-sharing schedulers / per-job plans "
+            "(the online replanner picks one cluster-wide B)"
+        )
+    if workers_per_job is not None and not (1 <= int(workers_per_job) <= n_workers):
+        raise ValueError(f"workers_per_job must lie in [1, {n_workers}]")
+    req_tab = np.zeros(jobs_pad, np.int32)
+    b_tab = np.zeros(jobs_pad, np.int32)
+    cancel_tab = np.full(jobs_pad, bool(cancel_default))
+    if job_plans is not None:
+        plans = list(job_plans)
+        if not plans:
+            raise ValueError("job_plans must be a non-empty sequence (it cycles over jobs)")
+        for q in range(n_jobs):
+            p = plans[q % len(plans)]
+            if p is None:
+                continue
+            if not isinstance(p, JobPlan):
+                raise ValueError(f"job_plans entries must be JobPlan or None, got {type(p)}")
+            if p.workers is not None:
+                req_tab[q] = min(int(p.workers), n_workers)
+            if p.n_batches is not None:
+                b_tab[q] = int(p.n_batches)
+            if p.cancel_redundant is not None:
+                cancel_tab[q] = bool(p.cancel_redundant)
+    if scheduler == "fifo_gang":
+        req_tab[:] = 0  # the gang regime ignores worker requests, like the engine
+        default_req = 0
+    else:
+        default_req = int(workers_per_job) if workers_per_job is not None else 0
+    return scheduler, (req_tab, b_tab, cancel_tab, default_req)
+
+
 def _rep_slices(total: int, rep_chunk: Optional[int]):
     if rep_chunk is None or rep_chunk >= total:
         return [(0, total)]
@@ -860,6 +1277,9 @@ def simulate_epochs(
     churn_schedule: Optional[ChurnSchedule] = None,
     churn_pairs_per_worker: int = 8,
     replan: Optional[ReplanConfig] = None,
+    scheduler: str = "fifo_gang",
+    workers_per_job: Optional[int] = None,
+    job_plans: Optional[Sequence] = None,
     dtype: str = "float32",
     rep_chunk: Optional[int] = None,
     devices: int = 1,
@@ -872,6 +1292,17 @@ def simulate_epochs(
     enforces this at 3 sigma, and bit-comparably on shared
     ``churn_schedule`` + degenerate service times).  ``n_batches=None`` means
     full parallelism (B = alive workers at dispatch), like the engine.
+
+    ``scheduler`` / ``workers_per_job`` / ``job_plans`` mirror the engine's
+    space-sharing knobs: under ``"packed"`` or ``"balanced"`` jobs run
+    concurrently on disjoint worker subsets, each under its own
+    :class:`~repro.cluster.scheduler.JobPlan` (``job_plans`` cycles over the
+    arrival vector; unset fields inherit ``n_batches`` /
+    ``cancel_redundant`` / ``workers_per_job``).  The default ``fifo_gang``
+    with no per-job plans keeps the legacy single-gang lane bit-compatibly;
+    ``fifo_gang`` *with* per-job plans runs the space lane in gang mode
+    (whole-cluster dispatch, per-job B and cancellation).  ``replan`` is
+    mutually exclusive with space sharing.
 
     Each Monte-Carlo rep derives every draw (replica durations, rescue draws,
     and -- when ``churn`` is given -- its own fail/join timeline of
@@ -896,9 +1327,14 @@ def simulate_epochs(
     n_pad, jobs_pad, ev_pad, resc_cap, n_chunks = _shapes(
         n_workers, n_jobs, churn, churn_schedule, churn_pairs_per_worker
     )
+    sched_name, tabs = _space_tabs(
+        scheduler, workers_per_job, job_plans, n_jobs, jobs_pad, n_workers,
+        cancel_redundant, replan,
+    )
     cfg = _RunnerCfg(
         n_pad, jobs_pad, ev_pad, resc_cap, n_chunks,
         bool(cancel_redundant), bool(size_dependent), replan, dtype, int(devices),
+        scheduler=sched_name,
     )
     arrivals_pad = np.concatenate([arrivals, np.full(jobs_pad - n_jobs, np.inf)])
     b0_val = 0 if n_batches is None else int(n_batches)
@@ -908,7 +1344,7 @@ def simulate_epochs(
             _run_lanes(
                 dist, cfg, n_workers, np.arange(lo, hi), np.full(hi - lo, b0_val, np.int32),
                 arrivals_pad, n_jobs, seed, speeds, churn, churn_schedule,
-                churn_pairs_per_worker, n_tasks, replan,
+                churn_pairs_per_worker, n_tasks, replan, space_tabs=tabs,
             )
         )
     out = {k: np.concatenate([c[k] for c in chunks], axis=0) for k in chunks[0]}
@@ -944,11 +1380,21 @@ def frontier_job_times_dynamic(
     churn_schedule: Optional[ChurnSchedule] = None,
     churn_pairs_per_worker: int = 8,
     replan: Optional[ReplanConfig] = None,
+    scheduler: str = "fifo_gang",
+    workers_per_job: Optional[int] = None,
+    job_plans: Optional[Sequence] = None,
     dtype: str = "float32",
     rep_chunk: Optional[int] = None,
     devices: int = 1,
 ) -> np.ndarray:
     """Per-candidate job compute times under churn/hetero/replan dynamics.
+
+    ``scheduler`` / ``workers_per_job`` / ``job_plans`` score the candidates
+    under space sharing: each stream's jobs run concurrently on disjoint
+    worker subsets, the candidate B filling the plan of every job whose
+    :class:`~repro.cluster.scheduler.JobPlan` leaves ``n_batches`` unset --
+    so a frontier can be swept for one job class while competing classes
+    hold fixed heterogeneous plans.
 
     The dynamic sibling of :func:`repro.cluster.vectorized.frontier_job_times`
     and the workhorse behind ``plan_cluster(backend="jax")`` on dynamic
@@ -978,10 +1424,15 @@ def frontier_job_times_dynamic(
     n_pad, jobs_pad, ev_pad, resc_cap, n_chunks = _shapes(
         n_workers, n_jobs, churn, churn_schedule, churn_pairs_per_worker
     )
+    sched_name, tabs = _space_tabs(
+        scheduler, workers_per_job, job_plans, n_jobs, jobs_pad, n_workers,
+        cancel_redundant, replan,
+    )
     cfg = _RunnerCfg(
         n_pad, jobs_pad, ev_pad, resc_cap, n_chunks,
         bool(cancel_redundant), bool(size_dependent), replan, dtype, int(devices),
         full_outputs=False,  # planning reads starts/finishes only
+        scheduler=sched_name,
     )
     arrivals_pad = np.concatenate([np.zeros(n_jobs), np.full(jobs_pad - n_jobs, np.inf)])
     chunks = []
@@ -993,6 +1444,7 @@ def frontier_job_times_dynamic(
         out = _run_lanes(
             dist, cfg, n_workers, lane_idx, b0, arrivals_pad, n_jobs, seed,
             speeds, churn, churn_schedule, churn_pairs_per_worker, n_tasks, replan,
+            space_tabs=tabs,
         )
         fin = np.asarray(out["finishes"], np.float64)
         start = np.asarray(out["starts"], np.float64)

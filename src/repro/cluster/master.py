@@ -14,6 +14,13 @@ completes (reclaiming wasted worker-seconds), worker fail/join churn with
 replica rescue, heterogeneous worker speeds, and mid-stream replanning via
 an :class:`~repro.cluster.control.OnlineReplanner`.
 
+Scheduling is pluggable (:mod:`repro.cluster.scheduler`): the default
+``fifo_gang`` policy keeps the legacy whole-cluster gang bit-compatibly,
+while the space-sharing policies (``packed`` first-fit, ``balanced``
+least-loaded) run jobs concurrently on disjoint worker subsets of
+``workers_per_job`` workers, each job under its *own* redundancy plan --
+per-job B, r, and cancellation mode via :class:`~repro.cluster.scheduler.JobPlan`.
+
 With a single job, homogeneous workers, no churn, and no queueing the engine
 is statistically identical to ``core.simulator.simulate_balanced`` -- a
 property the test suite enforces.
@@ -31,6 +38,7 @@ from ..core.service_time import Empirical, ServiceTime
 from ..core.simulator import JobTimeStats, stats_from_samples
 from . import events as ev
 from .control import OnlineReplanner
+from .scheduler import JobPlan, Scheduler, make_scheduler
 from .workers import ChurnProcess, ChurnSchedule, Worker, WorkerPool, draw_batch_time
 
 __all__ = [
@@ -45,13 +53,20 @@ __all__ = [
 
 @dataclasses.dataclass(frozen=True)
 class Job:
-    """One job: N tasks whose service times follow ``dist``."""
+    """One job: N tasks whose service times follow ``dist``.
+
+    ``plan`` optionally overrides the engine-wide worker request, batch
+    count, and cancellation mode for this job alone (see
+    :class:`~repro.cluster.scheduler.JobPlan`) -- meaningful under a
+    space-sharing scheduler, where concurrent jobs run heterogeneous plans.
+    """
 
     job_id: int
     dist: ServiceTime
     n_tasks: int
     arrival: float = 0.0
     name: str = ""
+    plan: Optional[JobPlan] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -136,6 +151,11 @@ class _JobExec:
     start: float
     n_batches: int
     replication: int
+    # per-job cancellation mode (JobPlan override or the engine default)
+    cancel: bool = False
+    # wids allocated to this job under a space-sharing scheduler; None means
+    # the whole cluster (fifo_gang), so joins serve the active gang's rescues
+    alloc: Optional[Set[int]] = None
     done: Set[int] = dataclasses.field(default_factory=set)
     # batch -> wids with an in-flight replica of that batch
     outstanding: Dict[int, Set[int]] = dataclasses.field(default_factory=dict)
@@ -180,6 +200,17 @@ class ClusterEngine:
     controller:
         Optional :class:`OnlineReplanner`; fed observed task times, asked to
         replan after each job completes, and consulted at dispatch.
+    scheduler:
+        Placement policy name (``"fifo_gang"`` | ``"packed"`` |
+        ``"balanced"``) or a :class:`~repro.cluster.scheduler.Scheduler`
+        instance.  The default keeps the legacy whole-cluster FIFO gang
+        bit-compatibly; the space-sharing policies run queued jobs
+        concurrently on disjoint worker subsets.
+    workers_per_job:
+        Engine-wide worker request per job under a space-sharing scheduler
+        (``Job.plan.workers`` overrides it per job).  ``None`` means every
+        job requests the whole alive set, which degenerates packed/balanced
+        placement to gang-like serial execution.
     """
 
     def __init__(
@@ -194,12 +225,25 @@ class ClusterEngine:
         churn: Optional[ChurnProcess] = None,
         churn_schedule: Optional[ChurnSchedule] = None,
         controller: Optional[OnlineReplanner] = None,
+        scheduler: "str | Scheduler" = "fifo_gang",
+        workers_per_job: Optional[int] = None,
     ):
         if churn is not None and churn_schedule is not None:
             raise ValueError("pass either churn (sampled online) or churn_schedule, not both")
         if churn_schedule is not None and len(churn_schedule):
             if min(churn_schedule.wids) < 0 or max(churn_schedule.wids) >= n_workers:
                 raise ValueError("churn_schedule worker ids must lie in [0, n_workers)")
+        if workers_per_job is not None and not (1 <= int(workers_per_job) <= n_workers):
+            raise ValueError(f"workers_per_job must lie in [1, {n_workers}]")
+        _scheduler = make_scheduler(scheduler)
+        if controller is not None and _scheduler.space_sharing:
+            # same contract as the jax space lane: the online replanner picks
+            # one cluster-wide B, which has no meaning across concurrent
+            # heterogeneous plans -- reject instead of silently mis-planning
+            raise ValueError(
+                "replan/controller is not supported with space-sharing schedulers "
+                "(the online replanner picks one cluster-wide B)"
+            )
         self.pool = WorkerPool(n_workers, speeds)
         self.rng = ev.RngStreams(seed)
         self.n_batches = n_batches
@@ -208,6 +252,8 @@ class ClusterEngine:
         self.churn = churn
         self.churn_schedule = churn_schedule
         self.controller = controller
+        self.scheduler = _scheduler
+        self.workers_per_job = None if workers_per_job is None else int(workers_per_job)
 
         self.events = ev.EventQueue()
         self.clock = ev.SimClock()
@@ -218,6 +264,9 @@ class ClusterEngine:
 
         self._worker_seconds = 0.0
         self._saved_seconds = 0.0
+        # cumulative assigned wall-clock per worker: the 'balanced' policy's
+        # load metric (accrued at placement so the jax lane can replay it)
+        self._load_w = [0.0] * n_workers
         self._n_failures = 0
         self._n_rescued = 0
         self._n_jobs_expected = 0
@@ -226,14 +275,40 @@ class ClusterEngine:
 
     # -- plan resolution ----------------------------------------------------
 
-    def _choose_B(self, n_alive: int) -> int:
-        if self.controller is not None and self.controller.current is not None:
+    def _choose_B(self, job: Job, n_avail: int) -> int:
+        if job.plan is not None and job.plan.n_batches is not None:
+            b = job.plan.n_batches
+        elif self.controller is not None and self.controller.current is not None:
             b = self.controller.current.n_batches
         elif self.n_batches is not None:
             b = self.n_batches
         else:
-            b = n_alive
-        return max(1, min(int(b), n_alive))
+            b = n_avail
+        return max(1, min(int(b), n_avail))
+
+    def _job_cancel(self, job: Job) -> bool:
+        if job.plan is not None and job.plan.cancel_redundant is not None:
+            return bool(job.plan.cancel_redundant)
+        return self.cancel_redundant
+
+    def _job_request(self, job: Job, n_alive: int) -> int:
+        """Worker-subset size the job gets, clamped to the alive count
+        (a job asking for more than is alive runs on what there is, exactly
+        like the gang regime does)."""
+        if job.plan is not None and job.plan.workers is not None:
+            req = job.plan.workers
+        elif self.workers_per_job is not None:
+            req = self.workers_per_job
+        else:
+            req = n_alive
+        return max(1, min(int(req), n_alive))
+
+    def _allocated_wids(self) -> Set[int]:
+        out: Set[int] = set()
+        for jexec in self.active.values():
+            if jexec.alloc is not None:
+                out |= jexec.alloc
+        return out
 
     # -- dispatch -----------------------------------------------------------
 
@@ -249,6 +324,7 @@ class ClusterEngine:
         worker.assignment = (jexec.job.job_id, batch)
         worker.busy_since = now
         worker.scheduled_end = now + duration
+        self._load_w[worker.wid] += duration
         jexec.outstanding.setdefault(batch, set()).add(worker.wid)
         self.events.push(
             now + duration,
@@ -260,34 +336,106 @@ class ClusterEngine:
         )
 
     def _try_dispatch(self) -> None:
-        # Whole-cluster FIFO gang scheduling: the next job starts once no job
-        # is active and every alive worker is free (stragglers of the previous
-        # job -- unless cancelled -- delay the next one: redundancy's queueing
-        # cost, which cancellation reclaims).
-        while self.queue and not self.active:
-            n_alive = self.pool.n_alive()
-            free = self.pool.free_workers()
-            if n_alive == 0 or len(free) < n_alive:
-                return
-            job = self.queue.popleft()
-            b = self._choose_B(n_alive)
-            r = n_alive // b
-            jexec = _JobExec(job=job, start=self.clock.now, n_batches=b, replication=r)
+        if not self.scheduler.space_sharing:
+            # Whole-cluster FIFO gang scheduling: the next job starts once no
+            # job is active and every alive worker is free (stragglers of the
+            # previous job -- unless cancelled -- delay the next one:
+            # redundancy's queueing cost, which cancellation reclaims).
+            while self.queue and not self.active:
+                n_alive = self.pool.n_alive()
+                free = self.pool.free_workers()
+                if n_alive == 0 or len(free) < n_alive:
+                    return
+                job = self.queue.popleft()
+                b = self._choose_B(job, n_alive)
+                r = n_alive // b
+                jexec = _JobExec(
+                    job=job,
+                    start=self.clock.now,
+                    n_batches=b,
+                    replication=r,
+                    cancel=self._job_cancel(job),
+                )
+                self.active[job.job_id] = jexec
+                for idx, worker in enumerate(free[: b * r]):
+                    self._assign(worker, jexec, idx % b)
+            return
+        # Space sharing: one first-fit pass over the FIFO queue -- every
+        # queued job that fits on the currently free *unallocated* workers
+        # starts now on its own disjoint subset (a narrow job may overtake a
+        # wide head-of-line job that does not fit yet).  One pass suffices:
+        # placements only consume eligible workers, so a job that did not
+        # fit earlier in the pass cannot fit later in it.
+        n_alive = self.pool.n_alive()
+        if n_alive == 0:
+            return
+        allocated = self._allocated_wids()
+        eligible = [w for w in self.pool.free_workers() if w.wid not in allocated]
+        for job in list(self.queue):
+            if not eligible:
+                break  # nothing left to place
+            req = self._job_request(job, n_alive)
+            if len(eligible) < req:
+                continue
+            chosen = self.scheduler.select(req, eligible, self._load_w)
+            b = self._choose_B(job, req)
+            r = req // b
+            jexec = _JobExec(
+                job=job,
+                start=self.clock.now,
+                n_batches=b,
+                replication=r,
+                cancel=self._job_cancel(job),
+                alloc={w.wid for w in chosen},
+            )
             self.active[job.job_id] = jexec
-            for idx, worker in enumerate(free[: b * r]):
+            self.queue.remove(job)
+            for idx, worker in enumerate(chosen[: b * r]):
                 self._assign(worker, jexec, idx % b)
+            taken = jexec.alloc
+            eligible = [w for w in eligible if w.wid not in taken]
 
     def _assign_rescues(self) -> None:
-        while self.rescue:
-            free = self.pool.free_workers()
-            if not free:
-                return
-            job_id, batch = self.rescue.popleft()
+        if not self.scheduler.space_sharing:
+            while self.rescue:
+                free = self.pool.free_workers()
+                if not free:
+                    return
+                job_id, batch = self.rescue.popleft()
+                jexec = self.active.get(job_id)
+                if jexec is None or batch in jexec.done:
+                    continue
+                self._assign(free[0], jexec, batch)
+                self._n_rescued += 1
+            return
+        # Space sharing: serve the FIFO rescue queue without head-of-line
+        # blocking across jobs (a blocked rescue must not starve another
+        # job's rescue whose own workers are free -- that would deadlock).
+        # Eligible workers are free workers still allocated to the job;
+        # failing that, a free unallocated worker is *regranted* into the
+        # allocation -- the churn-aware reassignment that restores a job
+        # whose allocation shrank below its replica need.
+        remaining = []
+        allocated = self._allocated_wids()
+        for job_id, batch in list(self.rescue):
             jexec = self.active.get(job_id)
             if jexec is None or batch in jexec.done:
-                continue
-            self._assign(free[0], jexec, batch)
+                continue  # stale entry: the job or batch already finished
+            free = self.pool.free_workers()
+            own = [w for w in free if w.wid in jexec.alloc]
+            if own:
+                worker = self.scheduler.select(1, own, self._load_w)[0]
+            else:
+                outside = [w for w in free if w.wid not in allocated]
+                if not outside:
+                    remaining.append((job_id, batch))
+                    continue
+                worker = self.scheduler.select(1, outside, self._load_w)[0]
+                jexec.alloc.add(worker.wid)
+                allocated.add(worker.wid)
+            self._assign(worker, jexec, batch)
             self._n_rescued += 1
+        self.rescue = collections.deque(remaining)
 
     # -- event handlers -----------------------------------------------------
 
@@ -321,13 +469,13 @@ class ClusterEngine:
             tau = duration * worker.speed
             if self.size_dependent:
                 tau /= jexec.batch_tasks
-            censored = self.cancel_redundant and batch not in jexec.done
+            censored = jexec.cancel and batch not in jexec.done
             n_rivals = len(jexec.outstanding[batch]) if censored else 0
             self.controller.observe(tau, n_competitors=1 + n_rivals)
 
         if batch not in jexec.done:
             jexec.done.add(batch)
-            if self.cancel_redundant:
+            if jexec.cancel:
                 for sib_wid in sorted(jexec.outstanding[batch]):
                     sib = self.pool[sib_wid]
                     self._saved_seconds += sib.scheduled_end - now
@@ -385,6 +533,11 @@ class ClusterEngine:
                     self.rescue.append((job_id, batch))
             worker.assignment = None
             worker.scheduled_end = math.inf
+        # a failed worker leaves whatever allocation held it (space sharing):
+        # the job recovers through rescue regrants, not by keeping dead wids
+        for jexec in self.active.values():
+            if jexec.alloc is not None:
+                jexec.alloc.discard(wid)
         worker.alive = False
         worker.epoch += 1
         worker.churn_epoch += 1
@@ -449,6 +602,11 @@ class ClusterEngine:
             n_events += 1
             if kind == ev.JOB_ARRIVAL:
                 self.queue.append(payload["job"])
+                # rescues get first pick of free capacity even at arrivals
+                # (a no-op under fifo_gang: rescues pending implies no free
+                # worker here); keeps the space-sharing invariant that a
+                # dispatch never overtakes a serviceable rescue
+                self._assign_rescues()
                 self._try_dispatch()
             elif kind == ev.BATCH_DONE:
                 self._on_batch_done(**payload)
@@ -531,6 +689,9 @@ def sample_job_times(
     churn_schedule: Optional[ChurnSchedule] = None,
     controller: Optional[OnlineReplanner] = None,
     replan=None,
+    scheduler: str = "fifo_gang",
+    workers_per_job: Optional[int] = None,
+    job_plans: Optional[Sequence] = None,
     churn_pairs_per_worker: int = 8,
     dtype: str = "float32",
     rep_chunk: Optional[int] = None,
@@ -557,6 +718,14 @@ def sample_job_times(
     bound device memory, and multi-device lane sharding (see
     :func:`repro.cluster.epoch_scan.simulate_epochs`).
 
+    ``scheduler`` / ``workers_per_job`` / ``job_plans`` run the stream under
+    space sharing on both backends: jobs execute concurrently on disjoint
+    worker subsets, each under its own
+    :class:`~repro.cluster.scheduler.JobPlan` (``job_plans`` cycles over the
+    stream; unset fields inherit ``n_batches`` / ``cancel_redundant`` /
+    ``workers_per_job``).  Any space knob routes ``backend="jax"`` to the
+    epoch scan's space lane even when the cluster is otherwise static.
+
     Churn-horizon caveat: the jax path truncates sampled ``churn`` after
     ``churn_pairs_per_worker`` fail/join pairs per worker (each worker then
     stays up), while the Python engine samples churn for the whole run --
@@ -564,6 +733,9 @@ def sample_job_times(
     ``churn_pairs_per_worker`` (or pass an explicit ``churn_schedule``,
     which both backends replay identically and truncate identically).
     """
+    from .scheduler import is_space
+
+    space = is_space(scheduler, workers_per_job, job_plans)
     dynamic = (
         speeds is not None
         or churn is not None
@@ -573,7 +745,7 @@ def sample_job_times(
     if backend == "jax":
         if controller is not None:
             raise ValueError("backend='jax' takes replan=ReplanConfig(...), not controller")
-        if dynamic:
+        if dynamic or space:
             from .epoch_scan import simulate_epochs
 
             rep = simulate_epochs(
@@ -590,6 +762,9 @@ def sample_job_times(
                 churn=churn,
                 churn_schedule=churn_schedule,
                 replan=replan,
+                scheduler=scheduler,
+                workers_per_job=workers_per_job,
+                job_plans=job_plans,
                 churn_pairs_per_worker=churn_pairs_per_worker,
                 dtype=dtype,
                 rep_chunk=rep_chunk,
@@ -609,12 +784,26 @@ def sample_job_times(
         )[0]
     if backend != "python":
         raise ValueError(f"unknown backend {backend!r} (expected 'jax' or 'python')")
+    if space and (replan is not None or controller is not None):
+        # match the jax space lane's contract so the backends agree on what
+        # is expressible (one cluster-wide replanned B has no meaning across
+        # concurrent heterogeneous plans)
+        raise ValueError(
+            "replan/controller is not supported with space-sharing schedulers "
+            "/ per-job plans (the online replanner picks one cluster-wide B)"
+        )
     if replan is not None:
         if controller is not None:
             raise ValueError("pass either controller or replan, not both")
         controller = replan.to_controller(n_workers)
+    plans = list(job_plans) if job_plans is not None else None
     jobs = [
-        Job(job_id=i, dist=dist, n_tasks=n_tasks if n_tasks is not None else n_workers)
+        Job(
+            job_id=i,
+            dist=dist,
+            n_tasks=n_tasks if n_tasks is not None else n_workers,
+            plan=plans[i % len(plans)] if plans else None,
+        )
         for i in range(n_samples)
     ]
     engine = ClusterEngine(
@@ -627,6 +816,8 @@ def sample_job_times(
         churn=churn,
         churn_schedule=churn_schedule,
         controller=controller,
+        scheduler=scheduler,
+        workers_per_job=workers_per_job,
     )
     report = engine.run(jobs)
     return report.compute_times

@@ -248,6 +248,10 @@ def simulate_fifo(
     cancel_redundant: bool = False,
     size_dependent: bool = True,
     n_tasks: int | None = None,
+    scheduler: str = "fifo_gang",
+    workers_per_job: int | None = None,
+    job_plans=None,
+    dtype: str = "float32",
 ) -> FifoReport:
     """Whole-cluster FIFO gang queueing, batched over Monte-Carlo reps.
 
@@ -255,7 +259,52 @@ def simulate_fifo(
     each rep redraws every replica duration.  Statistically identical to
     ``ClusterEngine(n_workers, n_batches=..., cancel_redundant=...)`` on the
     same workload (no churn, homogeneous speeds).
+
+    ``scheduler`` / ``workers_per_job`` / ``job_plans`` extend the replay to
+    space sharing (jobs on disjoint worker subsets under per-job
+    heterogeneous plans).  The arrival-scan kernel below is inherently
+    single-gang -- its carry is one scalar of cluster slack -- so any space
+    knob delegates to the epoch scan's space lane
+    (:func:`repro.cluster.epoch_scan.simulate_epochs` on a churn-free
+    timeline), which shares this module's masked-cover semantics per batch.
+    Precision caveat on that delegated path: the scan lanes carry *absolute*
+    times in ``dtype`` (default float32), unlike this kernel's float64
+    arrival arithmetic -- for arrival offsets large enough to quantize
+    (~1e7), pass ``dtype="float64"`` (requires jax x64) exactly as with
+    :func:`~repro.cluster.epoch_scan.simulate_epochs`.
     """
+    from .scheduler import is_space
+
+    if is_space(scheduler, workers_per_job, job_plans):
+        from .epoch_scan import simulate_epochs
+
+        rep = simulate_epochs(
+            dist,
+            n_workers,
+            n_batches,
+            arrivals,
+            n_reps,
+            seed=seed,
+            cancel_redundant=cancel_redundant,
+            size_dependent=size_dependent,
+            n_tasks=n_tasks,
+            scheduler=scheduler,
+            workers_per_job=workers_per_job,
+            job_plans=job_plans,
+            dtype=dtype,
+        )
+        return FifoReport(
+            arrivals=rep.arrivals,
+            starts=rep.starts,
+            finishes=rep.finishes,
+            worker_seconds=rep.worker_seconds,
+            cancelled_seconds_saved=rep.cancelled_seconds_saved,
+        )
+    if dtype != "float32":
+        raise ValueError(
+            "dtype applies to the space-sharing delegation only; the gang kernel "
+            "already rebuilds absolute times in float64"
+        )
     arrivals = np.asarray(arrivals, dtype=np.float64)
     if arrivals.ndim != 1 or arrivals.size == 0:
         raise ValueError("arrivals must be a non-empty 1-D array")

@@ -116,7 +116,9 @@ class ArchConfig:
         if self.pad_heads_to and self.n_kv_heads < self.pad_heads_to:
             return self.pad_heads_to
         if self.pad_heads_to and self.n_kv_heads % self.pad_heads_to:
-            return ((self.n_kv_heads + self.pad_heads_to - 1) // self.pad_heads_to) * self.pad_heads_to
+            return (
+                (self.n_kv_heads + self.pad_heads_to - 1) // self.pad_heads_to
+            ) * self.pad_heads_to
         return self.n_kv_heads
 
     @property

@@ -170,6 +170,9 @@ class RedundancyPlanner:
         churn=None,
         churn_schedule=None,
         replan=None,
+        scheduler: str = "fifo_gang",
+        workers_per_job=None,
+        job_plans=None,
         jobs_per_stream: int = 16,
         churn_pairs_per_worker: int = 8,
         dtype: str = "float32",
@@ -202,6 +205,16 @@ class RedundancyPlanner:
         ``jobs_per_stream`` jobs sharing one churn timeline (the Python
         engine's structure); the static path keeps drawing i.i.d. jobs.
 
+        ``scheduler`` / ``workers_per_job`` / ``job_plans`` score the
+        candidates under *space sharing* (see
+        :mod:`repro.cluster.scheduler`): each stream's jobs run concurrently
+        on disjoint ``workers_per_job``-worker subsets, and ``job_plans``
+        (a cycle of :class:`~repro.cluster.scheduler.JobPlan`) pins
+        heterogeneous per-job plans -- jobs whose plan leaves ``n_batches``
+        unset take the candidate B, so the frontier is swept for one job
+        class while competing classes hold fixed plans.  Any space knob
+        routes ``backend="jax"`` to the epoch scan's space lane.
+
         Scale knobs: ``rep_chunk`` bounds device memory by scoring at most
         that many reps/streams per device call (any chunk size is
         bit-identical to any other; on the *dynamic* path it also matches
@@ -213,6 +226,9 @@ class RedundancyPlanner:
         frontier path raises if they are set, rather than silently ignoring
         them.
         """
+        from ..cluster.scheduler import is_space
+
+        space = is_space(scheduler, workers_per_job, job_plans)
         dynamic = (
             speeds is not None
             or churn is not None
@@ -220,7 +236,7 @@ class RedundancyPlanner:
             or replan is not None
         )
         if backend == "jax":
-            if dynamic:
+            if dynamic or space:
                 from ..cluster.epoch_scan import frontier_job_times_dynamic
 
                 rows = frontier_job_times_dynamic(
@@ -237,6 +253,9 @@ class RedundancyPlanner:
                     churn_schedule=churn_schedule,
                     churn_pairs_per_worker=churn_pairs_per_worker,
                     replan=replan,
+                    scheduler=scheduler,
+                    workers_per_job=workers_per_job,
+                    job_plans=job_plans,
                     dtype=dtype,
                     rep_chunk=rep_chunk,
                     devices=devices,
@@ -274,6 +293,9 @@ class RedundancyPlanner:
                     churn=churn,
                     churn_schedule=churn_schedule,
                     replan=replan,
+                    scheduler=scheduler,
+                    workers_per_job=workers_per_job,
+                    job_plans=job_plans,
                 )
                 for i, b in enumerate(self.candidates)
             ]
@@ -371,6 +393,9 @@ def plan_sweep(
     churn=None,
     churn_schedule=None,
     replan=None,
+    scheduler: str = "fifo_gang",
+    workers_per_job=None,
+    job_plans=None,
     jobs_per_stream: int = 16,
     churn_pairs_per_worker: int = 8,
     dtype: str = "float32",
@@ -426,6 +451,9 @@ def plan_sweep(
                     churn=churn,
                     churn_schedule=churn_schedule,
                     replan=replan,
+                    scheduler=scheduler,
+                    workers_per_job=workers_per_job,
+                    job_plans=job_plans,
                     jobs_per_stream=jobs_per_stream,
                     churn_pairs_per_worker=churn_pairs_per_worker,
                     dtype=dtype,

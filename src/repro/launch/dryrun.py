@@ -52,6 +52,7 @@ DRYRUN_OVERRIDES = dict(
     pad_vocab_to_multiple=2048,
 )
 
+
 def _mem_fields(compiled) -> Dict:
     try:
         ma = compiled.memory_analysis()

@@ -32,12 +32,16 @@ _DTYPE_BYTES = {
     "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
 }
 
-_SHAPE_RE = re.compile(r"\b(f64|f32|f16|bf16|s64|u64|s32|u32|s16|u16|s8|u8|pred|f8e4m3fn|f8e5m2|s4|u4)\[([\d,]*)\]")
+_SHAPE_RE = re.compile(
+    r"\b(f64|f32|f16|bf16|s64|u64|s32|u32|s16|u16|s8|u8|pred|f8e4m3fn|f8e5m2|s4|u4)\[([\d,]*)\]"
+)
 _COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->.*\{\s*$")
 _INST_RE = re.compile(r"^\s+(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.*)$")
 _OPNAME_RE = re.compile(r"^(?:\([^)]*\)|\S+)\s+([a-z][a-z0-9\-]*)\(")
 _OPERANDS_RE = re.compile(r"\(([^)]*)\)")
-_CALLS_RE = re.compile(r"(?:calls|to_apply|body|condition|true_computation|false_computation)=%?([\w\.\-]+)")
+_CALLS_RE = re.compile(
+    r"(?:calls|to_apply|body|condition|true_computation|false_computation)=%?([\w\.\-]+)"
+)
 _BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
 _TRIP_RE = re.compile(r'known_trip_count.{0,8}?n.{0,4}?"(\d+)"')
 _GROUPS_LIST_RE = re.compile(r"replica_groups=\{(\{[^}]*\}(?:,\{[^}]*\})*)\}")

@@ -24,6 +24,7 @@ try:
 except ModuleNotFoundError:  # test extra not installed: seeded fallback engine
     from _hypothesis_compat import st
 
+from repro.cluster.scheduler import JobPlan
 from repro.cluster.workers import ChurnProcess, ChurnSchedule, sample_churn_schedule
 from repro.core import analysis
 from repro.core.service_time import Exponential, Pareto, ShiftedExponential
@@ -36,9 +37,13 @@ __all__ = [
     "churn_processes",
     "arrival_grids",
     "objectives",
+    "space_schedulers",
+    "worker_requests",
+    "job_plan_cycles",
     "frontier",
     "seeded_speeds",
     "seeded_schedule",
+    "seeded_job_plans",
 ]
 
 
@@ -112,6 +117,33 @@ def objectives():
     return st.sampled_from(["mean", "cov", "blend"])
 
 
+def space_schedulers(include_gang: bool = True):
+    """A space-sharing placement policy name (optionally incl. fifo_gang)."""
+    names = ["packed", "balanced"] + (["fifo_gang"] if include_gang else [])
+    return st.sampled_from(names)
+
+
+def worker_requests(n_workers: int):
+    """A worker-subset size request in [1, n_workers] (space sharing)."""
+    return st.integers(1, n_workers)
+
+
+def job_plan_cycles(n_workers: int, max_len: int = 3):
+    """A short cycle of per-job plan overrides (None = inherit defaults).
+
+    Entries mix full overrides (workers + B + cancellation), B-only plans,
+    and None, so a stream carries genuinely heterogeneous (B, r) plans --
+    the per-job grids the space-sharing differential tests replay on both
+    backends.
+    """
+    full = st.tuples(
+        st.integers(1, n_workers), st.integers(1, n_workers), st.sampled_from([False, True])
+    ).map(lambda p: JobPlan(workers=p[0], n_batches=p[1], cancel_redundant=p[2]))
+    b_only = st.integers(1, n_workers).map(lambda b: JobPlan(n_batches=b))
+    entry = st.sampled_from([full, b_only, st.just(None)]).flatmap(lambda s: s)
+    return st.lists(entry, min_size=1, max_size=max_len)
+
+
 # --------------------------------------------------------------------------
 # seeded plain helpers (shared realizations for differential tests)
 # --------------------------------------------------------------------------
@@ -126,6 +158,20 @@ def seeded_speeds(n_workers: int, seed: int = 0, lo: float = 0.5, hi: float = 2.
     """A reproducible heterogeneous speed vector."""
     rng = np.random.default_rng(seed)
     return tuple(float(s) for s in rng.uniform(lo, hi, size=n_workers))
+
+
+def seeded_job_plans(n_workers: int, seed: int = 0, length: int = 3):
+    """A reproducible heterogeneous per-job plan cycle (one entry is None)."""
+    rng = np.random.default_rng(seed)
+    plans = [
+        JobPlan(
+            workers=int(rng.integers(1, n_workers + 1)),
+            n_batches=int(rng.integers(1, n_workers + 1)),
+            cancel_redundant=bool(rng.integers(0, 2)),
+        )
+        for _ in range(max(1, length - 1))
+    ]
+    return plans + [None]
 
 
 def seeded_schedule(

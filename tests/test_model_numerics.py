@@ -211,7 +211,9 @@ def test_ssd_carried_state():
     d_skip = jnp.zeros((nh,))
     y_full, h_full = ssd_chunked(x, dt, a_neg, bmat, cmat, d_skip, 4)
     half = s // 2
-    y1, h1 = ssd_chunked(x[:, :half], dt[:, :half], a_neg, bmat[:, :half], cmat[:, :half], d_skip, 4)
+    y1, h1 = ssd_chunked(
+        x[:, :half], dt[:, :half], a_neg, bmat[:, :half], cmat[:, :half], d_skip, 4
+    )
     y2, h2 = ssd_chunked(
         x[:, half:], dt[:, half:], a_neg, bmat[:, half:], cmat[:, half:], d_skip, 4, h0=h1
     )

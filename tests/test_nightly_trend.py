@@ -1,0 +1,106 @@
+"""Unit tests for the nightly-bench trend table (the dashboard renderer).
+
+The nightly workflow downloads the retained ``cluster-bench-full-*``
+artifact series into ``bench-history/run-<id>/`` directories and pipes
+``benchmarks/nightly_trend.py bench-history fresh.json`` into the job
+summary.  The committed fixture series under
+``benchmarks/artifacts/nightly_fixture/`` replays that layout -- flat
+``run-<id>.json`` files *and* a ``gh run download``-style nested artifact
+directory whose file stems are all identical -- so multi-file mode (row
+labelling, natural chronological sort, missing-section tolerance) is pinned
+here instead of only being exercised by the live workflow.
+"""
+import importlib.util
+import json
+import pathlib
+import subprocess
+import sys
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+SCRIPT = REPO / "benchmarks" / "nightly_trend.py"
+FIXTURE = REPO / "benchmarks" / "artifacts" / "nightly_fixture"
+
+
+def _mod():
+    spec = importlib.util.spec_from_file_location("nightly_trend", SCRIPT)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_multi_file_mode_renders_one_row_per_run_in_order():
+    out = subprocess.run(
+        [sys.executable, str(SCRIPT), str(FIXTURE)],
+        capture_output=True,
+        text=True,
+        check=True,
+    ).stdout
+    lines = [ln for ln in out.splitlines() if ln.startswith("|")]
+    # header + separator + one row per fixture run
+    assert len(lines) == 2 + 3, out
+    body = lines[2:]
+    # natural (chronological) order: 101 < 102 < 110, and the nested
+    # gh-run-download layout is labelled by its run directory
+    assert body[0].startswith("| run-101 ")
+    assert body[1].startswith("| run-102 ")
+    assert body[2].startswith("| run-110 ")
+    # the load-bearing series render with their units
+    assert "91x" in body[0] and "0.41x" in body[0] and "12.81x" in body[0]
+    assert "37x" in body[1] and "0.39x" in body[1]
+    # run-110 predates the space_sharing section: dashes, not a crash
+    assert " -..- " in body[2] and "12.50x" in body[2]
+
+
+def test_mixed_dir_and_file_args(tmp_path):
+    # the exact filename the nightly workflow passes for tonight's run: no
+    # run id in it (the artifact name gains one only on upload), so the row
+    # must land at the BOTTOM of the table -- newest last, chronological
+    fresh = tmp_path / "cluster-bench-full.json"
+    fresh.write_text(
+        json.dumps(
+            {
+                "backend": {"min_speedup_warm": 100.0, "max_speedup_warm": 200.0},
+                "dynamic": {
+                    "min_speedup_warm": 50.0,
+                    "max_speedup_warm": 60.0,
+                    "max_cold_seconds": 2.0,
+                    "peak_rss_mb": 400.0,
+                },
+                "space_sharing": {
+                    "min_speedup_warm": 40.0,
+                    "max_speedup_warm": 45.0,
+                    "response_ratio_packed_vs_gang": 0.35,
+                },
+                "redundancy": {"_summary": {"max_heavy_speedup": 13.0}},
+            }
+        )
+    )
+    out = subprocess.run(
+        [sys.executable, str(SCRIPT), str(FIXTURE), str(fresh)],
+        capture_output=True,
+        text=True,
+        check=True,
+    ).stdout
+    body = [ln for ln in out.splitlines() if ln.startswith("|")][2:]  # drop header rows
+    assert len(body) == 4
+    assert body[-1].startswith("| cluster-bench-full ")
+    assert "0.35x" in body[-1]
+
+
+def test_empty_history_is_an_error_not_a_crash(tmp_path):
+    r = subprocess.run(
+        [sys.executable, str(SCRIPT), str(tmp_path)], capture_output=True, text=True
+    )
+    assert r.returncode == 1
+    assert "no bench JSONs" in r.stderr
+
+
+def test_label_and_natkey_helpers():
+    nt = _mod()
+    assert nt._natkey("run-9") < nt._natkey("run-10") < nt._natkey("run-101")
+    root = FIXTURE
+    nested = next((FIXTURE / "run-102").rglob("*.json"))
+    assert nt._label(root, nested) == "run-102"
+    assert nt._label(root, FIXTURE / "run-101.json") == "run-101"
+    # a digit-free stem falls back to the stem itself
+    assert nt._label(pathlib.Path("x.json"), pathlib.Path("x.json")) == "x"
