@@ -66,6 +66,7 @@ from repro.cluster import (
     ChurnProcess,
     ClusterEngine,
     Job,
+    Scenario,
     jobs_from_traces,
     sample_job_times,
     simulate_fifo,
@@ -270,8 +271,9 @@ def bench_dynamic(cfg: dict, seed: int = 0) -> dict:
         # 2 fail/join pairs per worker comfortably cover each stream's horizon
         # (~1 expected failure); 96-job streams keep the step loop dominated
         # by job dispatches rather than churn-boundary bookkeeping
-        kw = dict(n_reps=reps, seed=seed, churn=churn, speeds=speeds)
-        kw_jax = dict(kw, churn_pairs_per_worker=2, jobs_per_stream=96)
+        sc = Scenario(churn=churn, speeds=speeds)
+        kw = dict(n_reps=reps, seed=seed, scenario=sc)
+        kw_jax = dict(kw, scenario=sc.replace(churn_pairs_per_worker=2, jobs_per_stream=96))
         clear_runner_cache()
         jax.clear_caches()  # same shapes across dists: force a real compile
         t0 = time.time()
@@ -346,8 +348,9 @@ def bench_space_sharing(cfg: dict, seed: int = 0) -> dict:
     for name, dist in [("exponential", Exponential(1.0)), ("pareto_heavy", Pareto(1.0, 1.8))]:
         planner = RedundancyPlanner(n, candidates=cands)
         kw = dict(
-            n_reps=reps, seed=seed, scheduler="packed", workers_per_job=wpj,
-            jobs_per_stream=48,
+            n_reps=reps,
+            seed=seed,
+            scenario=Scenario(scheduler="packed", workers_per_job=wpj, jobs_per_stream=48),
         )
         clear_runner_cache()
         jax.clear_caches()  # same shapes across dists: force a real compile

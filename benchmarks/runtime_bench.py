@@ -1,0 +1,160 @@
+"""Live-runtime benchmark: real execution time vs the engine's prediction.
+
+Runs a small redundant workload on the live asyncio master-worker runtime
+(``repro.cluster.runtime``: real localhost sockets, thread workers, sleep
+payloads) and compares three layers:
+
+  * ``live``      -- wall-clock makespan and accounting measured by the
+    master from its own grid-stamped trace;
+  * ``replay``    -- the same trace replayed through the discrete-event
+    engine (the digital twin): must match the live accounting *exactly*,
+    so its row is a correctness canary, not an estimate;
+  * ``predicted`` -- an a-priori ``ClusterEngine`` run with deterministic
+    service times equal to the nominal batch costs: what the simulator
+    promised before any real process ran.
+
+``live_over_predicted`` is the headline ratio: how much real-world overhead
+(socket round trips, event-loop scheduling, sleep granularity) inflates the
+simulated makespan.  ``--smoke`` keeps the workload at a few hundred
+milliseconds for CI, which uploads the JSON as an artifact; a ratio above
+``--max-ratio`` (sanity, generous) fails the run.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import pathlib
+import sys
+import time
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent / "src"))
+
+from repro.cluster.master import ClusterEngine, Job  # noqa: E402
+from repro.cluster.runtime import LiveJob, Runtime, replay_trace  # noqa: E402
+from repro.cluster.scenario import Scenario  # noqa: E402
+
+ART = pathlib.Path(__file__).resolve().parent / "artifacts"
+
+
+@dataclasses.dataclass
+class _Deterministic:
+    """Constant service time: the engine's a-priori model of a known cost."""
+
+    value: float
+
+    def sample_np(self, rng, shape):
+        return self.value
+
+
+def _workload(cfg: dict):
+    """Uniform per-task costs so every batch of a job has one nominal cost
+    (what the deterministic predictor needs), three jobs back to back."""
+    n, b = cfg["n_workers"], cfg["n_batches"]
+    jobs = [
+        LiveJob(
+            job_id=i,
+            costs=(cfg["task_cost"],) * cfg["n_tasks"],
+            skew=cfg["skew"],
+            name=f"bench-{i}",
+        )
+        for i in range(cfg["n_jobs"])
+    ]
+    scenario = Scenario(n_batches=b, cancel_redundant=True)
+    batch_cost = cfg["task_cost"] * (cfg["n_tasks"] // b)
+    predicted = [
+        Job(job_id=j.job_id, dist=_Deterministic(batch_cost), n_tasks=cfg["n_tasks"])
+        for j in jobs
+    ]
+    return n, scenario, jobs, predicted
+
+
+def bench_runtime(cfg: dict) -> dict:
+    n, scenario, jobs, predicted_jobs = _workload(cfg)
+
+    t0 = time.monotonic()
+    report = Runtime(n, scenario).run(jobs, timeout_s=120.0)
+    live_wall = time.monotonic() - t0
+
+    live_makespan = max(r.finish for r in report.records)
+    twin = replay_trace(report.trace, n, scenario)
+    twin_exact = twin.accounting() == report.accounting()
+
+    eng = ClusterEngine(
+        n,
+        seed=0,
+        n_batches=scenario.n_batches,
+        cancel_redundant=True,
+        size_dependent=False,
+    ).run(predicted_jobs)
+    predicted_makespan = max(r.finish for r in eng.records)
+
+    return {
+        "n_workers": n,
+        "n_jobs": len(jobs),
+        "n_batches": scenario.n_batches,
+        "replication": report.records[0].replication,
+        "live_wall_s": round(live_wall, 4),
+        "live_makespan_s": round(live_makespan, 4),
+        "predicted_makespan_s": round(predicted_makespan, 4),
+        "live_over_predicted": round(live_makespan / predicted_makespan, 4),
+        "live_accounting": report.accounting(),
+        "predicted_accounting": eng.accounting(),
+        "twin_replay_exact": twin_exact,
+        "n_trace_events": len(report.trace),
+    }
+
+
+def _cfg(smoke: bool) -> dict:
+    if smoke:
+        return {
+            "n_workers": 4,
+            "n_batches": 2,
+            "n_tasks": 4,
+            "n_jobs": 3,
+            "task_cost": 0.05,
+            "skew": 0.5,
+        }
+    return {
+        "n_workers": 8,
+        "n_batches": 4,
+        "n_tasks": 16,
+        "n_jobs": 8,
+        "task_cost": 0.25,
+        "skew": 0.5,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true", help="sub-second workload (CI)")
+    ap.add_argument(
+        "--max-ratio",
+        type=float,
+        default=5.0,
+        help="fail if live/predicted makespan exceeds this (sanity, generous)",
+    )
+    ap.add_argument("--out", type=pathlib.Path, default=ART / "runtime_bench.json")
+    args = ap.parse_args()
+
+    result = {
+        "config": {"smoke": args.smoke, **_cfg(args.smoke)},
+        "runtime": bench_runtime(_cfg(args.smoke)),
+    }
+    args.out.parent.mkdir(parents=True, exist_ok=True)
+    args.out.write_text(json.dumps(result, indent=2))
+    print(json.dumps(result, indent=2))
+
+    run = result["runtime"]
+    if not run["twin_replay_exact"]:
+        raise SystemExit("FAIL: engine replay of the live trace is not exact")
+    if run["live_over_predicted"] > args.max_ratio:
+        raise SystemExit(
+            f"FAIL: live/predicted makespan {run['live_over_predicted']} "
+            f"exceeds --max-ratio {args.max_ratio}"
+        )
+
+
+if __name__ == "__main__":
+    main()

@@ -24,6 +24,7 @@ from repro.cluster import (
     Job,
     OnlineReplanner,
     ReplanConfig,
+    Scenario,
     simulate_epochs,
 )
 from repro.core.planner import RedundancyPlanner
@@ -90,9 +91,11 @@ def main():
         np.zeros(40),
         n_reps=200,
         seed=42,
-        cancel_redundant=True,
-        churn=ChurnProcess(fail_rate=0.02, mean_downtime=3.0),
-        replan=ReplanConfig(window=512, refit_every=128, min_observations=96),
+        scenario=Scenario(
+            cancel_redundant=True,
+            churn=ChurnProcess(fail_rate=0.02, mean_downtime=3.0),
+            replan=ReplanConfig(window=512, refit_every=128, min_observations=96),
+        ),
     )
     t = rep.compute_times
     print(
@@ -106,8 +109,10 @@ def main():
         dist,
         n_reps=400,
         seed=7,
-        churn=ChurnProcess(fail_rate=0.02, mean_downtime=3.0),
-        speeds=tuple(1.0 + 0.5 * (i % 3) for i in range(n_workers)),
+        scenario=Scenario(
+            churn=ChurnProcess(fail_rate=0.02, mean_downtime=3.0),
+            speeds=tuple(1.0 + 0.5 * (i % 3) for i in range(n_workers)),
+        ),
     )
     print(
         f"[scan] churned + heterogeneous frontier sweep on jax "

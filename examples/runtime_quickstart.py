@@ -1,0 +1,61 @@
+"""Execute a redundancy plan on the live runtime -- and diff it vs the engine.
+
+Everything else in ``examples/`` *simulates* plans.  This one runs one for
+real: an asyncio master on a localhost socket, four worker processes (here:
+threads, each with its own event loop) executing sleep payloads, with
+heartbeats, task leases, replica cancellation -- and then replays the
+master's recorded trace through the discrete-event ``ClusterEngine`` to show
+the two implementations agree on every decision, bit for bit.
+
+    PYTHONPATH=src python examples/runtime_quickstart.py
+"""
+
+import numpy as np
+
+from repro.cluster import Scenario
+from repro.cluster.runtime import LiveJob, Runtime, replay_trace
+from repro.core.planner import RedundancyPlanner
+from repro.core.service_time import Pareto
+
+N_WORKERS = 4
+
+# -- 1. Plan: pick (B, r) for a heavy-tailed workload (closed forms) ---------
+dist = Pareto(sigma=0.05, alpha=1.8)  # ~50ms-scale tasks, heavy tail
+plan = RedundancyPlanner(N_WORKERS).plan(dist, objective="blend")
+print(f"plan: B={plan.n_batches}, r={plan.replication}  (source: {plan.source})")
+
+# -- 2. Execute: run real task payloads under that plan, live ----------------
+# Task costs are drawn from the planned-for distribution; the per-worker
+# skew stands in for machines whose true speeds the master doesn't know --
+# the straggler spread that replica cancellation reclaims.
+rng = np.random.default_rng(0)
+jobs = [
+    LiveJob(
+        job_id=i,
+        costs=tuple(np.round(dist.sample_np(rng, (8,)), 3)),
+        skew=0.6,
+        name=f"job-{i}",
+    )
+    for i in range(3)
+]
+scenario = Scenario(n_batches=plan.n_batches, cancel_redundant=True)
+report = Runtime(N_WORKERS, scenario).run(jobs, timeout_s=60.0)
+
+print(f"\nlive run: {len(report.records)} jobs, {len(report.trace)} trace events")
+for r in report.records:
+    print(
+        f"  job {r.job_id}: start={r.start:.3f}s finish={r.finish:.3f}s "
+        f"(B={r.n_batches}, r={r.replication})"
+    )
+
+# -- 3. Diff: the engine is the runtime's digital twin -----------------------
+twin = replay_trace(report.trace, N_WORKERS, scenario)
+print("\naccounting                 live        engine-replay")
+for key, live_v in report.accounting().items():
+    eng_v = twin.accounting()[key]
+    print(f"  {key:<27}{live_v:<12.6g}{eng_v:.6g}")
+
+assert twin.accounting() == report.accounting(), "twin diverged!"
+assert [r.finish for r in twin.records] == [r.finish for r in report.records]
+print("\nexact: the engine re-derived every dispatch/cancel/finish decision")
+print("from the trace and landed on identical accounting and job records.")

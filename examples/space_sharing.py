@@ -19,7 +19,7 @@ Run me::
 
 import numpy as np
 
-from repro.cluster import ClusterEngine, Job, JobPlan, simulate_epochs
+from repro.cluster import ClusterEngine, Job, JobPlan, Scenario, simulate_epochs
 from repro.core.planner import RedundancyPlanner
 from repro.core.service_time import Pareto
 
@@ -51,7 +51,7 @@ def class_stats() -> None:
     plans = [PLAN_A, PLAN_B]
     arr = np.zeros(n_jobs)
     packed = simulate_epochs(
-        DIST, N, None, arr, reps, seed=1, scheduler="packed", job_plans=plans
+        DIST, N, None, arr, reps, seed=1, scenario=Scenario(scheduler="packed", job_plans=plans)
     )
     gang = simulate_epochs(DIST, N, None, arr, reps, seed=1)
     print("\nper-class response times (packed space sharing, mean over "
@@ -83,9 +83,11 @@ def plan_against_competition() -> None:
             objective,
             n_reps=256,
             seed=3,
-            scheduler="packed",
-            workers_per_job=WPJ,
-            job_plans=[None, PLAN_B],  # even jobs sweep B, odd jobs stay batch
+            scenario=Scenario(
+                scheduler="packed",
+                workers_per_job=WPJ,
+                job_plans=[None, PLAN_B],  # even jobs sweep B, odd jobs stay batch
+            ),
         )
         print(
             f"\nclass-A plan against fixed class-B competition "

@@ -36,8 +36,19 @@ Public surface:
     ``plan_cluster`` takes when any dynamic knob is set, so
     ``backend="jax"`` never falls back to the Python engine for
     churned/heterogeneous scenarios
+  * scenario   -- the one frozen, validated spec shared by every entry
+    point: ``Scenario`` + ``Scenario.validate()`` replace the four
+    separately-maintained copies of the dynamics-kwarg validation;
+    legacy loose kwargs keep working behind a ``DeprecationWarning`` shim
+  * runtime    -- the *live* system: an asyncio master serving real worker
+    processes over length-prefixed JSON on localhost sockets (leases,
+    heartbeats, missed-heartbeat failure detection, replica dispatch with
+    cancel-on-earliest-cover), recording a trace the DES engine replays
+    bit-for-bit (``replay_trace``) -- the engine as the runtime's digital
+    twin.  Imported lazily (``import repro.cluster.runtime``): simulation
+    users never pay for the service stack
 """
-from . import control, epoch_scan, events, master, scheduler, vectorized, workers
+from . import control, epoch_scan, events, master, scenario, scheduler, vectorized, workers
 from .control import OnlineReplanner
 from .epoch_scan import (
     EpochReport,
@@ -45,6 +56,7 @@ from .epoch_scan import (
     frontier_job_times_dynamic,
     simulate_epochs,
 )
+from .scenario import Scenario
 from .scheduler import JobPlan, Scheduler, make_scheduler
 from .master import (
     ClusterEngine,
@@ -62,9 +74,11 @@ __all__ = [
     "epoch_scan",
     "events",
     "master",
+    "scenario",
     "scheduler",
     "vectorized",
     "workers",
+    "Scenario",
     "JobPlan",
     "Scheduler",
     "make_scheduler",

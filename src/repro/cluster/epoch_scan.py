@@ -83,6 +83,7 @@ from jax.scipy.special import gammaln
 
 from ..core.analysis import divisor_table, harmonic_tables
 from ..core.service_time import ServiceTime
+from .scenario import UNSET, Scenario, resolve_scenario
 from .scheduler import SCHEDULERS, JobPlan, is_space
 from .workers import ChurnProcess, ChurnSchedule
 
@@ -1167,35 +1168,24 @@ def _run_lanes(dist, cfg, n_workers, lane_idx, b0, arrivals_pad, n_jobs_real, se
 # --------------------------------------------------------------------------
 
 
-def _validate_common(n_workers, speeds, churn, churn_schedule, replan, dtype, devices):
-    if speeds is None:
-        speeds = np.ones(n_workers)
-    else:
-        speeds = np.asarray(speeds, np.float64)
-        if speeds.shape != (n_workers,):
-            raise ValueError("speeds must have one entry per worker")
-        if (speeds <= 0).any():
-            raise ValueError("speeds must be positive")
-    if churn is not None and churn_schedule is not None:
-        raise ValueError("pass either churn (sampled per rep) or churn_schedule, not both")
-    if churn_schedule is not None and len(churn_schedule):
-        if min(churn_schedule.wids) < 0 or max(churn_schedule.wids) >= n_workers:
-            raise ValueError("churn_schedule worker ids must lie in [0, n_workers)")
-    if replan is not None:
-        if replan.objective not in ("mean", "cov", "blend"):
-            raise ValueError(f"unknown objective {replan.objective!r}")
-        if replan.window < n_workers:
-            raise ValueError("replan.window must be >= n_workers (ring push bound)")
-    if dtype not in ("float32", "float64"):
-        raise ValueError(f"dtype must be 'float32' or 'float64', got {dtype!r}")
-    if dtype == "float64" and not jax.config.jax_enable_x64:
+def _validate_common(n_workers, sc):
+    """Scenario validation + the jax-environment checks, returning the
+    bucket-padded speed vector.
+
+    The cross-field rules live in :meth:`repro.cluster.scenario.Scenario.validate`
+    (the single validation path shared with the engine and the planner); only
+    the process-environment checks -- x64 enabled, visible device count --
+    stay here, because they are properties of the jax runtime, not of the
+    scenario.
+    """
+    sc.validate(n_workers=n_workers, backend="jax")
+    if sc.dtype == "float64" and not jax.config.jax_enable_x64:
         raise ValueError(
             "dtype='float64' needs jax x64 enabled (jax.config.update('jax_enable_x64', True))"
         )
-    if devices < 1:
-        raise ValueError("devices must be >= 1")
-    if devices > len(jax.devices()):
-        raise ValueError(f"devices={devices} but only {len(jax.devices())} jax devices visible")
+    if sc.devices > len(jax.devices()):
+        raise ValueError(f"devices={sc.devices} but only {len(jax.devices())} jax devices visible")
+    speeds = np.ones(n_workers) if sc.speeds is None else np.asarray(sc.speeds, np.float64)
     pad = _bucket_workers(n_workers) - n_workers
     return np.concatenate([speeds, np.ones(pad)])
 
@@ -1213,32 +1203,20 @@ def _space_tabs(scheduler, workers_per_job, job_plans, n_jobs, jobs_pad, n_worke
     """
     if scheduler is None:
         scheduler = "fifo_gang"
-    if scheduler not in SCHEDULERS:
-        raise ValueError(
-            f"unknown scheduler {scheduler!r} (expected one of {sorted(SCHEDULERS)})"
-        )
     if not is_space(scheduler, workers_per_job, job_plans):
         return None, None
-    if replan is not None:
-        raise ValueError(
-            "replan is not supported with space-sharing schedulers / per-job plans "
-            "(the online replanner picks one cluster-wide B)"
-        )
-    if workers_per_job is not None and not (1 <= int(workers_per_job) <= n_workers):
-        raise ValueError(f"workers_per_job must lie in [1, {n_workers}]")
+    # scheduler / workers_per_job / job_plans / replan-exclusion constraints
+    # were already checked by Scenario.validate() (the single validation
+    # path) in the public entry points above
     req_tab = np.zeros(jobs_pad, np.int32)
     b_tab = np.zeros(jobs_pad, np.int32)
     cancel_tab = np.full(jobs_pad, bool(cancel_default))
     if job_plans is not None:
         plans = list(job_plans)
-        if not plans:
-            raise ValueError("job_plans must be a non-empty sequence (it cycles over jobs)")
         for q in range(n_jobs):
             p = plans[q % len(plans)]
             if p is None:
                 continue
-            if not isinstance(p, JobPlan):
-                raise ValueError(f"job_plans entries must be JobPlan or None, got {type(p)}")
             if p.workers is not None:
                 req_tab[q] = min(int(p.workers), n_workers)
             if p.n_batches is not None:
@@ -1262,27 +1240,28 @@ def _rep_slices(total: int, rep_chunk: Optional[int]):
 
 
 def simulate_epochs(
-    dist: ServiceTime,
-    n_workers: int,
-    n_batches: Optional[int],
-    arrivals,
-    n_reps: int,
+    dist: Optional[ServiceTime] = None,
+    n_workers: Optional[int] = None,
+    n_batches: Optional[int] = None,
+    arrivals=None,
+    n_reps: Optional[int] = None,
     *,
     seed: int = 0,
-    cancel_redundant: bool = False,
-    size_dependent: bool = True,
-    n_tasks: Optional[int] = None,
-    speeds: Optional[Sequence[float]] = None,
-    churn: Optional[ChurnProcess] = None,
-    churn_schedule: Optional[ChurnSchedule] = None,
-    churn_pairs_per_worker: int = 8,
-    replan: Optional[ReplanConfig] = None,
-    scheduler: str = "fifo_gang",
-    workers_per_job: Optional[int] = None,
-    job_plans: Optional[Sequence] = None,
-    dtype: str = "float32",
-    rep_chunk: Optional[int] = None,
-    devices: int = 1,
+    cancel_redundant=UNSET,
+    size_dependent=UNSET,
+    n_tasks=UNSET,
+    speeds=UNSET,
+    churn=UNSET,
+    churn_schedule=UNSET,
+    churn_pairs_per_worker=UNSET,
+    replan=UNSET,
+    scheduler=UNSET,
+    workers_per_job=UNSET,
+    job_plans=UNSET,
+    dtype=UNSET,
+    rep_chunk=UNSET,
+    devices=UNSET,
+    scenario: Optional["Scenario"] = None,
 ) -> EpochReport:
     """Replay the full engine semantics on the jax epoch scan.
 
@@ -1312,7 +1291,36 @@ def simulate_epochs(
     rep budgets in the hundreds-to-thousands) and under multi-device
     ``devices`` sharding.  ``dtype="float64"`` runs the scan lanes in double
     precision for long-horizon workloads (requires jax x64).
+
+    The scenario knobs (dynamics, space sharing, scale) are best passed as
+    one validated ``scenario=Scenario(...)``; the loose keyword forms keep
+    working behind a :class:`DeprecationWarning` shim.
     """
+    sc = resolve_scenario(
+        scenario,
+        {
+            "cancel_redundant": cancel_redundant,
+            "size_dependent": size_dependent,
+            "n_tasks": n_tasks,
+            "speeds": speeds,
+            "churn": churn,
+            "churn_schedule": churn_schedule,
+            "churn_pairs_per_worker": churn_pairs_per_worker,
+            "replan": replan,
+            "scheduler": scheduler,
+            "workers_per_job": workers_per_job,
+            "job_plans": job_plans,
+            "dtype": dtype,
+            "rep_chunk": rep_chunk,
+            "devices": devices,
+        },
+        where="simulate_epochs",
+    )
+    dist = dist if dist is not None else sc.dist
+    n_workers = int(n_workers if n_workers is not None else sc.n_workers)
+    n_batches = n_batches if n_batches is not None else sc.n_batches
+    if dist is None or arrivals is None or n_reps is None:
+        raise ValueError("simulate_epochs needs dist (or scenario.dist), arrivals, and n_reps")
     arrivals = np.asarray(arrivals, dtype=np.float64)
     if arrivals.ndim != 1 or arrivals.size == 0:
         raise ValueError("arrivals must be a non-empty 1-D array")
@@ -1320,9 +1328,20 @@ def simulate_epochs(
         raise ValueError("arrivals must be sorted (FIFO order)")
     if n_batches is not None and not (1 <= int(n_batches) <= n_workers):
         raise ValueError(f"n_batches must lie in [1, {n_workers}] or be None")
-    speeds = _validate_common(n_workers, speeds, churn, churn_schedule, replan, dtype, devices)
-    if n_tasks is None:
-        n_tasks = n_workers
+    speeds = _validate_common(n_workers, sc)
+    cancel_redundant = sc.cancel_redundant
+    size_dependent = sc.size_dependent
+    churn = sc.churn
+    churn_schedule = sc.churn_schedule
+    churn_pairs_per_worker = sc.churn_pairs_per_worker
+    replan = sc.replan
+    scheduler = sc.scheduler_name
+    workers_per_job = sc.workers_per_job
+    job_plans = sc.job_plans
+    dtype = sc.dtype
+    rep_chunk = sc.rep_chunk
+    devices = sc.devices
+    n_tasks = sc.n_tasks if sc.n_tasks is not None else n_workers
     n_jobs = arrivals.size
     n_pad, jobs_pad, ev_pad, resc_cap, n_chunks = _shapes(
         n_workers, n_jobs, churn, churn_schedule, churn_pairs_per_worker
@@ -1365,27 +1384,28 @@ def simulate_epochs(
 
 
 def frontier_job_times_dynamic(
-    dist: ServiceTime,
-    n_workers: int,
-    candidates,
-    n_reps: int,
+    dist: Optional[ServiceTime] = None,
+    n_workers: Optional[int] = None,
+    candidates=None,
+    n_reps: Optional[int] = None,
     *,
     seed: int = 0,
-    n_jobs: int = 16,
-    cancel_redundant: bool = False,
-    size_dependent: bool = True,
-    n_tasks: Optional[int] = None,
-    speeds: Optional[Sequence[float]] = None,
-    churn: Optional[ChurnProcess] = None,
-    churn_schedule: Optional[ChurnSchedule] = None,
-    churn_pairs_per_worker: int = 8,
-    replan: Optional[ReplanConfig] = None,
-    scheduler: str = "fifo_gang",
-    workers_per_job: Optional[int] = None,
-    job_plans: Optional[Sequence] = None,
-    dtype: str = "float32",
-    rep_chunk: Optional[int] = None,
-    devices: int = 1,
+    n_jobs: Optional[int] = None,
+    cancel_redundant=UNSET,
+    size_dependent=UNSET,
+    n_tasks=UNSET,
+    speeds=UNSET,
+    churn=UNSET,
+    churn_schedule=UNSET,
+    churn_pairs_per_worker=UNSET,
+    replan=UNSET,
+    scheduler=UNSET,
+    workers_per_job=UNSET,
+    job_plans=UNSET,
+    dtype=UNSET,
+    rep_chunk=UNSET,
+    devices=UNSET,
+    scenario: Optional["Scenario"] = None,
 ) -> np.ndarray:
     """Per-candidate job compute times under churn/hetero/replan dynamics.
 
@@ -1410,14 +1430,52 @@ def frontier_job_times_dynamic(
     stream) lane grid via ``shard_map``.  Both are bit-identical to the
     single-call single-device result (per-lane ``SeedSequence`` derivation).
     """
+    sc = resolve_scenario(
+        scenario,
+        {
+            "cancel_redundant": cancel_redundant,
+            "size_dependent": size_dependent,
+            "n_tasks": n_tasks,
+            "speeds": speeds,
+            "churn": churn,
+            "churn_schedule": churn_schedule,
+            "churn_pairs_per_worker": churn_pairs_per_worker,
+            "replan": replan,
+            "scheduler": scheduler,
+            "workers_per_job": workers_per_job,
+            "job_plans": job_plans,
+            "dtype": dtype,
+            "rep_chunk": rep_chunk,
+            "devices": devices,
+        },
+        where="frontier_job_times_dynamic",
+    )
+    dist = dist if dist is not None else sc.dist
+    n_workers = int(n_workers if n_workers is not None else sc.n_workers)
+    if dist is None or candidates is None or n_reps is None:
+        raise ValueError(
+            "frontier_job_times_dynamic needs dist (or scenario.dist), candidates, and n_reps"
+        )
     bs = np.asarray(list(candidates), dtype=np.int32)
     if bs.size == 0:
         raise ValueError("need at least one candidate B")
     if (bs < 1).any() or (bs > n_workers).any():
         raise ValueError(f"candidates must lie in [1, {n_workers}], got {bs.tolist()}")
-    speeds = _validate_common(n_workers, speeds, churn, churn_schedule, replan, dtype, devices)
-    if n_tasks is None:
-        n_tasks = n_workers
+    speeds = _validate_common(n_workers, sc)
+    cancel_redundant = sc.cancel_redundant
+    size_dependent = sc.size_dependent
+    churn = sc.churn
+    churn_schedule = sc.churn_schedule
+    churn_pairs_per_worker = sc.churn_pairs_per_worker
+    replan = sc.replan
+    scheduler = sc.scheduler_name
+    workers_per_job = sc.workers_per_job
+    job_plans = sc.job_plans
+    dtype = sc.dtype
+    rep_chunk = sc.rep_chunk
+    devices = sc.devices
+    n_tasks = sc.n_tasks if sc.n_tasks is not None else n_workers
+    n_jobs = sc.jobs_per_stream if n_jobs is None else n_jobs
     n_jobs = max(1, min(int(n_jobs), int(n_reps)))
     s = math.ceil(n_reps / n_jobs)
     c = len(bs)

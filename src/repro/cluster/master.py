@@ -38,6 +38,7 @@ from ..core.service_time import Empirical, ServiceTime
 from ..core.simulator import JobTimeStats, stats_from_samples
 from . import events as ev
 from .control import OnlineReplanner
+from .scenario import UNSET, Scenario, resolve_scenario
 from .scheduler import JobPlan, Scheduler, make_scheduler
 from .workers import ChurnProcess, ChurnSchedule, Worker, WorkerPool, draw_batch_time
 
@@ -228,22 +229,16 @@ class ClusterEngine:
         scheduler: "str | Scheduler" = "fifo_gang",
         workers_per_job: Optional[int] = None,
     ):
-        if churn is not None and churn_schedule is not None:
-            raise ValueError("pass either churn (sampled online) or churn_schedule, not both")
-        if churn_schedule is not None and len(churn_schedule):
-            if min(churn_schedule.wids) < 0 or max(churn_schedule.wids) >= n_workers:
-                raise ValueError("churn_schedule worker ids must lie in [0, n_workers)")
-        if workers_per_job is not None and not (1 <= int(workers_per_job) <= n_workers):
-            raise ValueError(f"workers_per_job must lie in [1, {n_workers}]")
+        # one validation path for every backend: the same Scenario.validate()
+        # the jax epoch scan and the planner route through
+        Scenario(
+            speeds=speeds,
+            churn=churn,
+            churn_schedule=churn_schedule,
+            scheduler=scheduler,
+            workers_per_job=workers_per_job,
+        ).validate(n_workers=n_workers, backend="python", controller=controller)
         _scheduler = make_scheduler(scheduler)
-        if controller is not None and _scheduler.space_sharing:
-            # same contract as the jax space lane: the online replanner picks
-            # one cluster-wide B, which has no meaning across concurrent
-            # heterogeneous plans -- reject instead of silently mis-planning
-            raise ValueError(
-                "replan/controller is not supported with space-sharing schedulers "
-                "(the online replanner picks one cluster-wide B)"
-            )
         self.pool = WorkerPool(n_workers, speeds)
         self.rng = ev.RngStreams(seed)
         self.n_batches = n_batches
@@ -674,28 +669,29 @@ class ClusterEngine:
 
 
 def sample_job_times(
-    dist: ServiceTime,
-    n_workers: int,
-    n_batches: int,
-    n_samples: int,
+    dist: Optional[ServiceTime] = None,
+    n_workers: Optional[int] = None,
+    n_batches: Optional[int] = None,
+    n_samples: Optional[int] = None,
     *,
     seed: int = 0,
-    size_dependent: bool = True,
-    cancel_redundant: bool = False,
-    n_tasks: Optional[int] = None,
+    size_dependent=UNSET,
+    cancel_redundant=UNSET,
+    n_tasks=UNSET,
     backend: str = "python",
-    speeds: Optional[Sequence[float]] = None,
-    churn: Optional[ChurnProcess] = None,
-    churn_schedule: Optional[ChurnSchedule] = None,
+    speeds=UNSET,
+    churn=UNSET,
+    churn_schedule=UNSET,
     controller: Optional[OnlineReplanner] = None,
-    replan=None,
-    scheduler: str = "fifo_gang",
-    workers_per_job: Optional[int] = None,
-    job_plans: Optional[Sequence] = None,
-    churn_pairs_per_worker: int = 8,
-    dtype: str = "float32",
-    rep_chunk: Optional[int] = None,
-    devices: int = 1,
+    replan=UNSET,
+    scheduler=UNSET,
+    workers_per_job=UNSET,
+    job_plans=UNSET,
+    churn_pairs_per_worker=UNSET,
+    dtype=UNSET,
+    rep_chunk=UNSET,
+    devices=UNSET,
+    scenario=None,
 ) -> np.ndarray:
     """Job compute-time samples from the engine (i.i.d. when the cluster is
     static; correlated through the shared churn timeline otherwise).
@@ -732,20 +728,43 @@ def sample_job_times(
     for streams long enough to outlive the default horizon, raise
     ``churn_pairs_per_worker`` (or pass an explicit ``churn_schedule``,
     which both backends replay identically and truncate identically).
-    """
-    from .scheduler import is_space
 
-    space = is_space(scheduler, workers_per_job, job_plans)
-    dynamic = (
-        speeds is not None
-        or churn is not None
-        or churn_schedule is not None
-        or replan is not None
+    The scenario knobs are best passed as one validated
+    ``scenario=Scenario(...)`` (which may also carry ``dist`` /
+    ``n_workers`` / ``n_batches``); the loose keyword forms keep working
+    behind a :class:`DeprecationWarning` shim.
+    """
+    sc = resolve_scenario(
+        scenario,
+        {
+            "cancel_redundant": cancel_redundant,
+            "size_dependent": size_dependent,
+            "n_tasks": n_tasks,
+            "speeds": speeds,
+            "churn": churn,
+            "churn_schedule": churn_schedule,
+            "churn_pairs_per_worker": churn_pairs_per_worker,
+            "replan": replan,
+            "scheduler": scheduler,
+            "workers_per_job": workers_per_job,
+            "job_plans": job_plans,
+            "dtype": dtype,
+            "rep_chunk": rep_chunk,
+            "devices": devices,
+        },
+        where="sample_job_times",
     )
+    dist = dist if dist is not None else sc.dist
+    n_batches = n_batches if n_batches is not None else sc.n_batches
+    if dist is None or (n_workers is None and sc.n_workers is None) or n_samples is None:
+        raise ValueError(
+            "sample_job_times needs dist, n_workers (or scenario fields), and n_samples"
+        )
+    n_workers = int(n_workers if n_workers is not None else sc.n_workers)
     if backend == "jax":
         if controller is not None:
             raise ValueError("backend='jax' takes replan=ReplanConfig(...), not controller")
-        if dynamic or space:
+        if sc.is_dynamic or sc.is_space:
             from .epoch_scan import simulate_epochs
 
             rep = simulate_epochs(
@@ -755,22 +774,10 @@ def sample_job_times(
                 np.zeros(n_samples),
                 1,
                 seed=seed,
-                cancel_redundant=cancel_redundant,
-                size_dependent=size_dependent,
-                n_tasks=n_tasks,
-                speeds=speeds,
-                churn=churn,
-                churn_schedule=churn_schedule,
-                replan=replan,
-                scheduler=scheduler,
-                workers_per_job=workers_per_job,
-                job_plans=job_plans,
-                churn_pairs_per_worker=churn_pairs_per_worker,
-                dtype=dtype,
-                rep_chunk=rep_chunk,
-                devices=devices,
+                scenario=sc,
             )
             return rep.compute_times[0]
+        sc.validate(n_workers=n_workers, backend="jax")
         from .vectorized import frontier_job_times
 
         return frontier_job_times(
@@ -779,46 +786,27 @@ def sample_job_times(
             [n_batches],
             n_samples,
             seed=seed,
-            size_dependent=size_dependent,
-            n_tasks=n_tasks,
+            size_dependent=sc.size_dependent,
+            n_tasks=sc.n_tasks,
         )[0]
     if backend != "python":
         raise ValueError(f"unknown backend {backend!r} (expected 'jax' or 'python')")
-    if space and (replan is not None or controller is not None):
-        # match the jax space lane's contract so the backends agree on what
-        # is expressible (one cluster-wide replanned B has no meaning across
-        # concurrent heterogeneous plans)
-        raise ValueError(
-            "replan/controller is not supported with space-sharing schedulers "
-            "/ per-job plans (the online replanner picks one cluster-wide B)"
-        )
-    if replan is not None:
-        if controller is not None:
-            raise ValueError("pass either controller or replan, not both")
-        controller = replan.to_controller(n_workers)
-    plans = list(job_plans) if job_plans is not None else None
+    sc.validate(n_workers=n_workers, backend="python", controller=controller)
+    if controller is None and sc.replan is not None:
+        controller = sc.replan.to_controller(n_workers)
     jobs = [
         Job(
             job_id=i,
             dist=dist,
-            n_tasks=n_tasks if n_tasks is not None else n_workers,
-            plan=plans[i % len(plans)] if plans else None,
+            n_tasks=sc.n_tasks if sc.n_tasks is not None else n_workers,
+            plan=sc.job_plan_for(i),
         )
         for i in range(n_samples)
     ]
-    engine = ClusterEngine(
-        n_workers,
-        seed=seed,
-        n_batches=n_batches,
-        cancel_redundant=cancel_redundant,
-        size_dependent=size_dependent,
-        speeds=speeds,
-        churn=churn,
-        churn_schedule=churn_schedule,
-        controller=controller,
-        scheduler=scheduler,
-        workers_per_job=workers_per_job,
-    )
+    engine_kwargs = sc.to_engine_kwargs(n_workers)
+    engine_kwargs["n_batches"] = n_batches
+    engine_kwargs["controller"] = controller
+    engine = ClusterEngine(n_workers, seed=seed, **engine_kwargs)
     report = engine.run(jobs)
     return report.compute_times
 

@@ -1,0 +1,49 @@
+"""Live execution runtime: the DES engine's semantics against real processes.
+
+Everything else in :mod:`repro.cluster` *simulates* a redundancy plan; this
+subpackage *executes* one.  An asyncio master (:mod:`.master`) serves real
+worker processes (:mod:`.worker`) over a length-prefixed JSON protocol on
+localhost sockets (:mod:`.protocol`): worker registration, task leases with
+deadlines, heartbeat tracking with missed-heartbeat failure detection, and
+replica dispatch under the engine's exact FIFO-gang semantics --
+``RedundancyPlan``/:class:`~repro.cluster.scheduler.JobPlan` redundancy
+levels, cancel-on-earliest-cover, and rescue re-dispatch when a worker dies
+holding a batch's last replica.
+
+The master records every state transition as a trace event
+(:mod:`.trace`: ``join``/``submit``/``dispatch``/``finish``/``cancel``/
+``fail``/``flush``/``job_done`` with timestamps and worker ids), stamped on
+a binary time grid so all accounting arithmetic is exact, and
+:func:`~repro.cluster.runtime.trace.replay_trace` replays the identical
+event schedule through the discrete-event :class:`~repro.cluster.master.
+ClusterEngine` -- the engine is the runtime's digital twin, and the
+differential tests assert worker-seconds, saved-seconds, rescues, and
+per-job completion records match *bit for bit*.
+
+Scenario semantics come from the same frozen
+:class:`~repro.cluster.scenario.Scenario` the simulation entry points take:
+``Runtime(n_workers, scenario=Scenario(n_batches=2, cancel_redundant=True))``
+executes what ``sample_job_times(scenario=...)`` predicts.
+
+This subpackage is *not* imported by ``repro.cluster.__init__`` -- simulation
+users never pay for the service stack; ``import repro.cluster.runtime``
+explicitly.
+"""
+
+from .master import LiveJob, LiveReport, Runtime, RuntimeMaster
+from .trace import TICK, TraceRecorder, replay_trace, trace_accounting
+from .worker import spawn_worker_subprocess, spawn_worker_thread, worker_loop
+
+__all__ = [
+    "LiveJob",
+    "LiveReport",
+    "Runtime",
+    "RuntimeMaster",
+    "TICK",
+    "TraceRecorder",
+    "replay_trace",
+    "trace_accounting",
+    "spawn_worker_subprocess",
+    "spawn_worker_thread",
+    "worker_loop",
+]

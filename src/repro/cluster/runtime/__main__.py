@@ -1,0 +1,7 @@
+"""``python -m repro.cluster.runtime HOST PORT`` -- run one worker process."""
+
+import sys
+
+from .worker import main
+
+main(sys.argv)

@@ -1,0 +1,606 @@
+"""Asyncio master: leases, heartbeats, failure detection, replica dispatch.
+
+:class:`RuntimeMaster` is the live counterpart of the discrete-event
+:class:`~repro.cluster.master.ClusterEngine`, and is written decision-for-
+decision against it so the engine can replay its traces exactly:
+
+* whole-cluster FIFO gang dispatch -- the next job starts only when no job
+  is active and every alive worker is free; batch ``i % B`` goes to the
+  i-th free worker in wid order, B resolved with the engine's precedence
+  (``Job.plan.n_batches`` > scenario ``n_batches`` > alive count, clamped);
+* cancel-on-earliest-cover -- when a batch's first replica finishes, its
+  outstanding siblings (in wid order) are cancelled; the reclaimed time is
+  ``scheduled_end - now`` against the replica's planned duration;
+* rescue -- a worker dying with a batch's last replica queues the batch for
+  re-dispatch to the lowest-wid free worker;
+* failure detection -- a torn connection (EOF), a missed-heartbeat window,
+  or a blown task lease all declare the worker dead at one stamped instant.
+
+Every state transition is stamped once, on the strictly-increasing binary
+grid of :class:`~repro.cluster.runtime.trace.TraceRecorder`, and appended to
+the trace that :func:`~repro.cluster.runtime.trace.replay_trace` feeds back
+through the engine.  Handlers mutate state without awaiting (sends are
+buffered synchronously), so each recorded event is atomic and the recorded
+order *is* the decision order.
+
+:class:`Runtime` is the one-call facade: spawn workers (threads or real
+subprocesses), run a workload under a
+:class:`~repro.cluster.scenario.Scenario`, return a :class:`LiveReport`.
+"""
+
+from __future__ import annotations
+
+import asyncio
+import dataclasses
+import math
+import time
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+from ..master import JobRecord
+from ..scenario import Scenario
+from ..scheduler import JobPlan
+from .protocol import read_msg, send_nowait
+from .trace import TICK, TraceRecorder, quantize, trace_accounting
+from .worker import spawn_worker_subprocess, spawn_worker_thread
+
+__all__ = ["LiveJob", "LiveReport", "Runtime", "RuntimeMaster"]
+
+
+@dataclasses.dataclass(frozen=True)
+class LiveJob:
+    """One live job: real task payloads instead of a service-time law.
+
+    ``costs[i]`` is task i's nominal cost (seconds of sleep / compute);
+    batch ``b`` of B executes tasks ``costs[b::B]``.  ``plan`` carries the
+    same per-job :class:`~repro.cluster.scheduler.JobPlan` overrides the
+    engine honours under the gang regime (``n_batches``,
+    ``cancel_redundant``).  ``arrival`` is an offset in seconds from the
+    run's start at which the job is submitted.
+    """
+
+    job_id: int
+    costs: Tuple[float, ...]
+    payload: str = "sleep"
+    arrival: float = 0.0
+    name: str = ""
+    plan: Optional[JobPlan] = None
+    # worker wid scales its real execution by (1 + wid * skew): cheap
+    # stand-in for machines whose true speeds the master does not know --
+    # the straggler spread that makes cancellation reclaim real time
+    skew: float = 0.0
+
+    @property
+    def n_tasks(self) -> int:
+        return len(self.costs)
+
+    def batch_costs(self, batch: int, n_batches: int) -> Tuple[float, ...]:
+        return tuple(self.costs[batch::n_batches])
+
+
+@dataclasses.dataclass
+class LiveReport:
+    """Outcome of one live run: the engine-report surface plus the trace."""
+
+    records: List[JobRecord]
+    worker_seconds: float
+    cancelled_seconds_saved: float
+    n_worker_failures: int
+    n_replicas_rescued: int
+    trace: tuple
+    completion_order: Tuple[int, ...]
+
+    def accounting(self) -> dict:
+        """Same key set as :meth:`~repro.cluster.master.EngineReport.accounting`."""
+        return {
+            "worker_seconds": float(self.worker_seconds),
+            "cancelled_seconds_saved": float(self.cancelled_seconds_saved),
+            "n_worker_failures": int(self.n_worker_failures),
+            "n_replicas_rescued": int(self.n_replicas_rescued),
+            "n_replans": 0,
+        }
+
+
+@dataclasses.dataclass
+class _LiveWorker:
+    wid: int
+    writer: asyncio.StreamWriter
+    pid: int
+    alive: bool = True
+    assignment: Optional[Tuple[int, int]] = None  # (job_id, batch)
+    epoch: int = 0
+    busy_since: float = 0.0
+    scheduled_end: float = math.inf
+    last_hb: float = 0.0  # raw monotonic, detection only
+    lease_deadline: float = math.inf  # raw monotonic, detection only
+
+    @property
+    def free(self) -> bool:
+        return self.alive and self.assignment is None
+
+
+@dataclasses.dataclass
+class _LiveExec:
+    job: LiveJob
+    start: float
+    n_batches: int
+    replication: int
+    cancel: bool
+    done: Set[int] = dataclasses.field(default_factory=set)
+    outstanding: Dict[int, Set[int]] = dataclasses.field(default_factory=dict)
+
+    @property
+    def complete(self) -> bool:
+        return len(self.done) == self.n_batches
+
+
+def _validate_runtime_scenario(sc: Scenario, n_workers: int) -> Scenario:
+    """The runtime's slice of the one validation path.
+
+    Shares :meth:`Scenario.validate` (python-backend rules), then rejects
+    the simulation-only knobs: the live gang has real speeds and real
+    churn, and space sharing / online replanning are not implemented yet.
+    """
+    sc.validate(n_workers=n_workers, backend="python")
+    if sc.is_space:
+        raise ValueError(
+            "Scenario.scheduler/workers_per_job/job_plans: the live runtime "
+            "runs the whole-cluster FIFO gang only (per-job plans ride on "
+            "LiveJob.plan); space-sharing schedulers are simulation-only"
+        )
+    for knob in ("speeds", "churn", "churn_schedule", "replan"):
+        if getattr(sc, knob) is not None:
+            raise ValueError(
+                f"Scenario.{knob}: simulation-only -- the live runtime "
+                "measures real worker speeds and real failures"
+            )
+    return sc
+
+
+class RuntimeMaster:
+    """The asyncio master service.  See the module docstring for semantics.
+
+    Lifecycle: ``await start()`` (returns the bound port), spawn workers at
+    it, ``await wait_for_workers()``, ``await run(jobs)``, ``await close()``.
+    """
+
+    def __init__(
+        self,
+        n_workers: int,
+        scenario: Optional[Scenario] = None,
+        *,
+        host: str = "127.0.0.1",
+        port: int = 0,
+        heartbeat_s: float = 0.05,
+        heartbeat_timeout_s: float = 0.5,
+        lease_factor: float = 8.0,
+        lease_floor_s: float = 2.0,
+    ):
+        self.scenario = _validate_runtime_scenario(
+            scenario if scenario is not None else Scenario(), n_workers
+        )
+        self.n_workers = int(n_workers)
+        self.host = host
+        self._port_req = int(port)
+        self.heartbeat_s = float(heartbeat_s)
+        self.heartbeat_timeout_s = float(heartbeat_timeout_s)
+        self.lease_factor = float(lease_factor)
+        self.lease_floor_s = float(lease_floor_s)
+
+        self.recorder = TraceRecorder()
+        self.workers: List[_LiveWorker] = []
+        self.queue: List[LiveJob] = []
+        self.active: Dict[int, _LiveExec] = {}
+        self.rescue: List[Tuple[int, int]] = []
+        self.records: List[JobRecord] = []
+        self.completion_order: List[int] = []
+        self._arrival_stamp: Dict[int, float] = {}
+
+        self._ws = 0.0
+        self._saved = 0.0
+        self._n_failures = 0
+        self._n_rescued = 0
+        self._n_jobs_expected = 0
+        self._finalized = False
+        self._server: Optional[asyncio.base_events.Server] = None
+        self._watchdog_task: Optional[asyncio.Task] = None
+        self._all_joined = asyncio.Event()
+        self._done = asyncio.Event()
+        self._ran = False
+
+    # -- lifecycle -----------------------------------------------------------
+
+    async def start(self) -> int:
+        self._server = await asyncio.start_server(self._handle_conn, self.host, self._port_req)
+        self.port = self._server.sockets[0].getsockname()[1]
+        self._watchdog_task = asyncio.ensure_future(self._watchdog())
+        return self.port
+
+    async def wait_for_workers(self, timeout_s: float = 30.0) -> None:
+        await asyncio.wait_for(self._all_joined.wait(), timeout_s)
+
+    async def run(self, jobs: Sequence[LiveJob], timeout_s: float = 120.0) -> LiveReport:
+        """Submit ``jobs`` at their arrival offsets and run to completion."""
+        if self._ran:
+            raise RuntimeError("RuntimeMaster.run() is single-shot; construct a new master")
+        self._ran = True
+        self._n_jobs_expected = len(jobs)
+        if not jobs:
+            self._finalize(self.recorder.stamp())
+        for job in sorted(jobs, key=lambda j: (j.arrival, j.job_id)):
+            delay = job.arrival - self.recorder.elapsed()
+            if delay > 0:
+                await asyncio.sleep(delay)
+            self._on_submit(job)
+        await asyncio.wait_for(self._done.wait(), timeout_s)
+        return LiveReport(
+            records=sorted(self.records, key=lambda r: r.job_id),
+            worker_seconds=self._ws,
+            cancelled_seconds_saved=self._saved,
+            n_worker_failures=self._n_failures,
+            n_replicas_rescued=self._n_rescued,
+            trace=self.recorder.events,
+            completion_order=tuple(self.completion_order),
+        )
+
+    async def close(self) -> None:
+        if self._watchdog_task is not None:
+            self._watchdog_task.cancel()
+        for w in self.workers:
+            try:
+                send_nowait(w.writer, {"type": "shutdown"})
+            except (ConnectionError, RuntimeError):
+                pass
+            w.writer.close()
+        if self._server is not None:
+            self._server.close()
+            await self._server.wait_closed()
+
+    # -- connection handling -------------------------------------------------
+
+    async def _handle_conn(self, reader, writer) -> None:
+        msg = await read_msg(reader)
+        if msg is None or msg.get("type") != "register" or len(self.workers) >= self.n_workers:
+            writer.close()
+            return
+        worker = _LiveWorker(
+            wid=len(self.workers),
+            writer=writer,
+            pid=int(msg.get("pid", -1)),
+            last_hb=time.monotonic(),
+        )
+        self.workers.append(worker)
+        self.recorder.record("join", self.recorder.stamp(), wid=worker.wid, pid=worker.pid)
+        send_nowait(writer, {"type": "welcome", "wid": worker.wid, "heartbeat_s": self.heartbeat_s})
+        if len(self.workers) == self.n_workers:
+            self._all_joined.set()
+        while True:
+            msg = await read_msg(reader)
+            if msg is None:
+                self._fail(worker, "eof")
+                return
+            kind = msg["type"]
+            if kind == "hb":
+                worker.last_hb = time.monotonic()
+            elif kind == "finish":
+                self._on_finish(worker, msg)
+
+    async def _watchdog(self) -> None:
+        """Missed-heartbeat and blown-lease detection."""
+        period = max(self.heartbeat_timeout_s / 4.0, 0.01)
+        while True:
+            await asyncio.sleep(period)
+            now_m = time.monotonic()
+            for w in self.workers:
+                if not w.alive:
+                    continue
+                if now_m - w.last_hb > self.heartbeat_timeout_s:
+                    self._fail(w, "heartbeat")
+                elif w.assignment is not None and now_m > w.lease_deadline:
+                    self._fail(w, "lease")
+
+    # -- plan resolution (the engine's precedence, verbatim) -----------------
+
+    def _choose_B(self, job: LiveJob, n_avail: int) -> int:
+        if job.plan is not None and job.plan.n_batches is not None:
+            b = job.plan.n_batches
+        elif self.scenario.n_batches is not None:
+            b = self.scenario.n_batches
+        else:
+            b = n_avail
+        return max(1, min(int(b), n_avail))
+
+    def _job_cancel(self, job: LiveJob) -> bool:
+        if job.plan is not None and job.plan.cancel_redundant is not None:
+            return bool(job.plan.cancel_redundant)
+        return self.scenario.cancel_redundant
+
+    # -- event handlers (one stamp each, mirroring the engine) ---------------
+
+    def _on_submit(self, job: LiveJob) -> None:
+        now = self.recorder.stamp()
+        plan = None
+        if job.plan is not None:
+            plan = {
+                "workers": job.plan.workers,
+                "n_batches": job.plan.n_batches,
+                "cancel_redundant": job.plan.cancel_redundant,
+            }
+        self.recorder.record(
+            "submit", now, job=job.job_id, n_tasks=job.n_tasks, plan=plan, name=job.name
+        )
+        self._arrival_stamp[job.job_id] = now
+        self.queue.append(job)
+        self._assign_rescues(now)
+        self._try_dispatch(now)
+
+    def _on_finish(self, worker: _LiveWorker, msg: dict) -> None:
+        job_id, batch = int(msg["job"]), int(msg["batch"])
+        if (
+            self._finalized
+            or not worker.alive
+            or int(msg["epoch"]) != worker.epoch
+            or worker.assignment != (job_id, batch)
+        ):
+            return  # stale: cancelled, superseded, or the run already ended
+        now = self.recorder.stamp()
+        self.recorder.record("finish", now, wid=worker.wid, job=job_id, batch=batch)
+        self._release(worker, now)
+        jexec = self.active.get(job_id)
+        if jexec is None:
+            # the job already covered; this straggler ran to completion
+            self._assign_rescues(now)
+            self._try_dispatch(now)
+            return
+        jexec.outstanding[batch].discard(worker.wid)
+        if batch not in jexec.done:
+            jexec.done.add(batch)
+            if jexec.cancel:
+                for sib_wid in sorted(jexec.outstanding[batch]):
+                    self._cancel_replica(self.workers[sib_wid], now)
+                jexec.outstanding[batch].clear()
+            if jexec.complete:
+                self._finish_job(jexec, now)
+        if not self._finalized:
+            self._assign_rescues(now)
+            self._try_dispatch(now)
+
+    def _fail(self, worker: _LiveWorker, cause: str) -> None:
+        if self._finalized or not worker.alive:
+            return
+        now = self.recorder.stamp()
+        self.recorder.record("fail", now, wid=worker.wid, cause=cause)
+        self._n_failures += 1
+        if worker.assignment is not None:
+            job_id, batch = worker.assignment
+            self._ws += now - worker.busy_since
+            jexec = self.active.get(job_id)
+            if jexec is not None:
+                jexec.outstanding[batch].discard(worker.wid)
+                if batch not in jexec.done and not jexec.outstanding[batch]:
+                    self.rescue.append((job_id, batch))
+            worker.assignment = None
+            worker.scheduled_end = math.inf
+        worker.alive = False
+        worker.epoch += 1
+        worker.writer.close()
+        self._assign_rescues(now)
+        self._try_dispatch(now)
+
+    # -- dispatch (the engine's gang loop, verbatim) -------------------------
+
+    def _free_workers(self) -> List[_LiveWorker]:
+        return [w for w in self.workers if w.free]  # wid order by construction
+
+    def _try_dispatch(self, now: float) -> None:
+        while self.queue and not self.active:
+            n_alive = sum(1 for w in self.workers if w.alive)
+            free = self._free_workers()
+            if n_alive == 0 or len(free) < n_alive:
+                return
+            job = self.queue.pop(0)
+            b = self._choose_B(job, n_alive)
+            r = n_alive // b
+            jexec = _LiveExec(
+                job=job,
+                start=now,
+                n_batches=b,
+                replication=r,
+                cancel=self._job_cancel(job),
+            )
+            self.active[job.job_id] = jexec
+            for idx, worker in enumerate(free[: b * r]):
+                self._assign(worker, jexec, idx % b, now, rescue=False)
+
+    def _assign_rescues(self, now: float) -> None:
+        while self.rescue:
+            free = self._free_workers()
+            if not free:
+                return
+            job_id, batch = self.rescue.pop(0)
+            jexec = self.active.get(job_id)
+            if jexec is None or batch in jexec.done:
+                continue
+            self._assign(free[0], jexec, batch, now, rescue=True)
+            self._n_rescued += 1
+
+    def _assign(
+        self, worker: _LiveWorker, jexec: _LiveExec, batch: int, now: float, *, rescue: bool
+    ) -> None:
+        costs = jexec.job.batch_costs(batch, jexec.n_batches)
+        # per-replica expectation: the master schedules with the worker's
+        # speed factor (it would measure one on a real cluster), so a batch's
+        # replicas get distinct scheduled ends -- the slack that cancellation
+        # reclaims and that lease deadlines must respect
+        planned = quantize(sum(costs) * (1.0 + worker.wid * jexec.job.skew))
+        worker.assignment = (jexec.job.job_id, batch)
+        worker.busy_since = now
+        worker.scheduled_end = now + planned
+        worker.lease_deadline = time.monotonic() + max(
+            self.lease_floor_s, planned * self.lease_factor
+        )
+        jexec.outstanding.setdefault(batch, set()).add(worker.wid)
+        self.recorder.record(
+            "dispatch",
+            now,
+            wid=worker.wid,
+            job=jexec.job.job_id,
+            batch=batch,
+            planned=planned,
+            rescue=rescue,
+        )
+        send_nowait(
+            worker.writer,
+            {
+                "type": "task",
+                "job": jexec.job.job_id,
+                "batch": batch,
+                "epoch": worker.epoch,
+                "payload": jexec.job.payload,
+                "costs": list(costs),
+                "skew": jexec.job.skew,
+                "lease_s": max(self.lease_floor_s, planned * self.lease_factor),
+            },
+        )
+
+    # -- accounting transitions ----------------------------------------------
+
+    def _release(self, worker: _LiveWorker, now: float) -> None:
+        self._ws += now - worker.busy_since
+        worker.assignment = None
+        worker.scheduled_end = math.inf
+        worker.lease_deadline = math.inf
+
+    def _cancel_replica(self, sib: _LiveWorker, now: float) -> None:
+        job_id, batch = sib.assignment
+        # the effective scheduled end is pushed at least one tick past 'now'
+        # so reclaimed time stays positive and the replay's event for this
+        # replica pops strictly after the winner's (where it is stale)
+        sched_end = max(sib.scheduled_end, now + TICK)
+        self._saved += sched_end - now
+        self.recorder.record(
+            "cancel", now, wid=sib.wid, job=job_id, batch=batch, sched_end=sched_end
+        )
+        send_nowait(
+            sib.writer, {"type": "cancel", "job": job_id, "batch": batch, "epoch": sib.epoch}
+        )
+        sib.epoch += 1  # the in-flight finish (if any) is now stale
+        self._release(sib, now)
+
+    def _finish_job(self, jexec: _LiveExec, now: float) -> None:
+        job = jexec.job
+        self.records.append(
+            JobRecord(
+                job_id=job.job_id,
+                name=job.name,
+                # the recorded submit stamp, not the requested offset: this is
+                # the arrival the engine replay sees, so records match exactly
+                arrival=self._arrival_stamp[job.job_id],
+                start=jexec.start,
+                finish=now,
+                n_batches=jexec.n_batches,
+                replication=jexec.replication,
+            )
+        )
+        self.completion_order.append(job.job_id)
+        self.recorder.record(
+            "job_done",
+            now,
+            job=job.job_id,
+            start=jexec.start,
+            n_batches=jexec.n_batches,
+            replication=jexec.replication,
+        )
+        del self.active[job.job_id]
+        self.rescue = [(j, b) for (j, b) in self.rescue if j != job.job_id]
+        if len(self.records) == self._n_jobs_expected:
+            self._finalize(now)
+
+    def _finalize(self, now: float) -> None:
+        """End of run: charge still-in-flight replicas their full planned
+        duration (the engine's flush rule) and freeze the trace -- nothing
+        that happens on the sockets after this instant is part of the run."""
+        for worker in self.workers:
+            if worker.alive and worker.assignment is not None:
+                job_id, batch = worker.assignment
+                self._ws += worker.scheduled_end - worker.busy_since
+                self.recorder.record(
+                    "flush",
+                    now,
+                    wid=worker.wid,
+                    job=job_id,
+                    batch=batch,
+                    sched_end=worker.scheduled_end,
+                )
+                send_nowait(
+                    worker.writer,
+                    {"type": "cancel", "job": job_id, "batch": batch, "epoch": worker.epoch},
+                )
+                worker.epoch += 1
+                worker.assignment = None
+                worker.scheduled_end = math.inf
+        self._finalized = True
+        self.recorder.frozen = True
+        self._done.set()
+
+
+class Runtime:
+    """One-call facade: spawn workers, execute a workload, return the report.
+
+    ``spawn="thread"`` runs each worker in-process on its own thread and
+    event loop (cheap, deterministic teardown); ``spawn="subprocess"`` forks
+    real ``python -m repro.cluster.runtime.worker`` processes, which chaos
+    tests can SIGKILL mid-task.  Either way the master talks to them over
+    real localhost sockets -- the protocol path is identical.
+    """
+
+    def __init__(
+        self,
+        n_workers: int,
+        scenario: Optional[Scenario] = None,
+        *,
+        spawn: str = "thread",
+        heartbeat_s: float = 0.05,
+        heartbeat_timeout_s: float = 0.5,
+        host: str = "127.0.0.1",
+    ):
+        if spawn not in ("thread", "subprocess"):
+            raise ValueError(f"spawn must be 'thread' or 'subprocess', got {spawn!r}")
+        self.n_workers = int(n_workers)
+        self.scenario = scenario
+        self.spawn = spawn
+        self.heartbeat_s = heartbeat_s
+        self.heartbeat_timeout_s = heartbeat_timeout_s
+        self.host = host
+
+    def run(self, jobs: Sequence[LiveJob], timeout_s: float = 120.0) -> LiveReport:
+        return asyncio.run(self.run_async(jobs, timeout_s=timeout_s))
+
+    async def run_async(self, jobs: Sequence[LiveJob], timeout_s: float = 120.0) -> LiveReport:
+        master = RuntimeMaster(
+            self.n_workers,
+            self.scenario,
+            host=self.host,
+            heartbeat_s=self.heartbeat_s,
+            heartbeat_timeout_s=self.heartbeat_timeout_s,
+        )
+        port = await master.start()
+        spawner = spawn_worker_thread if self.spawn == "thread" else spawn_worker_subprocess
+        handles = [spawner(self.host, port) for _ in range(self.n_workers)]
+        try:
+            await master.wait_for_workers()
+            report = await master.run(jobs, timeout_s=timeout_s)
+        finally:
+            await master.close()
+            for h in handles:
+                if hasattr(h, "join"):
+                    h.join(timeout=5.0)
+                else:
+                    try:
+                        h.wait(timeout=5.0)
+                    except Exception:
+                        h.kill()
+        # sanity: the master's own counters must agree with the trace fold
+        acct = trace_accounting(report.trace)
+        if acct != report.accounting():  # pragma: no cover - internal invariant
+            raise RuntimeError(f"trace fold disagrees with live counters: {acct}")
+        return report

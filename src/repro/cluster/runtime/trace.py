@@ -1,0 +1,278 @@
+"""Trace recording and the digital-twin replay through the DES engine.
+
+The runtime master stamps every state transition on a binary time grid of
+``TICK = 2**-20`` seconds (~0.95 us).  Grid timestamps are exact binary
+fractions, so every difference and sum the accounting takes -- elapsed busy
+time, reclaimed replica time, scheduled ends -- is *exact* in float64, which
+is what lets :func:`replay_trace` push the recorded schedule through
+:class:`~repro.cluster.master.ClusterEngine` and demand bit-for-bit equality
+with the live accounting rather than a tolerance.
+
+Stamps are also strictly increasing across recorded events (ties bump to the
+next grid point): the engine's event heap breaks time ties by insertion
+order, so distinct stamps guarantee the replay pops events in exactly the
+order the live master processed them.
+
+Event vocabulary (``ev`` field):
+
+=========  =============================================================
+join       worker registered (t, wid)
+submit     job entered the queue (t, job, n_tasks, plan)
+dispatch   replica placed on a worker (t, wid, job, batch, planned, rescue)
+finish     replica's finish processed (t, wid, job, batch)
+cancel     outstanding sibling reclaimed (t, wid, job, batch, sched_end)
+fail       worker declared dead (t, wid, cause: eof|heartbeat|lease)
+flush      replica still in flight at run end (t, wid, job, batch, sched_end)
+job_done   job completed (t, job, start, n_batches, replication)
+=========  =============================================================
+
+``replay_trace`` rebuilds the identical workload -- jobs at their recorded
+arrival stamps, worker failures as an explicit
+:class:`~repro.cluster.workers.ChurnSchedule` at their detection stamps, and
+every replica duration scripted from the trace (elapsed time for finished
+replicas; the recorded scheduled end for cancelled/failed/flushed ones) --
+and runs the event engine on it.  The engine re-*derives* every decision
+(gang dispatch order, rescue targets, sibling cancellation), so agreement is
+a real differential check of the two implementations, not a tautology.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+from typing import Dict, List, Optional, Tuple
+
+__all__ = [
+    "TICK",
+    "TraceRecorder",
+    "replay_trace",
+    "trace_accounting",
+]
+
+_GRID = 1 << 20
+TICK = 1.0 / _GRID  # the master's time quantum: one grid unit, ~0.95 us
+
+
+def quantize(seconds: float) -> float:
+    """Round a duration up onto the grid (durations stay strictly positive)."""
+    return max(1, math.ceil(seconds * _GRID)) / _GRID
+
+
+class TraceRecorder:
+    """Event log + the master's monotone, grid-quantized clock.
+
+    ``stamp()`` reads the process monotonic clock relative to the recorder's
+    birth, quantizes it to the grid, and enforces strict increase -- two
+    events can never share a timestamp, so replay order is total.
+    """
+
+    def __init__(self):
+        self._t0 = time.monotonic()
+        self._last_g = 0
+        self._events: List[dict] = []
+        self.frozen = False
+
+    def elapsed(self) -> float:
+        """Raw (unquantized) seconds since the recorder was born."""
+        return time.monotonic() - self._t0
+
+    def stamp(self) -> float:
+        g = int(self.elapsed() * _GRID)
+        self._last_g = max(g, self._last_g + 1)
+        return self._last_g / _GRID
+
+    def record(self, ev: str, t: float, **fields) -> None:
+        if self.frozen:
+            raise RuntimeError("trace is frozen; the run already finalized")
+        self._events.append({"ev": ev, "t": t, **fields})
+
+    @property
+    def events(self) -> Tuple[dict, ...]:
+        return tuple(self._events)
+
+
+# --------------------------------------------------------------------------
+# accounting fold: the runtime's counters derived purely from the trace
+# --------------------------------------------------------------------------
+
+
+def trace_accounting(events) -> dict:
+    """Fold a trace into the engine's invariant-bearing counters.
+
+    Returns the same key set as
+    :meth:`~repro.cluster.master.EngineReport.accounting` (the live runtime
+    has no online replanner, so ``n_replans`` is 0).  This is a *pure*
+    function of the event log -- the differential tests check it against
+    both the live master's own counters and the engine replay's.
+    """
+    ws = 0.0
+    saved = 0.0
+    n_failures = 0
+    n_rescued = 0
+    busy: Dict[int, dict] = {}  # wid -> its open dispatch event
+    for e in events:
+        kind = e["ev"]
+        if kind == "dispatch":
+            busy[e["wid"]] = e
+            if e["rescue"]:
+                n_rescued += 1
+        elif kind == "finish":
+            d = busy.pop(e["wid"])
+            ws += e["t"] - d["t"]
+        elif kind == "cancel":
+            d = busy.pop(e["wid"])
+            ws += e["t"] - d["t"]
+            saved += e["sched_end"] - e["t"]
+        elif kind == "fail":
+            n_failures += 1
+            d = busy.pop(e["wid"], None)
+            if d is not None:
+                ws += e["t"] - d["t"]
+        elif kind == "flush":
+            d = busy.pop(e["wid"])
+            ws += e["sched_end"] - d["t"]
+    return {
+        "worker_seconds": ws,
+        "cancelled_seconds_saved": saved,
+        "n_worker_failures": n_failures,
+        "n_replicas_rescued": n_rescued,
+        "n_replans": 0,
+    }
+
+
+# --------------------------------------------------------------------------
+# the digital twin: replay the recorded schedule through ClusterEngine
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class _ScriptedService:
+    """A ServiceTime stand-in that pops recorded replica durations in order.
+
+    The engine draws exactly one service time per replica it dispatches, in
+    dispatch order; with ``size_dependent=False`` and homogeneous unit
+    speeds the draw *is* the wall-clock duration.  Exhausting the script --
+    or leaving part of it unconsumed -- means the engine made a different
+    dispatch sequence than the live master: a genuine divergence, reported
+    loudly instead of silently misaligning durations.
+    """
+
+    durations: Tuple[float, ...]
+    cursor: int = 0
+
+    def sample_np(self, rng, shape):
+        if shape not in ((), None):  # pragma: no cover - engine always draws scalars
+            raise ValueError(f"scripted service draws scalars, got shape {shape}")
+        if self.cursor >= len(self.durations):
+            raise RuntimeError(
+                "trace replay diverged: the engine dispatched more replicas "
+                f"than the trace recorded ({len(self.durations)})"
+            )
+        d = self.durations[self.cursor]
+        self.cursor += 1
+        return d
+
+
+def _scripted_durations(events) -> Tuple[float, ...]:
+    """Per-dispatch scripted durations, in dispatch order.
+
+    finished   -> elapsed (finish stamp - dispatch stamp): the engine's
+                  BATCH_DONE then lands exactly on the recorded finish stamp;
+    cancelled  -> recorded effective scheduled end - dispatch stamp: the
+                  engine's ``scheduled_end`` (and so its saved-seconds)
+                  matches the live accounting, and the event pops strictly
+                  after the winner's, where the epoch guard drops it;
+    failed     -> pushed past the failure stamp so the fail event wins the
+                  race (worker-seconds charge only reads ``busy_since``);
+    flushed    -> the recorded scheduled end (full planned duration), the
+                  engine's end-of-run committed-time charge.
+    """
+    durations: List[float] = []
+    slot: Dict[int, int] = {}  # wid -> index into durations of its open dispatch
+    start: Dict[int, float] = {}
+    for e in events:
+        kind = e["ev"]
+        if kind == "dispatch":
+            slot[e["wid"]] = len(durations)
+            start[e["wid"]] = e["t"]
+            durations.append(e["planned"])  # placeholder until the outcome is known
+        elif kind == "finish":
+            durations[slot.pop(e["wid"])] = e["t"] - start.pop(e["wid"])
+        elif kind in ("cancel", "flush"):
+            durations[slot.pop(e["wid"])] = e["sched_end"] - start.pop(e["wid"])
+        elif kind == "fail":
+            k = slot.pop(e["wid"], None)
+            if k is not None:
+                t0 = start.pop(e["wid"])
+                durations[k] = max(durations[k], e["t"] - t0 + TICK)
+    if slot:  # pragma: no cover - the master always closes open dispatches
+        raise RuntimeError(f"trace ended with open dispatches on workers {sorted(slot)}")
+    return tuple(durations)
+
+
+def replay_trace(events, n_workers: int, scenario=None):
+    """Replay a recorded runtime trace through the discrete-event engine.
+
+    Builds the identical workload the live master saw -- same arrival
+    stamps, same worker-failure timeline, same per-replica durations -- and
+    returns the engine's :class:`~repro.cluster.master.EngineReport`.  The
+    engine independently re-derives dispatch, rescue, and cancellation
+    decisions; if runtime and engine implement the same semantics, the
+    report's accounting and job records equal the live ones bit for bit.
+
+    ``scenario`` is the same :class:`~repro.cluster.scenario.Scenario` the
+    runtime ran (engine-wide ``n_batches`` / ``cancel_redundant``); per-job
+    :class:`~repro.cluster.scheduler.JobPlan` overrides ride in the trace's
+    ``submit`` events.
+    """
+    from ..master import ClusterEngine, Job
+    from ..scenario import Scenario
+    from ..scheduler import JobPlan
+    from ..workers import ChurnSchedule
+
+    sc = scenario if scenario is not None else Scenario()
+    dist = _ScriptedService(_scripted_durations(events))
+
+    jobs = []
+    fail_times: List[float] = []
+    fail_wids: List[int] = []
+    for e in events:
+        if e["ev"] == "submit":
+            plan = e.get("plan")
+            jobs.append(
+                Job(
+                    job_id=e["job"],
+                    dist=dist,
+                    n_tasks=e["n_tasks"],
+                    arrival=e["t"],
+                    name=e.get("name", ""),
+                    plan=JobPlan(**plan) if plan else None,
+                )
+            )
+        elif e["ev"] == "fail":
+            fail_times.append(e["t"])
+            fail_wids.append(e["wid"])
+
+    schedule = None
+    if fail_times:
+        schedule = ChurnSchedule(
+            times=tuple(fail_times),
+            wids=tuple(fail_wids),
+            ups=(False,) * len(fail_times),
+        )
+    engine = ClusterEngine(
+        n_workers,
+        seed=0,  # the scripted service ignores the rng; nothing else draws
+        n_batches=sc.n_batches,
+        cancel_redundant=sc.cancel_redundant,
+        size_dependent=False,  # scripted draws are wall-clock durations
+        churn_schedule=schedule,
+    )
+    report = engine.run(jobs)
+    if dist.cursor != len(dist.durations):
+        raise RuntimeError(
+            "trace replay diverged: the engine dispatched "
+            f"{dist.cursor} replicas, the trace recorded {len(dist.durations)}"
+        )
+    return report

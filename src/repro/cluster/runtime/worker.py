@@ -1,0 +1,163 @@
+"""Worker process: executes real task payloads, streams heartbeats, honors
+cancellation.
+
+A worker owns one socket to the master and runs one batch replica at a time.
+Three payload kinds cover the behaviours the runtime tests need:
+
+* ``sleep``  -- ``asyncio.sleep`` for the batch's total cost: a perfectly
+  cancellable stand-in for I/O-bound work.
+* ``numpy``  -- real matmul work in small chunks with an ``await`` between
+  chunks, so cancellation lands at chunk boundaries: CPU-bound but
+  cooperative.
+* ``block``  -- ``time.sleep`` on the event loop thread: a *misbehaving*
+  task that starves the heartbeat coroutine, which is exactly how the
+  master's missed-heartbeat failure detection gets exercised.
+
+Workers run either in-process (one thread per worker, each with its own
+event loop -- cheap, coverage-friendly) via :func:`spawn_worker_thread`, or
+as real subprocesses via :func:`spawn_worker_subprocess` (``python -m
+repro.cluster.runtime.worker HOST PORT``) when a test needs to SIGKILL one
+mid-task.
+"""
+
+from __future__ import annotations
+
+import asyncio
+import os
+import subprocess
+import sys
+import threading
+import time
+
+import numpy as np
+
+from .protocol import read_msg, send_msg
+
+__all__ = ["run_payload", "spawn_worker_subprocess", "spawn_worker_thread", "worker_loop"]
+
+
+async def run_payload(payload: str, costs, factor: float = 1.0) -> None:
+    """Execute one batch replica's work; raises CancelledError if cancelled.
+
+    ``factor`` scales the real execution time (the per-worker speed skew the
+    master dispatches but does not model -- its straggling replicas are what
+    cancel-on-earliest-cover reclaims).
+    """
+    if payload == "sleep":
+        await asyncio.sleep(float(sum(costs)) * factor)
+    elif payload == "numpy":
+        # ~cost seconds of matmul per task, chunked so cancellation can land
+        a = np.random.default_rng(0).standard_normal((96, 96))
+        for c in costs:
+            deadline = time.monotonic() + float(c) * factor
+            while time.monotonic() < deadline:
+                a = np.tanh(a @ a.T / 96.0)
+                await asyncio.sleep(0)
+    elif payload == "block":
+        # deliberately hostile: blocks the loop, starving heartbeats
+        time.sleep(float(sum(costs)) * factor)
+    else:
+        raise ValueError(f"unknown payload kind {payload!r}")
+
+
+async def _heartbeat(writer, wid: int, interval_s: float) -> None:
+    try:
+        while True:
+            await asyncio.sleep(interval_s)
+            await send_msg(writer, {"type": "hb", "wid": wid})
+    except (ConnectionError, RuntimeError):
+        return  # the master tore the socket down; the read loop will exit too
+
+
+async def worker_loop(host: str, port: int) -> None:
+    """Connect, register, then serve task/cancel messages until shutdown."""
+    reader, writer = await asyncio.open_connection(host, port)
+    await send_msg(writer, {"type": "register", "pid": os.getpid()})
+    welcome = await read_msg(reader)
+    if welcome is None or welcome.get("type") != "welcome":
+        writer.close()
+        return
+    wid = int(welcome["wid"])
+    hb = asyncio.ensure_future(_heartbeat(writer, wid, float(welcome["heartbeat_s"])))
+    current: dict | None = None
+    task: asyncio.Task | None = None
+
+    async def execute(msg: dict) -> None:
+        try:
+            factor = 1.0 + wid * float(msg.get("skew", 0.0))
+            await run_payload(msg["payload"], msg["costs"], factor)
+            await send_msg(
+                writer,
+                {
+                    "type": "finish",
+                    "wid": wid,
+                    "job": msg["job"],
+                    "batch": msg["batch"],
+                    "epoch": msg["epoch"],
+                },
+            )
+        except asyncio.CancelledError:
+            raise
+        except Exception:
+            return  # broken payload or torn socket: no finish; the lease reaps it
+
+    try:
+        while True:
+            msg = await read_msg(reader)
+            if msg is None or msg["type"] == "shutdown":
+                break
+            if msg["type"] == "task":
+                current = msg
+                task = asyncio.ensure_future(execute(msg))
+            elif msg["type"] == "cancel":
+                if (
+                    task is not None
+                    and current is not None
+                    and (current["job"], current["batch"], current["epoch"])
+                    == (msg["job"], msg["batch"], msg["epoch"])
+                ):
+                    task.cancel()
+    finally:
+        hb.cancel()
+        if task is not None:
+            task.cancel()
+        writer.close()
+
+
+def spawn_worker_thread(host: str, port: int) -> threading.Thread:
+    """One in-process worker on its own thread + event loop.
+
+    A separate loop per worker matters: a ``block`` payload then stalls only
+    its own worker (exactly like a wedged remote process) instead of the
+    master's loop.
+    """
+    t = threading.Thread(
+        target=lambda: asyncio.run(worker_loop(host, port)),
+        name=f"repro-worker-{port}",
+        daemon=True,
+    )
+    t.start()
+    return t
+
+
+def spawn_worker_subprocess(host: str, port: int) -> subprocess.Popen:
+    """A real worker process -- killable mid-task with ``proc.kill()``.
+
+    Note worker ids are assigned in *registration* order, which need not be
+    spawn order: to kill a specific wid, look up its registered pid on the
+    master (``master.workers[wid].pid``) rather than indexing the Popens.
+    """
+    return subprocess.Popen(
+        [sys.executable, "-m", "repro.cluster.runtime", host, str(port)],
+        env=os.environ.copy(),
+    )
+
+
+def main(argv) -> None:
+    if len(argv) != 3:
+        raise SystemExit("usage: python -m repro.cluster.runtime HOST PORT")
+    asyncio.run(worker_loop(argv[1], int(argv[2])))
+
+
+if __name__ == "__main__":  # pragma: no cover - exercised as a subprocess
+    main(sys.argv)

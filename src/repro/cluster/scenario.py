@@ -1,0 +1,371 @@
+"""Scenario: one frozen, validated spec for every backend of the system.
+
+Five PRs of kwarg-threading left ``plan_cluster`` / ``plan_sweep`` /
+``sample_job_times`` / ``frontier_job_times_dynamic`` each carrying ~15
+loose keyword arguments (speeds, churn, schedules, replan, space-sharing
+knobs, jax scale knobs), with four separately-maintained copies of the
+validation rules.  :class:`Scenario` collapses all of that into a single
+frozen dataclass:
+
+* ``Scenario.validate()`` is *the* validation path -- the Python engine,
+  the jax epoch scan, the vectorized frontier, and the planner all route
+  through it, so an error names the offending field once, the same way,
+  everywhere, and says which backends support the knob;
+* ``to_engine_kwargs()`` / ``to_scan_cfg()`` translate the one spec into
+  the constructor kwargs of :class:`~repro.cluster.master.ClusterEngine`
+  and the keyword set of the jax epoch scan, so callers hold exactly one
+  object per scenario;
+* the legacy loose-kwarg call forms keep working behind
+  :func:`resolve_scenario`, which rebuilds the equivalent ``Scenario`` and
+  emits a :class:`DeprecationWarning`.
+
+The live execution runtime (:mod:`repro.cluster.runtime`) takes the same
+object: ``Runtime.run(plan, scenario=...)`` executes against real worker
+processes what ``sample_job_times(scenario=...)`` simulates.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import warnings
+from typing import TYPE_CHECKING, Optional, Tuple, Union
+
+from .scheduler import SCHEDULERS, JobPlan, Scheduler
+from .workers import ChurnProcess, ChurnSchedule
+
+if TYPE_CHECKING:  # pragma: no cover - annotation-only (avoids an import cycle
+    # with epoch_scan, which routes its validation through this module)
+    from .epoch_scan import ReplanConfig
+
+__all__ = ["Scenario", "UNSET", "resolve_scenario"]
+
+
+class _Unset:
+    """Sentinel distinguishing 'kwarg not passed' from an explicit None."""
+
+    _instance = None
+
+    def __new__(cls):
+        if cls._instance is None:
+            cls._instance = super().__new__(cls)
+        return cls._instance
+
+    def __repr__(self) -> str:  # pragma: no cover - cosmetic
+        return "UNSET"
+
+
+UNSET = _Unset()
+
+# fields a Scenario owns; the legacy call forms accept them loose (shimmed
+# through resolve_scenario with a DeprecationWarning)
+_LEGACY_FIELDS = (
+    "cancel_redundant",
+    "size_dependent",
+    "n_tasks",
+    "speeds",
+    "churn",
+    "churn_schedule",
+    "churn_pairs_per_worker",
+    "replan",
+    "scheduler",
+    "workers_per_job",
+    "job_plans",
+    "jobs_per_stream",
+    "dtype",
+    "rep_chunk",
+    "devices",
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    """Everything that defines a straggler-mitigation scenario, in one object.
+
+    Workload shape (``dist``, ``n_workers``, ``n_batches``, ``n_tasks``),
+    engine semantics (``cancel_redundant``, ``size_dependent``), dynamics
+    (``speeds``, ``churn`` | ``churn_schedule``, ``replan``), space sharing
+    (``scheduler``, ``workers_per_job``, ``job_plans``), and the jax scale
+    knobs (``dtype``, ``rep_chunk``, ``devices``).  Fields left ``None``
+    inherit each entry point's call-level arguments (e.g. ``plan_cluster``
+    sweeps candidate B's, so it ignores ``n_batches``; ``sample_job_times``
+    takes ``n_batches`` positionally and falls back to the scenario's).
+
+    Frozen and hashable, so a Scenario can key caches and ride inside jit
+    bucketing the way :class:`~repro.cluster.epoch_scan.ReplanConfig` does.
+    """
+
+    dist: Optional[object] = None  # ServiceTime; kept loose to avoid core import cycle
+    n_workers: Optional[int] = None
+    n_batches: Optional[int] = None
+    n_tasks: Optional[int] = None
+    cancel_redundant: bool = False
+    size_dependent: bool = True
+    speeds: Optional[Tuple[float, ...]] = None
+    churn: Optional[ChurnProcess] = None
+    churn_schedule: Optional[ChurnSchedule] = None
+    churn_pairs_per_worker: int = 8
+    replan: Optional[ReplanConfig] = None
+    scheduler: Union[str, Scheduler] = "fifo_gang"
+    workers_per_job: Optional[int] = None
+    job_plans: Optional[Tuple[Optional[JobPlan], ...]] = None
+    jobs_per_stream: int = 16
+    dtype: str = "float32"
+    rep_chunk: Optional[int] = None
+    devices: int = 1
+
+    def __post_init__(self):
+        # freeze the sequence-valued fields so the dataclass stays hashable
+        if self.speeds is not None and not isinstance(self.speeds, tuple):
+            object.__setattr__(self, "speeds", tuple(float(s) for s in self.speeds))
+        if self.job_plans is not None and not isinstance(self.job_plans, tuple):
+            object.__setattr__(self, "job_plans", tuple(self.job_plans))
+
+    # -- routing predicates --------------------------------------------------
+
+    @property
+    def scheduler_name(self) -> str:
+        return self.scheduler if isinstance(self.scheduler, str) else self.scheduler.name
+
+    @property
+    def is_space(self) -> bool:
+        """Whether any space-sharing knob routes this scenario off the
+        legacy single-gang lane (shared predicate with
+        :func:`repro.cluster.scheduler.is_space`)."""
+        from .scheduler import is_space
+
+        return is_space(self.scheduler_name, self.workers_per_job, self.job_plans)
+
+    @property
+    def is_dynamic(self) -> bool:
+        """Whether the scenario needs the dynamic (epoch-scan) semantics."""
+        return (
+            self.speeds is not None
+            or self.churn is not None
+            or self.churn_schedule is not None
+            or self.replan is not None
+        )
+
+    # -- the single validation path ------------------------------------------
+
+    def validate(
+        self,
+        n_workers: Optional[int] = None,
+        *,
+        backend: Optional[str] = None,
+        controller=None,
+    ) -> "Scenario":
+        """Check every cross-field constraint once, for every backend.
+
+        ``n_workers`` is the call-level worker budget (e.g. the planner's);
+        it must agree with ``self.n_workers`` when both are set.  ``backend``
+        tightens the check to what that backend supports -- error messages
+        name the offending field *and* the backends that accept it.
+        ``controller`` is the Python engine's live
+        :class:`~repro.cluster.control.OnlineReplanner`, which shares
+        ``replan``'s exclusion rules.  Returns ``self`` so call sites can
+        chain.  Environment-dependent checks (jax x64 enabled, visible
+        device count) stay with the jax modules -- they are properties of
+        the process, not of the scenario.
+        """
+        if self.n_workers is not None and n_workers is not None:
+            if int(self.n_workers) != int(n_workers):
+                raise ValueError(
+                    f"Scenario.n_workers={self.n_workers} does not match the "
+                    f"call-level worker budget {n_workers}"
+                )
+        n = self.n_workers if n_workers is None else n_workers
+        if n is not None and int(n) < 1:
+            raise ValueError(f"Scenario.n_workers: must be >= 1, got {n}")
+        if self.n_batches is not None:
+            if self.n_batches < 1 or (n is not None and self.n_batches > n):
+                hi = n if n is not None else "n_workers"
+                raise ValueError(
+                    f"Scenario.n_batches: must lie in [1, {hi}] or be None, "
+                    f"got {self.n_batches}"
+                )
+        if self.n_tasks is not None and self.n_tasks < 1:
+            raise ValueError(f"Scenario.n_tasks: must be >= 1, got {self.n_tasks}")
+        if self.speeds is not None:
+            if n is not None and len(self.speeds) != n:
+                raise ValueError(
+                    "Scenario.speeds: speeds must have one entry per worker "
+                    f"(got {len(self.speeds)} for {n} workers)"
+                )
+            if any(not (s > 0) for s in self.speeds):
+                raise ValueError("Scenario.speeds: speeds must be positive")
+        if self.churn is not None and self.churn_schedule is not None:
+            raise ValueError(
+                "Scenario.churn/churn_schedule: pass either churn (sampled "
+                "online) or churn_schedule, not both"
+            )
+        if self.churn_schedule is not None and len(self.churn_schedule) and n is not None:
+            if min(self.churn_schedule.wids) < 0 or max(self.churn_schedule.wids) >= n:
+                raise ValueError(f"Scenario.churn_schedule: worker ids must lie in [0, {n})")
+        if self.churn_pairs_per_worker < 1:
+            raise ValueError(
+                "Scenario.churn_pairs_per_worker: must be >= 1, "
+                f"got {self.churn_pairs_per_worker}"
+            )
+        if self.jobs_per_stream < 1:
+            raise ValueError(f"Scenario.jobs_per_stream: must be >= 1, got {self.jobs_per_stream}")
+        if self.replan is not None and controller is not None:
+            raise ValueError(
+                "Scenario.replan: pass either controller (Python engine) or "
+                "replan (both backends), not both"
+            )
+        if self.replan is not None:
+            if self.replan.objective not in ("mean", "cov", "blend"):
+                raise ValueError(f"Scenario.replan: unknown objective {self.replan.objective!r}")
+            if backend == "jax" and n is not None and self.replan.window < n:
+                raise ValueError(
+                    "Scenario.replan: replan.window must be >= n_workers on "
+                    "backend='jax' (ring push bound); the Python engine has no "
+                    "such floor"
+                )
+        if not isinstance(self.scheduler, Scheduler) and self.scheduler not in SCHEDULERS:
+            raise ValueError(
+                f"Scenario.scheduler: unknown scheduler {self.scheduler!r} "
+                f"(expected one of {sorted(SCHEDULERS)})"
+            )
+        if self.is_space and (self.replan is not None or controller is not None):
+            raise ValueError(
+                "Scenario.replan: replan/controller is not supported with "
+                "space-sharing schedulers / per-job plans on any backend "
+                "(the online replanner picks one cluster-wide B)"
+            )
+        if self.workers_per_job is not None:
+            hi = n if n is not None else "n_workers"
+            if self.workers_per_job < 1 or (n is not None and self.workers_per_job > n):
+                raise ValueError(
+                    f"Scenario.workers_per_job: must lie in [1, {hi}], "
+                    f"got {self.workers_per_job}"
+                )
+        if self.job_plans is not None:
+            if not len(self.job_plans):
+                raise ValueError(
+                    "Scenario.job_plans: must be a non-empty sequence "
+                    "(it cycles over jobs)"
+                )
+            for p in self.job_plans:
+                if p is not None and not isinstance(p, JobPlan):
+                    raise ValueError(
+                        f"Scenario.job_plans: entries must be JobPlan or None, "
+                        f"got {type(p)}"
+                    )
+        if self.dtype not in ("float32", "float64"):
+            raise ValueError(
+                f"Scenario.dtype: dtype must be 'float32' or 'float64', got {self.dtype!r}"
+            )
+        if self.rep_chunk is not None and self.rep_chunk < 1:
+            raise ValueError(f"Scenario.rep_chunk: rep_chunk must be >= 1, got {self.rep_chunk}")
+        if self.devices < 1:
+            raise ValueError(f"Scenario.devices: devices must be >= 1, got {self.devices}")
+        if backend == "python":
+            if self.dtype != "float32":
+                raise ValueError(
+                    "Scenario.dtype: float64 lanes are a jax epoch-scan knob "
+                    "(backend='jax' on dynamic scenarios); the Python engine "
+                    "computes in float64 natively"
+                )
+            if self.devices != 1:
+                raise ValueError(
+                    "Scenario.devices: device sharding is a jax epoch-scan knob "
+                    "(backend='jax' on dynamic scenarios); the Python engine is "
+                    "single-process"
+                )
+        return self
+
+    # -- translations --------------------------------------------------------
+
+    def to_engine_kwargs(self, n_workers: Optional[int] = None) -> dict:
+        """Constructor kwargs for :class:`~repro.cluster.master.ClusterEngine`.
+
+        ``replan`` becomes the equivalent live
+        :class:`~repro.cluster.control.OnlineReplanner` (the engine drives a
+        controller object, the jax scan a static config).  The caller adds
+        ``seed`` -- seeds are per-run, not per-scenario.
+        """
+        n = n_workers if n_workers is not None else self.n_workers
+        if n is None:
+            raise ValueError("Scenario.n_workers: required to build engine kwargs")
+        controller = self.replan.to_controller(int(n)) if self.replan is not None else None
+        return {
+            "n_batches": self.n_batches,
+            "cancel_redundant": self.cancel_redundant,
+            "size_dependent": self.size_dependent,
+            "speeds": list(self.speeds) if self.speeds is not None else None,
+            "churn": self.churn,
+            "churn_schedule": self.churn_schedule,
+            "controller": controller,
+            "scheduler": self.scheduler,
+            "workers_per_job": self.workers_per_job,
+        }
+
+    def to_scan_cfg(self) -> dict:
+        """Keyword set for the jax epoch scan
+        (:func:`~repro.cluster.epoch_scan.simulate_epochs` /
+        :func:`~repro.cluster.epoch_scan.frontier_job_times_dynamic`)."""
+        return {
+            "cancel_redundant": self.cancel_redundant,
+            "size_dependent": self.size_dependent,
+            "n_tasks": self.n_tasks,
+            "speeds": self.speeds,
+            "churn": self.churn,
+            "churn_schedule": self.churn_schedule,
+            "churn_pairs_per_worker": self.churn_pairs_per_worker,
+            "replan": self.replan,
+            "scheduler": self.scheduler_name,
+            "workers_per_job": self.workers_per_job,
+            "job_plans": self.job_plans,
+            "dtype": self.dtype,
+            "rep_chunk": self.rep_chunk,
+            "devices": self.devices,
+        }
+
+    def job_plan_for(self, i: int) -> Optional[JobPlan]:
+        """The i-th job's :class:`JobPlan` (``job_plans`` cycles over jobs)."""
+        if self.job_plans is None:
+            return None
+        return self.job_plans[i % len(self.job_plans)]
+
+    def replace(self, **changes) -> "Scenario":
+        return dataclasses.replace(self, **changes)
+
+
+def resolve_scenario(
+    scenario: Optional[Scenario],
+    explicit: dict,
+    *,
+    where: str,
+    stacklevel: int = 3,
+) -> Scenario:
+    """The legacy-kwarg compat shim behind the four public entry points.
+
+    ``explicit`` maps scenario-owned kwarg names to their call values, with
+    :data:`UNSET` marking 'not passed'.  With ``scenario=`` given, loose
+    scenario kwargs are rejected (one spec, one source of truth); without
+    it, a Scenario is rebuilt from the loose kwargs and a
+    ``DeprecationWarning`` points callers at the new API.
+    """
+    passed = {k: v for k, v in explicit.items() if v is not UNSET}
+    if scenario is not None:
+        if passed:
+            raise ValueError(
+                f"{where}: got scenario= and loose scenario kwargs "
+                f"({', '.join(sorted(passed))}); fold them into the Scenario"
+            )
+        return scenario
+    if passed:
+        warnings.warn(
+            f"{where}: passing {', '.join(sorted(passed))} as loose keyword "
+            "arguments is deprecated; pass scenario=Scenario(...) instead",
+            DeprecationWarning,
+            stacklevel=stacklevel,
+        )
+    return Scenario(**passed)
+
+
+def scenario_from_kwargs(**kwargs) -> Scenario:
+    """Build a Scenario from loose kwargs without the deprecation warning
+    (internal plumbing for modules that still speak the kwarg dialect)."""
+    return Scenario(**{k: v for k, v in kwargs.items() if v is not UNSET})

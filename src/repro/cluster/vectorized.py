@@ -277,6 +277,7 @@ def simulate_fifo(
 
     if is_space(scheduler, workers_per_job, job_plans):
         from .epoch_scan import simulate_epochs
+        from .scenario import scenario_from_kwargs
 
         rep = simulate_epochs(
             dist,
@@ -285,13 +286,15 @@ def simulate_fifo(
             arrivals,
             n_reps,
             seed=seed,
-            cancel_redundant=cancel_redundant,
-            size_dependent=size_dependent,
-            n_tasks=n_tasks,
-            scheduler=scheduler,
-            workers_per_job=workers_per_job,
-            job_plans=job_plans,
-            dtype=dtype,
+            scenario=scenario_from_kwargs(
+                cancel_redundant=cancel_redundant,
+                size_dependent=size_dependent,
+                n_tasks=n_tasks,
+                scheduler=scheduler,
+                workers_per_job=workers_per_job,
+                job_plans=job_plans,
+                dtype=dtype,
+            ),
         )
         return FifoReport(
             arrivals=rep.arrivals,

@@ -16,6 +16,11 @@ times (``RedundancyPlanner.plan_cluster`` scores candidates on that engine).
 """
 from . import analysis, assignment, batching, coupon, simulator, traces
 from .planner import RedundancyPlan, RedundancyPlanner, fit_service_time, plan_sweep
+
+# re-exported after core's own submodules are bound: cluster's modules import
+# those submodules directly, so this back-edge stays cycle-safe either way
+# the packages are first imported
+from ..cluster.scenario import Scenario
 from .service_time import (
     Empirical,
     Exponential,
@@ -34,6 +39,7 @@ __all__ = [
     "traces",
     "RedundancyPlan",
     "RedundancyPlanner",
+    "Scenario",
     "fit_service_time",
     "plan_sweep",
     "Empirical",

@@ -34,6 +34,12 @@ from .service_time import (
 
 __all__ = ["RedundancyPlan", "RedundancyPlanner", "fit_service_time", "plan_sweep"]
 
+# local 'kwarg not passed' sentinel: core stays importable without the
+# cluster package loaded, so the shared repro.cluster.scenario.UNSET is not
+# importable here at module scope -- entries still carrying this sentinel
+# are dropped before they reach resolve_scenario
+_UNSET = type("_PlannerUnset", (), {"__repr__": lambda self: "UNSET"})()
+
 
 @dataclasses.dataclass(frozen=True)
 class RedundancyPlan:
@@ -158,26 +164,27 @@ class RedundancyPlanner:
 
     def plan_cluster(
         self,
-        dist: ServiceTime,
+        dist: ServiceTime | None = None,
         objective: str = "mean",
         n_reps: int = 400,
         seed: int = 0,
         blend: float = 0.5,
-        size_dependent: bool = True,
-        cancel_redundant: bool = False,
+        size_dependent=_UNSET,
+        cancel_redundant=_UNSET,
         backend: str = "jax",
-        speeds=None,
-        churn=None,
-        churn_schedule=None,
-        replan=None,
-        scheduler: str = "fifo_gang",
-        workers_per_job=None,
-        job_plans=None,
-        jobs_per_stream: int = 16,
-        churn_pairs_per_worker: int = 8,
-        dtype: str = "float32",
-        rep_chunk=None,
-        devices: int = 1,
+        speeds=_UNSET,
+        churn=_UNSET,
+        churn_schedule=_UNSET,
+        replan=_UNSET,
+        scheduler=_UNSET,
+        workers_per_job=_UNSET,
+        job_plans=_UNSET,
+        jobs_per_stream=_UNSET,
+        churn_pairs_per_worker=_UNSET,
+        dtype=_UNSET,
+        rep_chunk=_UNSET,
+        devices=_UNSET,
+        scenario=None,
     ) -> RedundancyPlan:
         """Pick (B, r) by *executing* each candidate on ``repro.cluster``.
 
@@ -225,18 +232,45 @@ class RedundancyPlanner:
         single-device) apply to the dynamic epoch scan only -- the static
         frontier path raises if they are set, rather than silently ignoring
         them.
-        """
-        from ..cluster.scheduler import is_space
 
-        space = is_space(scheduler, workers_per_job, job_plans)
-        dynamic = (
-            speeds is not None
-            or churn is not None
-            or churn_schedule is not None
-            or replan is not None
+        All scenario knobs are best passed as one validated
+        ``scenario=Scenario(...)`` (which may also carry ``dist``); the
+        loose keyword forms keep working behind a
+        :class:`DeprecationWarning` shim, and both forms produce identical
+        plans on identical seeds.
+        """
+        from ..cluster.scenario import resolve_scenario
+
+        sc = resolve_scenario(
+            scenario,
+            {
+                k: v
+                for k, v in {
+                    "cancel_redundant": cancel_redundant,
+                    "size_dependent": size_dependent,
+                    "speeds": speeds,
+                    "churn": churn,
+                    "churn_schedule": churn_schedule,
+                    "churn_pairs_per_worker": churn_pairs_per_worker,
+                    "replan": replan,
+                    "scheduler": scheduler,
+                    "workers_per_job": workers_per_job,
+                    "job_plans": job_plans,
+                    "jobs_per_stream": jobs_per_stream,
+                    "dtype": dtype,
+                    "rep_chunk": rep_chunk,
+                    "devices": devices,
+                }.items()
+                if v is not _UNSET
+            },
+            where="plan_cluster",
         )
+        dist = dist if dist is not None else sc.dist
+        if dist is None:
+            raise ValueError("plan_cluster needs dist (positionally or via scenario.dist)")
         if backend == "jax":
-            if dynamic or space:
+            sc.validate(n_workers=self.n_workers, backend="jax")
+            if sc.is_dynamic or sc.is_space:
                 from ..cluster.epoch_scan import frontier_job_times_dynamic
 
                 rows = frontier_job_times_dynamic(
@@ -245,26 +279,14 @@ class RedundancyPlanner:
                     self.candidates,
                     n_reps,
                     seed=seed,
-                    n_jobs=jobs_per_stream,
-                    cancel_redundant=cancel_redundant,
-                    size_dependent=size_dependent,
-                    speeds=speeds,
-                    churn=churn,
-                    churn_schedule=churn_schedule,
-                    churn_pairs_per_worker=churn_pairs_per_worker,
-                    replan=replan,
-                    scheduler=scheduler,
-                    workers_per_job=workers_per_job,
-                    job_plans=job_plans,
-                    dtype=dtype,
-                    rep_chunk=rep_chunk,
-                    devices=devices,
+                    scenario=sc,
                 )
             else:
-                if dtype != "float32" or devices != 1:
+                if sc.dtype != "float32" or sc.devices != 1:
                     raise ValueError(
-                        "dtype/devices apply to dynamic scenarios (the epoch scan); "
-                        "the static frontier path supports rep_chunk only"
+                        "Scenario.dtype/devices apply to dynamic scenarios (the "
+                        "jax epoch scan); the static frontier path supports "
+                        "rep_chunk only"
                     )
                 from ..cluster.vectorized import frontier_job_times
 
@@ -274,12 +296,13 @@ class RedundancyPlanner:
                     self.candidates,
                     n_reps,
                     seed=seed,
-                    size_dependent=size_dependent,
-                    rep_chunk=rep_chunk,
+                    size_dependent=sc.size_dependent,
+                    rep_chunk=sc.rep_chunk,
                 )
         elif backend == "python":
             from ..cluster.master import sample_job_times
 
+            sc.validate(n_workers=self.n_workers, backend="python")
             rows = [
                 sample_job_times(
                     dist,
@@ -287,15 +310,7 @@ class RedundancyPlanner:
                     b,
                     n_reps,
                     seed=seed + i,
-                    size_dependent=size_dependent,
-                    cancel_redundant=cancel_redundant,
-                    speeds=speeds,
-                    churn=churn,
-                    churn_schedule=churn_schedule,
-                    replan=replan,
-                    scheduler=scheduler,
-                    workers_per_job=workers_per_job,
-                    job_plans=job_plans,
+                    scenario=sc,
                 )
                 for i, b in enumerate(self.candidates)
             ]
@@ -385,22 +400,23 @@ def plan_sweep(
     n_reps: int = 400,
     seed: int = 0,
     blend: float = 0.5,
-    size_dependent: bool = True,
-    cancel_redundant: bool = False,
+    size_dependent=_UNSET,
+    cancel_redundant=_UNSET,
     backend: str = "jax",
     candidates: Iterable[int] | None = None,
-    speeds=None,
-    churn=None,
-    churn_schedule=None,
-    replan=None,
-    scheduler: str = "fifo_gang",
-    workers_per_job=None,
-    job_plans=None,
-    jobs_per_stream: int = 16,
-    churn_pairs_per_worker: int = 8,
-    dtype: str = "float32",
-    rep_chunk=None,
-    devices: int = 1,
+    speeds=_UNSET,
+    churn=_UNSET,
+    churn_schedule=_UNSET,
+    replan=_UNSET,
+    scheduler=_UNSET,
+    workers_per_job=_UNSET,
+    job_plans=_UNSET,
+    jobs_per_stream=_UNSET,
+    churn_pairs_per_worker=_UNSET,
+    dtype=_UNSET,
+    rep_chunk=_UNSET,
+    devices=_UNSET,
+    scenario=None,
 ) -> list:
     """Score redundancy frontiers for a (distribution x worker-budget) grid.
 
@@ -429,7 +445,45 @@ def plan_sweep(
     counts them).  ``dtype``/``rep_chunk``/``devices`` forward to every grid
     point -- ``devices > 1`` shards each point's lane grid via ``shard_map``
     with results identical to single-device execution.
+
+    Scenario knobs are best passed as one ``scenario=Scenario(...)``; the
+    loose keyword forms keep working behind a ``DeprecationWarning`` shim.
+    A callable ``speeds`` stays a sweep-level convenience (it cannot live in
+    a frozen Scenario) and is re-attached per budget.
     """
+    from ..cluster.scenario import resolve_scenario
+
+    speeds_fn = speeds if callable(speeds) else None
+    if speeds_fn is not None and scenario is not None:
+        raise ValueError(
+            "plan_sweep: got scenario= and loose scenario kwargs (speeds); "
+            "pass per-budget speeds by calling plan_sweep once per budget "
+            "with scenario.replace(speeds=...)"
+        )
+    explicit = {
+        k: v
+        for k, v in {
+            "size_dependent": size_dependent,
+            "cancel_redundant": cancel_redundant,
+            "speeds": speeds,
+            "churn": churn,
+            "churn_schedule": churn_schedule,
+            "replan": replan,
+            "scheduler": scheduler,
+            "workers_per_job": workers_per_job,
+            "job_plans": job_plans,
+            "jobs_per_stream": jobs_per_stream,
+            "churn_pairs_per_worker": churn_pairs_per_worker,
+            "dtype": dtype,
+            "rep_chunk": rep_chunk,
+            "devices": devices,
+        }.items()
+        if v is not _UNSET
+    }
+    if speeds_fn is not None:
+        explicit.pop("speeds")  # re-attached per grid point below
+    sc = resolve_scenario(scenario, explicit, where="plan_sweep")
+
     dists = list(dists)
     budgets = [int(n) for n in budgets]
     plans = []
@@ -437,6 +491,7 @@ def plan_sweep(
         row = []
         for j, n_workers in enumerate(budgets):
             planner = RedundancyPlanner(n_workers, candidates=candidates)
+            sc_ij = sc.replace(speeds=speeds_fn(n_workers)) if speeds_fn is not None else sc
             row.append(
                 planner.plan_cluster(
                     dist,
@@ -444,21 +499,8 @@ def plan_sweep(
                     n_reps=n_reps,
                     seed=seed + i * len(budgets) + j,
                     blend=blend,
-                    size_dependent=size_dependent,
-                    cancel_redundant=cancel_redundant,
                     backend=backend,
-                    speeds=speeds(n_workers) if callable(speeds) else speeds,
-                    churn=churn,
-                    churn_schedule=churn_schedule,
-                    replan=replan,
-                    scheduler=scheduler,
-                    workers_per_job=workers_per_job,
-                    job_plans=job_plans,
-                    jobs_per_stream=jobs_per_stream,
-                    churn_pairs_per_worker=churn_pairs_per_worker,
-                    dtype=dtype,
-                    rep_chunk=rep_chunk,
-                    devices=devices,
+                    scenario=sc_ij,
                 )
             )
         plans.append(row)

@@ -1,0 +1,371 @@
+"""Live runtime e2e: real localhost master-worker runs whose traces replay
+bit-for-bit through the discrete-event engine (the digital twin), plus chaos
+(SIGKILL a worker mid-task) and missed-heartbeat failure detection.
+
+Exactness here is not a tolerance check: the master stamps every decision on
+a binary time grid, so the replay's accounting and job records must equal the
+live run's *exactly*, whatever interleaving the OS scheduler produced.
+"""
+
+import asyncio
+import json
+import os
+import signal
+import struct
+import time
+import types
+
+import pytest
+
+from repro.cluster.runtime import (
+    TICK,
+    LiveJob,
+    Runtime,
+    RuntimeMaster,
+    TraceRecorder,
+    replay_trace,
+    spawn_worker_subprocess,
+    spawn_worker_thread,
+    trace_accounting,
+)
+from repro.cluster.runtime.protocol import MAX_FRAME, ProtocolError, read_msg, send_nowait
+from repro.cluster.runtime.trace import quantize
+from repro.cluster.scenario import Scenario
+from repro.cluster.scheduler import JobPlan
+
+pytestmark = pytest.mark.timeout(90)
+
+
+def assert_exact_twin(report, n_workers, scenario=None):
+    """The live run and its engine replay agree bit for bit."""
+    eng = replay_trace(report.trace, n_workers, scenario=scenario)
+    assert eng.accounting() == report.accounting()
+    assert len(eng.records) == len(report.records)
+    for live_r, eng_r in zip(report.records, sorted(eng.records, key=lambda r: r.job_id)):
+        assert dataclass_tuple(live_r) == dataclass_tuple(eng_r)
+    return eng
+
+
+def dataclass_tuple(rec):
+    return (
+        rec.job_id,
+        rec.name,
+        rec.arrival,
+        rec.start,
+        rec.finish,
+        rec.n_batches,
+        rec.replication,
+    )
+
+
+# --------------------------------------------------------------------------
+# e2e exact-twin runs (thread workers, real sockets)
+# --------------------------------------------------------------------------
+
+
+def test_twin_exact_basic_sleep():
+    """Plan -> execute on live workers -> trace -> engine replay: exact."""
+    sc = Scenario(n_batches=3)  # r = 1: plain partition, no redundancy
+    jobs = [
+        LiveJob(job_id=0, costs=(0.08, 0.05, 0.06, 0.04, 0.07, 0.05), name="a"),
+        LiveJob(job_id=1, costs=(0.05, 0.04, 0.06), arrival=0.05, name="b"),
+    ]
+    report = Runtime(3, sc).run(jobs, timeout_s=30.0)
+    assert [r.job_id for r in report.records] == [0, 1]
+    assert report.completion_order == (0, 1)
+    assert report.n_worker_failures == 0
+    assert report.cancelled_seconds_saved == 0.0
+    assert_exact_twin(report, 3, sc)
+    # FIFO gang: job 1 cannot start before job 0 finishes
+    assert report.records[1].start >= report.records[0].finish
+
+
+def test_twin_exact_cancel_on_earliest_cover():
+    """B=2, r=2 with a real per-worker speed skew: the slow replicas are
+    cancelled when their siblings cover the batch, the reclaimed time is
+    positive, and the replay reproduces the accounting exactly."""
+    sc = Scenario(n_batches=2, cancel_redundant=True)
+    jobs = [LiveJob(job_id=0, costs=(0.10, 0.10, 0.10, 0.10), skew=0.8)]
+    report = Runtime(4, sc).run(jobs, timeout_s=30.0)
+    assert report.records[0].replication == 2
+    assert report.cancelled_seconds_saved > 0.05  # skewed siblings had real slack
+    assert report.n_worker_failures == 0
+    cancels = [e for e in report.trace if e["ev"] == "cancel"]
+    assert len(cancels) == 2  # one straggler per batch reclaimed
+    assert_exact_twin(report, 4, sc)
+
+
+def test_twin_exact_job_plan_overrides():
+    """Per-job JobPlan n_batches/cancel_redundant overrides ride through the
+    live gang exactly as through the engine."""
+    sc = Scenario(n_batches=2, cancel_redundant=False)
+    jobs = [
+        # plan override: single batch, duplicated on both workers, cancel on
+        LiveJob(
+            job_id=0,
+            costs=(0.08, 0.06),
+            skew=0.7,
+            plan=JobPlan(n_batches=1, cancel_redundant=True),
+        ),
+        # scenario default: B=2, r=1, no cancellation
+        LiveJob(job_id=1, costs=(0.05, 0.06), arrival=0.02),
+    ]
+    report = Runtime(2, sc).run(jobs, timeout_s=30.0)
+    assert report.records[0].n_batches == 1
+    assert report.records[0].replication == 2
+    assert report.records[1].n_batches == 2
+    assert report.records[1].replication == 1
+    assert report.cancelled_seconds_saved > 0.0  # job 0's duplicate reclaimed
+    assert_exact_twin(report, 2, sc)
+
+
+def test_twin_exact_numpy_payload():
+    """Real CPU-bound (chunked matmul) payloads: jittery wall-clock, still an
+    exact replay -- exactness never depends on timing."""
+    sc = Scenario(n_batches=2)
+    jobs = [LiveJob(job_id=0, costs=(0.06, 0.05, 0.04, 0.05), payload="numpy")]
+    report = Runtime(2, sc).run(jobs, timeout_s=30.0)
+    assert len(report.records) == 1
+    assert_exact_twin(report, 2, sc)
+
+
+def test_trace_fold_matches_live_counters():
+    """The pure trace fold reproduces the master's own running counters."""
+    sc = Scenario(n_batches=2, cancel_redundant=True)
+    report = Runtime(4, sc).run(
+        [LiveJob(job_id=0, costs=(0.08, 0.08, 0.08, 0.08), skew=0.5)], timeout_s=30.0
+    )
+    assert trace_accounting(report.trace) == report.accounting()
+
+
+# --------------------------------------------------------------------------
+# chaos: SIGKILL a subprocess worker mid-task -> rescue -> exact replay
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.timeout(120)
+def test_subprocess_kill_mid_task_rescued_exactly():
+    """Kill the worker holding one batch's only replica mid-flight: the
+    master detects the torn connection, rescues the batch onto a free
+    worker, the job completes, and the trace still replays exactly."""
+
+    async def run() -> tuple:
+        sc = Scenario(n_batches=3)
+        master = RuntimeMaster(3, sc, heartbeat_s=0.05, heartbeat_timeout_s=5.0)
+        port = await master.start()
+        procs = [spawn_worker_subprocess(master.host, port) for _ in range(3)]
+        try:
+            await master.wait_for_workers()
+            # batch 2 = costs[2::3] is the long one: its worker is the victim
+            jobs = [LiveJob(job_id=0, costs=(0.3, 0.3, 1.6), name="victim-run")]
+            run_task = asyncio.ensure_future(master.run(jobs, timeout_s=60.0))
+            victim_wid = None
+            while victim_wid is None:
+                await asyncio.sleep(0.01)
+                for e in master.recorder.events:
+                    if e["ev"] == "dispatch" and e["batch"] == 2:
+                        victim_wid = e["wid"]
+            await asyncio.sleep(0.3)  # let the batch be genuinely mid-task
+            # wids are registration order, not spawn order: kill by the pid
+            # the victim registered with
+            os.kill(master.workers[victim_wid].pid, signal.SIGKILL)
+            report = await run_task
+        finally:
+            await master.close()
+            for p in procs:
+                try:
+                    p.wait(timeout=5.0)
+                except Exception:
+                    p.kill()
+        return report, victim_wid
+
+    report, victim_wid = asyncio.run(run())
+    assert report.n_worker_failures == 1
+    assert report.n_replicas_rescued == 1
+    fails = [e for e in report.trace if e["ev"] == "fail"]
+    assert [e["wid"] for e in fails] == [victim_wid]
+    assert fails[0]["cause"] == "eof"
+    rescues = [e for e in report.trace if e["ev"] == "dispatch" and e["rescue"]]
+    assert len(rescues) == 1 and rescues[0]["batch"] == 2
+    assert len(report.records) == 1 and report.records[0].finish < float("inf")
+    assert_exact_twin(report, 3, Scenario(n_batches=3))
+
+
+# --------------------------------------------------------------------------
+# failure detection: missed heartbeats fire within the configured window
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.timeout(120)
+def test_heartbeat_timeout_detection_within_window():
+    """A `block` payload starves its worker's heartbeat coroutine; the
+    watchdog must declare the worker dead no earlier than the timeout and
+    not much later."""
+    timeout_s = 0.4
+
+    async def run() -> tuple:
+        sc = Scenario(n_batches=2)
+        master = RuntimeMaster(2, sc, heartbeat_s=0.05, heartbeat_timeout_s=timeout_s)
+        port = await master.start()
+        threads = [spawn_worker_thread(master.host, port) for _ in range(2)]
+        try:
+            await master.wait_for_workers()
+            # both batches block for ~1.5s >> the 0.4s heartbeat window
+            jobs = [LiveJob(job_id=0, costs=(1.5, 1.5), payload="block")]
+            run_task = asyncio.ensure_future(master.run(jobs, timeout_s=60.0))
+            deadline = time.monotonic() + 30.0
+            while master._n_failures < 2 and time.monotonic() < deadline:
+                await asyncio.sleep(0.02)
+            run_task.cancel()
+            try:
+                await run_task
+            except asyncio.CancelledError:
+                pass
+            events = master.recorder.events
+        finally:
+            await master.close()
+        # let the blocked threads unblock and exit before the test returns
+        for t in threads:
+            t.join(timeout=5.0)
+        return events
+
+    events = asyncio.run(run())
+    fails = {e["wid"]: e for e in events if e["ev"] == "fail"}
+    dispatches = {e["wid"]: e for e in events if e["ev"] == "dispatch"}
+    assert set(fails) == {0, 1}
+    for wid, f in fails.items():
+        assert f["cause"] == "heartbeat"
+        latency = f["t"] - dispatches[wid]["t"]
+        # no earlier than the window (modulo the heartbeat sent just before
+        # dispatch), and promptly after it (watchdog period = timeout/4)
+        assert latency >= timeout_s - 0.06
+        assert latency <= timeout_s + 1.0
+
+
+def test_short_block_survives_heartbeat_window():
+    """Blocking for less than the window misses a couple of heartbeats but
+    is not declared dead: detection has no false positives here."""
+    sc = Scenario(n_batches=2)
+    rt = Runtime(2, sc, heartbeat_s=0.05, heartbeat_timeout_s=1.0)
+    report = rt.run([LiveJob(job_id=0, costs=(0.15, 0.12), payload="block")], timeout_s=30.0)
+    assert report.n_worker_failures == 0
+    assert len(report.records) == 1
+    assert_exact_twin(report, 2, sc)
+
+
+# --------------------------------------------------------------------------
+# runtime Scenario validation (the shared single validation path)
+# --------------------------------------------------------------------------
+
+
+def test_runtime_rejects_simulation_only_knobs():
+    with pytest.raises(ValueError, match="simulation-only"):
+        RuntimeMaster(4, Scenario(speeds=(1.0, 1.0, 2.0, 1.0)))
+    with pytest.raises(ValueError, match="space-sharing"):
+        RuntimeMaster(4, Scenario(workers_per_job=2))
+    with pytest.raises(ValueError, match="Scenario.n_batches"):
+        RuntimeMaster(2, Scenario(n_batches=5))
+    with pytest.raises(ValueError, match="spawn"):
+        Runtime(2, spawn="fork-bomb")
+
+
+# --------------------------------------------------------------------------
+# trace + protocol units
+# --------------------------------------------------------------------------
+
+
+def test_trace_recorder_strictly_increasing_and_freezes():
+    rec = TraceRecorder()
+    stamps = [rec.stamp() for _ in range(50)]
+    assert all(b - a >= TICK * 0.999 for a, b in zip(stamps, stamps[1:]))
+    rec.record("join", stamps[0], wid=0)
+    rec.frozen = True
+    with pytest.raises(RuntimeError, match="frozen"):
+        rec.record("join", stamps[1], wid=1)
+
+
+def test_quantize_grid_exactness():
+    assert quantize(0.0) == TICK  # durations stay strictly positive
+    assert quantize(TICK / 2) == TICK
+    q = quantize(0.123456)
+    assert q >= 0.123456
+    assert q * (1 << 20) == int(q * (1 << 20))  # exact binary fraction
+
+
+def test_trace_accounting_hand_built():
+    def ev(kind, t, **fields):
+        return {"ev": kind, "t": t, **fields}
+
+    t = [i * TICK for i in range(1, 9)]
+    events = [
+        ev("dispatch", t[0], wid=0, job=0, batch=0, planned=5 * TICK, rescue=False),
+        ev("dispatch", t[1], wid=1, job=0, batch=0, planned=5 * TICK, rescue=False),
+        ev("finish", t[2], wid=0, job=0, batch=0),
+        ev("cancel", t[3], wid=1, job=0, batch=0, sched_end=t[1] + 5 * TICK),
+        ev("dispatch", t[4], wid=2, job=1, batch=0, planned=5 * TICK, rescue=True),
+        ev("fail", t[5], wid=2, cause="heartbeat"),
+        ev("dispatch", t[6], wid=0, job=1, batch=0, planned=5 * TICK, rescue=True),
+        ev("flush", t[7], wid=0, job=1, batch=0, sched_end=t[6] + 5 * TICK),
+    ]
+    acct = trace_accounting(events)
+    assert acct == {
+        "worker_seconds": (t[2] - t[0]) + (t[3] - t[1]) + (t[5] - t[4]) + 5 * TICK,
+        "cancelled_seconds_saved": (t[1] + 5 * TICK) - t[3],
+        "n_worker_failures": 1,
+        "n_replicas_rescued": 2,
+        "n_replans": 0,
+    }
+
+
+def test_protocol_roundtrip_and_frame_guards():
+    async def run():
+        msgs = []
+
+        async def handle(reader, writer):
+            while True:
+                m = await read_msg(reader)
+                if m is None:
+                    break
+                msgs.append(m)
+            writer.close()
+
+        server = await asyncio.start_server(handle, "127.0.0.1", 0)
+        port = server.sockets[0].getsockname()[1]
+        reader, writer = await asyncio.open_connection("127.0.0.1", port)
+        send_nowait(writer, {"type": "hb", "wid": 3})
+        send_nowait(writer, {"type": "task", "costs": [0.25, 0.5], "payload": "sleep"})
+        await writer.drain()
+        writer.close()
+        await asyncio.sleep(0.05)
+        server.close()
+        await server.wait_closed()
+        return msgs
+
+    msgs = asyncio.run(run())
+    assert msgs == [
+        {"type": "hb", "wid": 3},
+        {"type": "task", "costs": [0.25, 0.5], "payload": "sleep"},
+    ]
+    sink = types.SimpleNamespace(write=lambda b: pytest.fail("oversized frame was sent"))
+    with pytest.raises(ProtocolError, match="MAX_FRAME"):
+        send_nowait(sink, {"type": "x", "blob": "a" * (MAX_FRAME + 1)})
+
+
+def test_protocol_rejects_untyped_and_oversized_frames():
+    async def run():
+        reader = asyncio.StreamReader()
+        # a frame whose JSON is valid but is not a typed message object
+        payload = json.dumps([1, 2, 3]).encode()
+        reader.feed_data(struct.pack(">I", len(payload)) + payload)
+        with pytest.raises(ProtocolError, match="typed message"):
+            await read_msg(reader)
+        reader2 = asyncio.StreamReader()
+        reader2.feed_data(struct.pack(">I", MAX_FRAME + 1))
+        with pytest.raises(ProtocolError, match="MAX_FRAME"):
+            await read_msg(reader2)
+        reader3 = asyncio.StreamReader()
+        reader3.feed_data(b"\x00\x00")  # torn header
+        reader3.feed_eof()
+        assert await read_msg(reader3) is None
+
+    asyncio.run(run())

@@ -1,0 +1,297 @@
+"""Scenario API: one frozen spec == the legacy loose-kwarg call forms.
+
+Every public entry point (``sample_job_times``, ``plan_cluster``,
+``plan_sweep``, ``frontier_job_times_dynamic``) accepts ``scenario=`` and
+must produce results identical to the deprecated loose-kwarg spelling; the
+loose spelling must warn, mixing the two must raise, and validation is one
+shared path whose errors name the offending field.
+"""
+
+import contextlib
+import warnings
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ModuleNotFoundError:  # test extra not installed: seeded fallback engine
+    from _hypothesis_compat import given, settings, st
+
+import strategies as scn
+from repro.cluster import ChurnProcess, ClusterEngine, Job, Scenario, sample_job_times
+from repro.cluster.epoch_scan import frontier_job_times_dynamic
+from repro.cluster.scenario import UNSET, resolve_scenario, scenario_from_kwargs
+from repro.cluster.scheduler import JobPlan
+from repro.core import Scenario as CoreScenario
+from repro.core.planner import RedundancyPlanner, plan_sweep
+from repro.core.service_time import Exponential, Pareto, ShiftedExponential
+
+POLICIES = ("fifo_gang", "packed", "balanced")
+
+
+@contextlib.contextmanager
+def no_warnings():
+    """Context that turns any DeprecationWarning into a failure."""
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        yield
+
+
+def test_scenario_exported_from_both_packages():
+    assert CoreScenario is Scenario  # one class, two doors
+
+
+# --------------------------------------------------------------------------
+# scenario == legacy kwargs, on all three scheduling policies
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("policy", POLICIES)
+def test_sample_job_times_scenario_equals_legacy(policy):
+    d = ShiftedExponential(0.3, 1.0)
+    wpj = None if policy == "fifo_gang" else 2
+    with pytest.warns(DeprecationWarning, match="sample_job_times"):
+        legacy = sample_job_times(
+            d,
+            6,
+            2,
+            40,
+            seed=3,
+            backend="python",
+            cancel_redundant=True,
+            scheduler=policy,
+            workers_per_job=wpj,
+        )
+    sc = Scenario(cancel_redundant=True, scheduler=policy, workers_per_job=wpj)
+    with no_warnings():
+        new = sample_job_times(d, 6, 2, 40, seed=3, backend="python", scenario=sc)
+    assert np.array_equal(legacy, new)
+
+
+@settings(max_examples=6, deadline=None)
+@given(
+    dist=scn.light_tailed_dists(),
+    cancel=st.booleans(),
+    size_dep=st.booleans(),
+    seed=st.integers(0, 99),
+)
+def test_sample_job_times_roundtrip_property(dist, cancel, size_dep, seed):
+    """Property: for any generated scenario the Scenario spelling and the
+    legacy spelling draw identical samples under a shared seed."""
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        legacy = sample_job_times(
+            dist,
+            5,
+            2,
+            30,
+            seed=seed,
+            backend="python",
+            cancel_redundant=cancel,
+            size_dependent=size_dep,
+        )
+    sc = Scenario(cancel_redundant=cancel, size_dependent=size_dep)
+    new = sample_job_times(dist, 5, 2, 30, seed=seed, backend="python", scenario=sc)
+    assert np.array_equal(legacy, new)
+
+
+@pytest.mark.parametrize("backend", ["python", "jax"])
+def test_plan_cluster_scenario_equals_legacy(backend):
+    d = Pareto(1.0, 2.2)
+    planner = RedundancyPlanner(8, candidates=[1, 2, 4])
+    with pytest.warns(DeprecationWarning, match="plan_cluster"):
+        legacy = planner.plan_cluster(d, n_reps=40, seed=2, backend=backend, cancel_redundant=True)
+    with no_warnings():
+        new = planner.plan_cluster(
+            d, n_reps=40, seed=2, backend=backend, scenario=Scenario(cancel_redundant=True)
+        )
+    assert legacy == new  # frozen dataclass: full frontier equality
+
+
+def test_plan_cluster_dynamic_scenario_equals_legacy():
+    """The dynamic (epoch-scan) lane: speeds route both spellings through
+    frontier_job_times_dynamic with identical results."""
+    d = Exponential(1.0)
+    planner = RedundancyPlanner(4, candidates=[1, 2])
+    speeds = (1.0, 1.0, 2.0, 0.5)
+    with pytest.warns(DeprecationWarning, match="plan_cluster"):
+        legacy = planner.plan_cluster(d, n_reps=30, seed=5, backend="jax", speeds=speeds)
+    with no_warnings():
+        new = planner.plan_cluster(
+            d, n_reps=30, seed=5, backend="jax", scenario=Scenario(speeds=speeds)
+        )
+    assert legacy == new
+
+
+def test_plan_cluster_scenario_plus_loose_kwargs_raises():
+    planner = RedundancyPlanner(4)
+    with pytest.raises(ValueError, match="fold them into the Scenario"):
+        planner.plan_cluster(
+            Exponential(1.0),
+            backend="python",
+            cancel_redundant=True,
+            scenario=Scenario(cancel_redundant=True),
+        )
+
+
+def test_plan_sweep_scenario_equals_legacy():
+    dists = [Exponential(1.0), Pareto(1.0, 2.5)]
+    budgets = [4, 6]
+    with pytest.warns(DeprecationWarning, match="plan_sweep"):
+        legacy = plan_sweep(
+            dists, budgets, n_reps=30, seed=1, backend="python", cancel_redundant=True
+        )
+    with no_warnings():
+        new = plan_sweep(
+            dists,
+            budgets,
+            n_reps=30,
+            seed=1,
+            backend="python",
+            scenario=Scenario(cancel_redundant=True),
+        )
+    assert legacy == new
+
+
+def test_frontier_dynamic_scenario_equals_legacy():
+    d = Exponential(1.0)
+    speeds = (1.0, 2.0, 1.0, 0.5)
+    with pytest.warns(DeprecationWarning, match="frontier_job_times_dynamic"):
+        legacy = frontier_job_times_dynamic(
+            d, 4, [1, 2], 30, seed=7, speeds=speeds, cancel_redundant=True
+        )
+    with no_warnings():
+        new = frontier_job_times_dynamic(
+            d, 4, [1, 2], 30, seed=7, scenario=Scenario(speeds=speeds, cancel_redundant=True)
+        )
+    assert np.array_equal(np.asarray(legacy), np.asarray(new))
+
+
+def test_engine_kwargs_translation_differential():
+    """ClusterEngine built from Scenario.to_engine_kwargs() replays the
+    loose-kwarg construction bit for bit."""
+    sched = scn.seeded_schedule(6, seed=3, fail_rate=0.05, mean_downtime=1.0)
+    sc = Scenario(n_batches=3, cancel_redundant=True, churn_schedule=sched)
+    d = Pareto(1.0, 2.2)
+
+    def jobs():
+        return [Job(job_id=i, dist=d, n_tasks=6) for i in range(30)]
+
+    a = ClusterEngine(6, seed=9, **sc.to_engine_kwargs(6)).run(jobs())
+    b = ClusterEngine(6, seed=9, n_batches=3, cancel_redundant=True, churn_schedule=sched).run(
+        jobs()
+    )
+    assert a.accounting() == b.accounting()
+    assert np.array_equal(a.compute_times, b.compute_times)
+
+
+# --------------------------------------------------------------------------
+# the compat shim itself
+# --------------------------------------------------------------------------
+
+
+def test_resolve_scenario_warns_and_builds():
+    with pytest.warns(DeprecationWarning, match="somewhere: passing cancel_redundant"):
+        sc = resolve_scenario(None, {"cancel_redundant": True, "speeds": UNSET}, where="somewhere")
+    assert sc == Scenario(cancel_redundant=True)
+
+
+def test_resolve_scenario_passthrough_no_warning():
+    sc = Scenario(n_batches=2)
+    with no_warnings():
+        out = resolve_scenario(sc, {"speeds": UNSET}, where="somewhere")
+    assert out is sc
+
+
+def test_scenario_from_kwargs_is_silent_internal_plumbing():
+    with no_warnings():
+        sc = scenario_from_kwargs(cancel_redundant=True, n_tasks=UNSET)
+    assert sc == Scenario(cancel_redundant=True)
+
+
+# --------------------------------------------------------------------------
+# the single validation path: errors name the field, once, everywhere
+# --------------------------------------------------------------------------
+
+
+def test_validate_messages_name_the_field():
+    sched = scn.seeded_schedule(4, seed=0, fail_rate=0.1, mean_downtime=1.0)
+    with pytest.raises(ValueError, match="not both"):
+        Scenario(churn=ChurnProcess(0.1, 1.0), churn_schedule=sched).validate()
+    with pytest.raises(ValueError, match=r"worker ids must lie in \[0, 2\)"):
+        Scenario(churn_schedule=sched).validate(n_workers=2)
+    with pytest.raises(ValueError, match="unknown scheduler"):
+        Scenario(scheduler="round_robin").validate()
+    with pytest.raises(ValueError, match="Scenario.n_batches"):
+        Scenario(n_batches=9).validate(n_workers=4)
+    with pytest.raises(ValueError, match="Scenario.n_workers=4 does not match"):
+        Scenario(n_workers=4).validate(n_workers=6)
+    with pytest.raises(ValueError, match="Scenario.speeds"):
+        Scenario(speeds=(1.0, -1.0)).validate()
+    with pytest.raises(ValueError, match="Scenario.dtype"):
+        Scenario(dtype="float16").validate()
+    with pytest.raises(ValueError, match="backend='jax'"):
+        Scenario(dtype="float64").validate(backend="python")
+    with pytest.raises(ValueError, match="Scenario.devices"):
+        Scenario(devices=2).validate(backend="python")
+
+
+def test_engine_constructor_routes_through_scenario_validate():
+    """The Python engine shares the one validation path: its errors are the
+    Scenario ones.  (``n_batches`` is deliberately absent: the engine clamps
+    it to the alive-worker count at dispatch.)"""
+    with pytest.raises(ValueError, match="one entry per worker"):
+        ClusterEngine(4, speeds=[1.0, 1.0])
+    with pytest.raises(ValueError, match="not both"):
+        sched = scn.seeded_schedule(4, seed=0, fail_rate=0.1, mean_downtime=1.0)
+        ClusterEngine(4, churn=ChurnProcess(0.1, 1.0), churn_schedule=sched)
+
+
+def test_entry_points_reject_dtype_on_python_backend():
+    with pytest.raises(ValueError, match="Scenario.dtype"):
+        sample_job_times(
+            Exponential(1.0), 4, 2, 10, backend="python", scenario=Scenario(dtype="float64")
+        )
+
+
+# --------------------------------------------------------------------------
+# the frozen object itself
+# --------------------------------------------------------------------------
+
+
+def test_scenario_hashable_and_replace():
+    sc = Scenario(speeds=[2.0, 1.0], job_plans=[JobPlan(n_batches=1), None])
+    assert isinstance(sc.speeds, tuple) and isinstance(sc.job_plans, tuple)
+    assert isinstance(hash(sc), int)  # frozen: can key jit/plan caches
+    sc2 = sc.replace(cancel_redundant=True)
+    assert sc2.cancel_redundant and not sc.cancel_redundant
+    assert sc.job_plan_for(0) == JobPlan(n_batches=1)
+    assert sc.job_plan_for(1) is None
+    assert sc.job_plan_for(2) == JobPlan(n_batches=1)  # cycles
+
+
+def test_scenario_routing_predicates():
+    assert not Scenario().is_dynamic and not Scenario().is_space
+    assert Scenario(speeds=(1.0, 2.0)).is_dynamic
+    assert Scenario(workers_per_job=2).is_space
+    assert Scenario(scheduler="packed").is_space
+
+
+def test_to_engine_kwargs_requires_workers():
+    with pytest.raises(ValueError, match="n_workers"):
+        Scenario().to_engine_kwargs()
+    kw = Scenario(n_batches=2, cancel_redundant=True).to_engine_kwargs(4)
+    assert kw["n_batches"] == 2 and kw["cancel_redundant"] is True
+    assert set(kw) == {
+        "n_batches",
+        "cancel_redundant",
+        "size_dependent",
+        "speeds",
+        "churn",
+        "churn_schedule",
+        "controller",
+        "scheduler",
+        "workers_per_job",
+    }
