@@ -22,7 +22,11 @@ vary with the runner).  Two properties are load-bearing and fail the build:
   5. space sharing keeps paying off and keeps its backend edge
      (``space_sharing.response_ratio_packed_vs_gang`` stays below a ceiling
      -- packed concurrent narrow jobs must beat the serial gang -- and
-     ``space_sharing.min_speedup_warm`` stays above its own floor).
+     ``space_sharing.min_speedup_warm`` stays above its own floor), and
+  6. reactive speculation keeps beating the no-redundancy baseline on the
+     heavy Pareto tail (``speculation.pareto_speculative_speedup`` above an
+     absolute floor -- backups launched from partial progress must keep
+     truncating the straggler tail).
 
 Floors are env-overridable so a one-off noisy runner can be diagnosed
 without editing the workflow:
@@ -33,6 +37,7 @@ without editing the workflow:
   BENCH_MAX_JAX_DYNAMIC_COLD_SECONDS  ceiling on dynamic cold seconds (4.0)
   BENCH_MIN_JAX_SPACE_SPEEDUP    absolute floor on space_sharing.min_speedup_warm (8)
   BENCH_MAX_SPACE_RESPONSE_RATIO ceiling on packed/gang response ratio (0.85)
+  BENCH_MIN_SPEC_SPEEDUP         floor on speculation.pareto_speculative_speedup (1.1)
 """
 from __future__ import annotations
 
@@ -48,6 +53,7 @@ DEFAULT_MIN_JAX_DYNAMIC_SPEEDUP = 25.0
 DEFAULT_MAX_JAX_DYNAMIC_COLD_SECONDS = 4.0
 DEFAULT_MIN_JAX_SPACE_SPEEDUP = 8.0
 DEFAULT_MAX_SPACE_RESPONSE_RATIO = 0.85
+DEFAULT_MIN_SPEC_SPEEDUP = 1.1
 
 
 def check(
@@ -59,6 +65,7 @@ def check(
     max_jax_dynamic_cold_seconds: float = DEFAULT_MAX_JAX_DYNAMIC_COLD_SECONDS,
     min_jax_space_speedup: float = DEFAULT_MIN_JAX_SPACE_SPEEDUP,
     max_space_response_ratio: float = DEFAULT_MAX_SPACE_RESPONSE_RATIO,
+    min_spec_speedup: float = DEFAULT_MIN_SPEC_SPEEDUP,
 ) -> list:
     """Return a list of human-readable failure strings (empty = gate passes)."""
     failures = []
@@ -127,6 +134,21 @@ def check(
                 f"(baseline recorded {base_sp.get('min_speedup_warm', float('nan')):.1f}x)"
             )
 
+    cur_sk = current.get("speculation", {})
+    base_sk = baseline.get("speculation", {})
+    if not cur_sk or not base_sk:
+        failures.append("speculation section missing from current or baseline")
+    else:
+        sk = cur_sk.get("pareto_speculative_speedup")
+        if sk is None or sk < min_spec_speedup:
+            failures.append(
+                f"speculation stopped paying off on the heavy tail: "
+                f"pareto_speculative_speedup "
+                f"{sk if sk is None else format(sk, '.2f')}x "
+                f"< floor {min_spec_speedup:.2f}x (baseline recorded "
+                f"{base_sk.get('pareto_speculative_speedup', float('nan')):.2f}x)"
+            )
+
     return failures
 
 
@@ -158,10 +180,11 @@ def main() -> int:
     max_space_ratio = float(
         os.environ.get("BENCH_MAX_SPACE_RESPONSE_RATIO", DEFAULT_MAX_SPACE_RESPONSE_RATIO)
     )
+    min_spec = float(os.environ.get("BENCH_MIN_SPEC_SPEEDUP", DEFAULT_MIN_SPEC_SPEEDUP))
 
     failures = check(
         current, baseline, min_jax_speedup, heavy_tolerance, min_jax_dynamic,
-        max_dynamic_cold, min_jax_space, max_space_ratio,
+        max_dynamic_cold, min_jax_space, max_space_ratio, min_spec,
     )
 
     cur_b, base_b = current["backend"], baseline["backend"]
@@ -208,6 +231,18 @@ def main() -> int:
             f"jax space sweep edge {cur_sp.get('min_speedup_warm', float('nan')):.1f}x"
             f"..{cur_sp.get('max_speedup_warm', float('nan')):.1f}x "
             f"(floor {min_jax_space:.1f}x)"
+        )
+
+    cur_sk = current.get("speculation", {})
+    base_sk = baseline.get("speculation", {})
+    if cur_sk and base_sk:
+        print(
+            f"speculation on heavy Pareto: speculative "
+            f"x{cur_sk.get('pareto_speculative_speedup', float('nan')):.2f}, "
+            f"hybrid x{cur_sk.get('pareto_hybrid_speedup', float('nan')):.2f} "
+            f"vs no redundancy (baseline "
+            f"x{base_sk.get('pareto_speculative_speedup', float('nan')):.2f}, "
+            f"floor {min_spec:.2f}x)"
         )
 
     if failures:

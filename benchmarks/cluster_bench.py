@@ -23,6 +23,11 @@ Six scenarios on the synthetic Google-trace jobs (and parametric tails):
     used to fall back to Python entirely.  Records warm speed edge (min-of-3),
     per-dist cold compile+run seconds, and the process peak-RSS column; the
     regression gate keys on the warm edge *and* the cold seconds.
+  * ``speculation``  -- planned (proactive) vs speculative (reactive) vs
+    hybrid redundancy across Exp/SExp/Pareto and the heavy trace job:
+    mean/p95 compute time, worker-seconds, and backup counts per variant.
+    The regression gate keys on the Pareto row (reactive backups must keep
+    beating the no-redundancy baseline).
   * ``space_sharing`` -- the space-sharing scheduler: mean response-time
     ratio of ``packed`` (narrow concurrent jobs on disjoint subsets) vs the
     ``fifo_gang`` baseline on one saturated workload, plus the jax-vs-python
@@ -73,7 +78,7 @@ from repro.cluster import (
 )
 from repro.core import traces
 from repro.core.planner import RedundancyPlanner
-from repro.core.service_time import Empirical, Exponential, Pareto
+from repro.core.service_time import Empirical, Exponential, Pareto, ShiftedExponential
 
 ART = pathlib.Path(__file__).resolve().parent / "artifacts" / "cluster"
 
@@ -382,6 +387,85 @@ def bench_space_sharing(cfg: dict, seed: int = 0) -> dict:
     return out
 
 
+def bench_speculation(cfg: dict, seed: int = 0) -> dict:
+    """Planned vs speculative vs hybrid redundancy across tail regimes.
+
+    The paper's planned replication spends workers *proactively*; the
+    ``Speculation`` policy spends them *reactively*, backing up only the
+    replicas whose elapsed time crosses ``theta x`` the running median of
+    completed siblings.  Four variants per distribution, all on the Python
+    event engine (the reference semantics the jax scan and the live runtime
+    are pinned to):
+
+      no_redundancy  B = N, no backups   -- the straggler-exposed baseline
+      planned        B = B*, no backups  -- §VI/§VII proactive replication
+      speculative    B = N, backups      -- reactive only
+      hybrid         B = B*, backups     -- both
+
+    The check interval scales with each distribution's median task time so
+    one policy spec covers sub-second exponentials and the ~14 s-median
+    trace job alike.  The regression gate keys on the Pareto row: reactive
+    backups alone must keep beating the no-redundancy baseline.
+    """
+    from repro.cluster import Speculation
+
+    n = cfg["n_workers"]
+    n_jobs = cfg["n_reps"]
+    theta, min_obs = 2.0, 3
+    dists = [
+        ("exponential", Exponential(1.0)),
+        ("shifted_exp", ShiftedExponential(0.3, 1.0)),
+        ("pareto_heavy", Pareto(1.0, 1.5)),
+    ]
+    trace = traces.synthetic_google_jobs()[5]  # heavy-tail trace job
+    dists.append(("trace_heavy", Empirical(samples=tuple(float(x) for x in trace.task_times))))
+    out = {
+        "n_workers": n,
+        "n_jobs": n_jobs,
+        "theta": theta,
+        "min_observations": min_obs,
+        "dists": {},
+    }
+    for name, dist in dists:
+        med = float(np.median(dist.sample_np(np.random.default_rng(seed), (512,))))
+        spec = Speculation(
+            interval=max(0.05, 0.25 * med), theta=theta, min_observations=min_obs
+        )
+        planner = RedundancyPlanner(n)
+        if isinstance(dist, Empirical):
+            plan = planner.plan_empirical(
+                np.asarray(dist.samples), "mean", n_mc=4 * n_jobs, seed=seed
+            )
+        else:
+            plan = planner.plan(dist, objective="mean")
+        variants = {
+            "no_redundancy": (n, None),
+            "planned": (plan.n_batches, None),
+            "speculative": (n, spec),
+            "hybrid": (plan.n_batches, spec),
+        }
+        entry = {"B_star": plan.n_batches, "interval": spec.interval}
+        for label, (b, sp) in variants.items():
+            rep = ClusterEngine(
+                n, seed=seed, n_batches=b, cancel_redundant=True, speculation=sp
+            ).run([Job(job_id=i, dist=dist, n_tasks=n) for i in range(n_jobs)])
+            t = rep.compute_times
+            entry[label] = {
+                "B": b,
+                "mean_compute": float(t.mean()),
+                "p95_compute": float(np.percentile(t, 95)),
+                "worker_seconds": rep.worker_seconds,
+                "n_speculative": rep.n_speculative,
+            }
+        base = entry["no_redundancy"]["mean_compute"]
+        for label in ("planned", "speculative", "hybrid"):
+            entry[f"speedup_{label}"] = base / entry[label]["mean_compute"]
+        out["dists"][name] = entry
+    out["pareto_speculative_speedup"] = out["dists"]["pareto_heavy"]["speedup_speculative"]
+    out["pareto_hybrid_speedup"] = out["dists"]["pareto_heavy"]["speedup_hybrid"]
+    return out
+
+
 def run_all(smoke: bool = True, seed: int = 0) -> list:
     """CSV rows for the benchmark aggregator (smoke sizes by default)."""
     cfg = _cfg(smoke)
@@ -445,6 +529,16 @@ def run_all(smoke: bool = True, seed: int = 0) -> list:
         )
     )
     t0 = time.time()
+    sk = bench_speculation(cfg, seed)
+    rows.append(
+        (
+            "cluster_speculation",
+            (time.time() - t0) * 1e6 / max(cfg["n_reps"], 1),
+            f"pareto: speculative x{sk['pareto_speculative_speedup']:.2f}, "
+            f"hybrid x{sk['pareto_hybrid_speedup']:.2f} vs no redundancy",
+        )
+    )
+    t0 = time.time()
     sp = bench_space_sharing(cfg, seed)
     rows.append(
         (
@@ -481,6 +575,7 @@ def main() -> None:
         "backend": bench_backend(cfg, args.seed),
         "dynamic": bench_dynamic(cfg, args.seed),
         "space_sharing": bench_space_sharing(cfg, args.seed),
+        "speculation": bench_speculation(cfg, args.seed),
     }
     if args.backend in ("python", "both"):
         result["redundancy"] = bench_redundancy(cfg, args.seed, backend="python")

@@ -1,18 +1,25 @@
-"""Nightly-bench trend summary: bench JSONs -> one markdown table.
+"""Nightly-bench trend summary: bench JSONs -> markdown table + sparklines.
 
 The nightly workflow keeps a 90-day series of ``cluster_bench.py``
 artifacts; this script folds any number of those JSONs (a directory of
 downloaded artifacts, or just the fresh run) into a compact markdown table
 of the load-bearing series -- the jax speed edges (static + dynamic + space
-sweeps), the packed-vs-gang response ratio, the dynamic cold start, and the
-heavy-tail redundancy speedup.  Rows are labelled by the run id carried in
-the artifact path (``gh run download`` lands each artifact in its own
-directory) and sorted naturally, so the table reads chronologically.
+sweeps), the packed-vs-gang response ratio, the dynamic cold start, the
+heavy-tail redundancy speedup, and the speculative-vs-planned Pareto
+speedups.  Rows are labelled by the run id carried in the artifact path
+(``gh run download`` lands each artifact in its own directory) and sorted
+naturally, so the table reads chronologically.
+
+``--svg PATH`` additionally renders the same series as one self-contained
+SVG of per-series sparklines (pure stdlib, no plotting deps) -- the at-a-
+glance trend picture the markdown table can't give; the nightly workflow
+uploads it next to the JSON artifact.
 
 Usage::
 
     python benchmarks/nightly_trend.py artifacts_dir_or_json [more ...]
-    python benchmarks/nightly_trend.py bench-history fresh.json >> "$GITHUB_STEP_SUMMARY"
+    python benchmarks/nightly_trend.py bench-history fresh.json \\
+        --svg trend.svg >> "$GITHUB_STEP_SUMMARY"
 
 The nightly workflow downloads the retained artifact series into
 ``bench-history/run-<id>/`` and points this script at the directory plus the
@@ -76,21 +83,22 @@ def trend_table(rows: list[tuple[str, dict]]) -> str:
     header = (
         "| run | static edge (min..max) | dynamic edge (min..max) "
         "| space edge (min..max) | packed/gang resp | dynamic cold (s) "
-        "| peak RSS (MB) | heavy-tail speedup |\n"
-        "|---|---|---|---|---|---|---|---|"
+        "| peak RSS (MB) | heavy-tail speedup | spec pareto (react/hybrid) |\n"
+        "|---|---|---|---|---|---|---|---|---|"
     )
     lines = [header]
     for name, d in rows:
         b = _get(d, "backend") or {}
         dy = _get(d, "dynamic") or {}
         sp = _get(d, "space_sharing") or {}
+        sk = _get(d, "speculation") or {}
         heavy = _get(d, "redundancy", "_summary", "max_heavy_speedup")
 
         def fmt(v, spec=".1f", suffix=""):
             return format(v, spec) + suffix if isinstance(v, (int, float)) else "-"
 
         lines.append(
-            "| {} | {}..{} | {}..{} | {}..{} | {} | {} | {} | {} |".format(
+            "| {} | {}..{} | {}..{} | {}..{} | {} | {} | {} | {} | {}/{} |".format(
                 name,
                 fmt(b.get("min_speedup_warm"), ".0f", "x"),
                 fmt(b.get("max_speedup_warm"), ".0f", "x"),
@@ -102,14 +110,87 @@ def trend_table(rows: list[tuple[str, dict]]) -> str:
                 fmt(dy.get("max_cold_seconds"), ".2f"),
                 fmt(dy.get("peak_rss_mb"), ".0f"),
                 fmt(heavy, ".2f", "x"),
+                fmt(sk.get("pareto_speculative_speedup"), ".2f", "x"),
+                fmt(sk.get("pareto_hybrid_speedup"), ".2f", "x"),
             )
         )
     return "\n".join(lines)
 
 
+# the sparkline series: one row per load-bearing scalar, addressed by its
+# JSON path into a bench artifact (shared vocabulary with trend_table)
+_SERIES = [
+    ("static edge (min)", ("backend", "min_speedup_warm")),
+    ("dynamic edge (min)", ("dynamic", "min_speedup_warm")),
+    ("space edge (min)", ("space_sharing", "min_speedup_warm")),
+    ("packed/gang response", ("space_sharing", "response_ratio_packed_vs_gang")),
+    ("dynamic cold (s)", ("dynamic", "max_cold_seconds")),
+    ("heavy-tail speedup", ("redundancy", "_summary", "max_heavy_speedup")),
+    ("spec pareto (react)", ("speculation", "pareto_speculative_speedup")),
+    ("spec pareto (hybrid)", ("speculation", "pareto_hybrid_speedup")),
+]
+
+
+def sparkline_svg(rows: list[tuple[str, dict]]) -> str:
+    """One self-contained SVG: a labelled sparkline per load-bearing series.
+
+    Runs missing a section simply contribute no point (old artifacts predate
+    newer bench sections); a series with one point renders as a dot, and the
+    latest value is printed at the right edge.  Stdlib-only on purpose --
+    the nightly runner has no plotting stack.
+    """
+    label_w, plot_w, row_h, pad = 170, 240, 26, 5
+    n = len(rows)
+    parts = []
+    for si, (label, keys) in enumerate(_SERIES):
+        pts = []
+        for i, (_, d) in enumerate(rows):
+            v = _get(d, *keys)
+            if isinstance(v, (int, float)):
+                pts.append((i, float(v)))
+        y0 = si * row_h
+        parts.append(
+            f'<text x="2" y="{y0 + row_h - 9}" font-size="10" '
+            f'font-family="monospace">{label}</text>'
+        )
+        if not pts:
+            continue
+        lo = min(v for _, v in pts)
+        span = max(v for _, v in pts) - lo or 1.0
+
+        def xy(i, v, y0=y0, lo=lo, span=span):
+            x = label_w + pad + (plot_w - 2 * pad) * (i / max(n - 1, 1))
+            y = y0 + pad + (row_h - 2 * pad) * (1.0 - (v - lo) / span)
+            return f"{x:.1f},{y:.1f}"
+
+        coords = [xy(i, v) for i, v in pts]
+        if len(coords) > 1:
+            parts.append(
+                '<polyline fill="none" stroke="#2b6cb0" stroke-width="1.5" '
+                f'points="{" ".join(coords)}"/>'
+            )
+        cx, cy = coords[-1].split(",")
+        parts.append(f'<circle cx="{cx}" cy="{cy}" r="2" fill="#2b6cb0"/>')
+        parts.append(
+            f'<text x="{label_w + plot_w + 4}" y="{y0 + row_h - 9}" font-size="10" '
+            f'font-family="monospace">{pts[-1][1]:.2f}</text>'
+        )
+    w, h = label_w + plot_w + 60, len(_SERIES) * row_h
+    return (
+        f'<svg xmlns="http://www.w3.org/2000/svg" width="{w}" height="{h}" '
+        f'viewBox="0 0 {w} {h}">' + "".join(parts) + "</svg>"
+    )
+
+
 def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("paths", nargs="+", type=pathlib.Path, help="bench JSONs or dirs")
+    ap.add_argument(
+        "--svg",
+        type=pathlib.Path,
+        default=None,
+        help="also render the series as one sparkline SVG at this path",
+    )
     args = ap.parse_args()
     rows = _load(args.paths)
     if not rows:
@@ -117,6 +198,10 @@ def main() -> int:
         return 1
     print("### cluster bench trend\n")
     print(trend_table(rows))
+    if args.svg is not None:
+        args.svg.parent.mkdir(parents=True, exist_ok=True)
+        args.svg.write_text(sparkline_svg(rows))
+        print(f"wrote {args.svg}", file=sys.stderr)
     return 0
 
 

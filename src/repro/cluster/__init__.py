@@ -49,14 +49,14 @@ Public surface:
     users never pay for the service stack
 """
 from . import control, epoch_scan, events, master, scenario, scheduler, vectorized, workers
-from .control import OnlineReplanner
+from .control import OnlineReplanner, SpeculativePolicy
 from .epoch_scan import (
     EpochReport,
     ReplanConfig,
     frontier_job_times_dynamic,
     simulate_epochs,
 )
-from .scenario import Scenario
+from .scenario import Scenario, Speculation
 from .scheduler import JobPlan, Scheduler, make_scheduler
 from .master import (
     ClusterEngine,
@@ -79,10 +79,12 @@ __all__ = [
     "vectorized",
     "workers",
     "Scenario",
+    "Speculation",
     "JobPlan",
     "Scheduler",
     "make_scheduler",
     "OnlineReplanner",
+    "SpeculativePolicy",
     "ClusterEngine",
     "EngineReport",
     "EpochReport",

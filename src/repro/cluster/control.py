@@ -1,4 +1,4 @@
-"""Online replanning: sliding-window refit of the service-time model.
+"""Online control: replanning and reactive (speculative) replication.
 
 Closes the planner -> runtime loop promised in ``core.planner``: the engine
 feeds every genuinely observed per-task service time into the replanner,
@@ -16,14 +16,50 @@ the differential suite checks both converge to the same closed-form optimum.
 from __future__ import annotations
 
 import collections
-from typing import Optional
+import math
+from typing import Optional, Sequence
 
 import numpy as np
 
 from ..core.planner import RedundancyPlan, RedundancyPlanner, fit_service_time
 from ..core.service_time import Exponential, Pareto, ServiceTime, ShiftedExponential
 
-__all__ = ["OnlineReplanner"]
+__all__ = ["OnlineReplanner", "SpeculativePolicy"]
+
+
+class SpeculativePolicy:
+    """The reactive-replication decision rule, shared by every substrate.
+
+    Wraps a frozen :class:`~repro.cluster.scenario.Speculation` config with
+    the three pure computations the DES engine, the jax epoch scan, and the
+    live runtime master all need to agree on bit-for-bit:
+
+    * ``median(obs)`` -- the running *lower* median of completed sibling
+      batch durations (``None`` until ``min_observations`` have completed);
+    * ``lagging(elapsed, median)`` -- the MapReduce backup-task trigger,
+      ``elapsed > theta x median``;
+    * ``next_epoch(crossing, now)`` -- the first heartbeat epoch
+      ``k x interval`` strictly after both the crossing time and ``now``
+      (a replica that crossed in the past is reconsidered at the next
+      epoch, never retroactively).
+    """
+
+    def __init__(self, cfg):
+        self.cfg = cfg
+
+    def median(self, obs: Sequence[float]) -> Optional[float]:
+        if len(obs) < self.cfg.min_observations:
+            return None
+        s = sorted(obs)
+        return s[(len(s) - 1) // 2]
+
+    def lagging(self, elapsed: float, median: float) -> bool:
+        return elapsed > self.cfg.theta * median
+
+    def next_epoch(self, crossing: float, now: float) -> float:
+        iv = self.cfg.interval
+        k = max(math.floor(crossing / iv), math.floor(now / iv)) + 1
+        return k * iv
 
 
 def _inverse_min(dist: ServiceTime, c: float) -> ServiceTime:

@@ -83,7 +83,7 @@ from jax.scipy.special import gammaln
 
 from ..core.analysis import divisor_table, harmonic_tables
 from ..core.service_time import ServiceTime
-from .scenario import UNSET, Scenario, resolve_scenario
+from .scenario import UNSET, Scenario, Speculation, resolve_scenario
 from .scheduler import SCHEDULERS, JobPlan, is_space
 from .workers import ChurnProcess, ChurnSchedule
 
@@ -147,6 +147,7 @@ class EpochReport:
     n_replicas_rescued: np.ndarray  # (n_reps,)
     n_replans: np.ndarray  # (n_reps,)
     epoch_times: np.ndarray  # (n_reps, n_events) applied boundaries, inf pad
+    n_speculative: np.ndarray = None  # (n_reps,) reactive backups launched
 
     @property
     def compute_times(self) -> np.ndarray:
@@ -172,6 +173,11 @@ class EpochReport:
             "n_worker_failures": self.n_worker_failures,
             "n_replicas_rescued": self.n_replicas_rescued,
             "n_replans": self.n_replans,
+            "n_speculative": (
+                self.n_speculative
+                if self.n_speculative is not None
+                else np.zeros_like(self.n_replans)
+            ),
         }
 
 
@@ -232,6 +238,11 @@ class _RunnerCfg:
     # None selects the legacy single-gang lane; a policy name selects the
     # space-sharing lane (per-worker job assignment, per-job plan tables).
     scheduler: Optional[str] = None
+    # Reactive replication (gang lane only -- Scenario.validate rejects the
+    # space + speculation combination on this backend).  Enabling it switches
+    # the commit pass to event-granular groups so the trigger's median and
+    # candidate set evolve exactly as the engine's event loop interleaves them.
+    spec: Optional[Speculation] = None
 
 
 # --------------------------------------------------------------------------
@@ -242,13 +253,22 @@ class _RunnerCfg:
 def _build_lane(cfg: _RunnerCfg):
     n, jobs_pad, ev_pad = cfg.n, cfg.jobs_pad, cfg.ev_pad
     replan = cfg.replan
+    spec = cfg.spec
+    assert not (spec is not None and replan is not None)  # Scenario.validate
     dt = jnp.dtype(cfg.dtype)
     bidx = jnp.arange(n)
     wid = jnp.arange(n)
     # replica slots: [0, n) gang replica of worker i, [n, 2n) rescue replica
-    # of batch i - n.  One flat axis keeps every per-replica reduction a
-    # single vector op (the de-serialized sibling of gang_cover_times).
+    # of batch i - n, and -- with speculation on -- [2n, 3n) the reactive
+    # backup of batch i - 2n.  One flat axis keeps every per-replica
+    # reduction a single vector op (the de-serialized sibling of
+    # gang_cover_times).  One backup slot per batch means a batch whose
+    # backup is still running is not re-eligible; the engine's
+    # youngest-replica rule re-arms on the backup instead, so the two differ
+    # only when a backup itself lags past theta x median (not exercised by
+    # the differential suite).
     rp_batch_rescue = bidx  # rescue slot i hosts batch i
+    n_slots = 3 * n if spec is not None else 2 * n
     W = replan.window if replan is not None else 0
 
     def _seg_min(seg, vals, mask):
@@ -355,8 +375,8 @@ def _build_lane(cfg: _RunnerCfg):
         new_b = cands[jnp.argmin(score)]
         return jnp.where(n_alive > 0, jnp.maximum(new_b, 1), st["plan_b"])
 
-    def lane(tau, tau_resc, ev_t, ev_w, ev_up, b0, arrivals, speeds, n_real, jobs_real,
-             n_tasks, blend, div_tab, h1, h2):
+    def lane(tau, tau_resc, tau_spec, ev_t, ev_w, ev_up, b0, arrivals, speeds, n_real,
+             jobs_real, n_tasks, blend, div_tab, h1, h2):
         inf = jnp.asarray(jnp.inf, dt)
 
         def batch_scale(job_b):
@@ -370,9 +390,13 @@ def _build_lane(cfg: _RunnerCfg):
             st = {**st}
             e = st["e"]
             t_next = ev_t[e]
-            # replica slot -> (batch, worker), gang half then rescue half
-            rp_b = jnp.concatenate([st["g_b"], rp_batch_rescue])
-            rp_w = jnp.concatenate([wid, st["rb_w"]])
+            # replica slot -> (batch, worker): gang, rescue, then backup bank
+            if spec is not None:
+                rp_b = jnp.concatenate([st["g_b"], rp_batch_rescue, bidx])
+                rp_w = jnp.concatenate([wid, st["rb_w"], st["sb_w"]])
+            else:
+                rp_b = jnp.concatenate([st["g_b"], rp_batch_rescue])
+                rp_w = jnp.concatenate([wid, st["rb_w"]])
             win = _seg_min(rp_b, st["rp_end"], st["rp_live"])
 
             # -- rescue: oldest pending rescue onto the earliest-freeing
@@ -400,7 +424,7 @@ def _build_lane(cfg: _RunnerCfg):
             # gated writes: the index goes out of bounds when the action is
             # off, and jax scatters drop out-of-bounds updates
             i_tgt = jnp.where(can_r, tgt, n)
-            i_slot = jnp.where(can_r, n + tgt, 2 * n)
+            i_slot = jnp.where(can_r, n + tgt, n_slots)
             st["rb_w"] = st["rb_w"].at[i_tgt].set(wstar.astype(jnp.int32))
             st["rp_start"] = st["rp_start"].at[i_slot].set(td_r)
             st["rp_end"] = st["rp_end"].at[i_slot].set(td_r + dur_r)
@@ -409,10 +433,99 @@ def _build_lane(cfg: _RunnerCfg):
             st["n_resc"] = st["n_resc"] + can_r
             st["resc_k"] = st["resc_k"] + can_r
 
+            # -- speculative backup trigger (reactive replication).  All of
+            # it is a pure function of the committed state, evaluated with
+            # the exact float expressions of SpeculativePolicy /
+            # ClusterEngine._next_spec_time so the differential tests can
+            # demand bit-equality: the running lower median of completed
+            # sibling durations, each unfinished batch's youngest live
+            # replica crossing at start + theta x median, and the launch on
+            # the first heartbeat epoch strictly after both the crossing and
+            # the last processed event.
+            if spec is not None:
+                iv, theta = spec.interval, spec.theta
+                ofin = jnp.isfinite(st["spec_obs"])
+                cnt = ofin.sum()
+                med = jnp.sort(jnp.where(ofin, st["spec_obs"], jnp.inf))[
+                    jnp.maximum((cnt - 1) // 2, 0)
+                ]
+                live = st["rp_live"]
+                y_b = (
+                    jnp.full(n + 1, -jnp.inf, dt)
+                    .at[rp_b].max(jnp.where(live, st["rp_start"], -inf))[:n]
+                )
+                occ = jnp.zeros(n + 1, bool).at[jnp.where(live, rp_w, n)].set(True)[:n]
+                free_ok = (st["alive"] & ~occ).any()
+                elig = (
+                    st["job_active"]
+                    & (cnt >= spec.min_observations)
+                    & free_ok
+                    & (st["spec_used"] < spec.max_backups)
+                    & ~st["batch_done"]
+                    & jnp.isfinite(y_b)  # the batch holds a live replica
+                    & ~live[2 * n :]  # one live backup per batch (see above)
+                )
+                now_s = jnp.maximum(st["t_cursor"], st["spec_now"])
+                k = (
+                    jnp.maximum(
+                        jnp.floor((y_b + theta * med) / iv), jnp.floor(now_s / iv)
+                    )
+                    + 1.0
+                )
+                t_spec = jnp.min(jnp.where(elig, k * iv, jnp.inf))
+                # the next replica-completion event: a batch win under
+                # cancellation (the win retires the whole batch), any
+                # replica end otherwise.  A launch happens only strictly
+                # before it -- a completion at the same instant is an
+                # earlier-queued event on the engine's heap, and its re-arm
+                # supersedes the stale check.
+                if cfg.cancel:
+                    t_evm = jnp.min(jnp.where(~st["batch_done"], win, jnp.inf))
+                else:
+                    t_evm = jnp.min(jnp.where(live, st["rp_end"], jnp.inf))
+                can_s = (
+                    (~can_r) & jnp.isfinite(t_spec) & (t_spec < t_evm) & (t_spec < t_next)
+                )
+                # fire re-check at the epoch itself, the engine's
+                # lagging(now - y, med); a check that launches nothing (the
+                # two forms can disagree by 1 ulp) still consumes the epoch,
+                # and the next arming lands one grid point later -- the same
+                # self-healing re-arm the engine performs
+                lag = elig & ((t_spec - y_b) > theta * med)
+                b_s = jnp.argmin(jnp.where(lag, bidx, n))
+                do_l = can_s & lag.any()
+                w_s = jnp.argmin(jnp.where(st["alive"] & ~occ, wid, n))
+                sk = jnp.clip(st["spec_k"], 0, tau_spec.shape[0] - 1)
+                dur_s = (
+                    tau_spec[sk, jnp.clip(b_s, 0, n - 1)]
+                    * batch_scale(st["job_b"])
+                    / speeds[w_s]
+                )
+                i_sl = jnp.where(do_l, 2 * n + b_s, n_slots)
+                st["sb_w"] = st["sb_w"].at[jnp.where(do_l, b_s, n)].set(
+                    w_s.astype(jnp.int32)
+                )
+                st["rp_start"] = st["rp_start"].at[i_sl].set(t_spec)
+                st["rp_end"] = st["rp_end"].at[i_sl].set(t_spec + dur_s)
+                st["rp_live"] = st["rp_live"].at[i_sl].set(True)
+                st["spec_used"] = st["spec_used"] + do_l
+                st["n_spec"] = st["n_spec"] + do_l
+                st["spec_k"] = st["spec_k"] + do_l
+                st["spec_now"] = jnp.where(can_s, t_spec, st["spec_now"])
+            else:
+                can_s = jnp.array(False)
+                t_evm = inf
+
             # -- commit completions up to the next boundary (masked out
             # entirely on rescue steps: pending rescues must dispatch before
-            # any commit clears the replicas their free times project from)
+            # any commit clears the replicas their free times project from).
+            # With speculation on, commit only the earliest completion-time
+            # group: every completion changes the trigger's median and
+            # candidate set, so later completions must see the launches (and
+            # re-armed epochs) that precede them, one event at a time.
             newly = (~st["batch_done"]) & (win <= t_next) & jnp.isfinite(win) & ~can_r
+            if spec is not None:
+                newly = newly & (win == t_evm) & ~can_s
             if cfg.cancel:
                 win_r = win[rp_b]
                 done_r = st["rp_live"] & newly[rp_b]
@@ -421,9 +534,22 @@ def _build_lane(cfg: _RunnerCfg):
                 t_new = jnp.max(jnp.where(newly, win, -inf))
             else:
                 done_r = st["rp_live"] & (st["rp_end"] <= t_next) & ~can_r
+                if spec is not None:
+                    done_r = done_r & (st["rp_end"] == t_evm) & ~can_s
                 busy_add = jnp.where(done_r, st["rp_end"] - st["rp_start"], 0.0).sum()
                 saved_add = 0.0
                 t_new = jnp.max(jnp.where(done_r, st["rp_end"], -inf))
+            if spec is not None:
+                # the winning replica's wall-clock duration is the sibling
+                # observation the policy's median runs over (engine:
+                # jexec.obs.append(now - worker.busy_since)); ties keep the
+                # earliest-queued gang replica, i.e. the smallest start
+                is_w = st["rp_live"] & newly[rp_b] & (st["rp_end"] <= win[rp_b])
+                w_st = (
+                    jnp.full(n + 1, jnp.inf, dt)
+                    .at[jnp.where(is_w, rp_b, n)].min(st["rp_start"])[:n]
+                )
+                st["spec_obs"] = jnp.where(newly, win - w_st, st["spec_obs"])
             live2 = st["rp_live"] & ~done_r
             done2 = st["batch_done"] | newly
             done_t2 = jnp.where(newly, win, st["batch_done_t"])
@@ -510,8 +636,8 @@ def _build_lane(cfg: _RunnerCfg):
             # draw index = alive-rank (the engine assigns free workers in wid
             # order, drawing sequentially); batch = rank mod b
             dur = tau[q][rank] * batch_scale(b) / speeds
-            sel2 = jnp.concatenate([sel, jnp.zeros(n, bool)])
-            end2 = jnp.concatenate([td + dur, jnp.full(n, jnp.inf, dt)])
+            sel2 = jnp.concatenate([sel, jnp.zeros(n_slots - n, bool)])
+            end2 = jnp.concatenate([td + dur, jnp.full(n_slots - n, jnp.inf, dt)])
             st["g_b"] = jnp.where(can_d & sel, (rank % b).astype(jnp.int32), st["g_b"])
             st["rp_live"] = jnp.where(can_d, sel2, st["rp_live"])
             st["rp_start"] = jnp.where(can_d & sel2, td, st["rp_start"])
@@ -528,11 +654,20 @@ def _build_lane(cfg: _RunnerCfg):
             if cfg.full_outputs:
                 st["br"] = st["br"].at[i_q].set((b << 16 | r).astype(jnp.int32))
             st["q"] = st["q"] + can_d
+            if spec is not None:
+                # per-job policy state resets at dispatch (a fresh _JobExec)
+                st["spec_obs"] = jnp.where(can_d, inf, st["spec_obs"])
+                st["spec_used"] = jnp.where(can_d, 0, st["spec_used"])
 
             # -- otherwise apply one fail/join event (the engine stops
             # replaying churn once every job is recorded: the sim_over gate)
             t_ev, w_raw, up = ev_t[e], ev_w[e], ev_up[e]
-            do_b = ~can_r & ~can_d
+            if spec is not None:
+                # a launch or a committed completion group consumed this
+                # step; the boundary waits for a step with neither
+                do_b = ~can_r & ~can_d & ~can_s & ~newly.any() & ~done_r.any()
+            else:
+                do_b = ~can_r & ~can_d
             sim_over = (st["q"] >= jobs_real) & ~st["job_active"]
             act = do_b & (w_raw >= 0) & jnp.isfinite(t_ev) & ~sim_over
             w = jnp.clip(w_raw, 0, n - 1)
@@ -583,9 +718,9 @@ def _build_lane(cfg: _RunnerCfg):
             "q_active": jnp.int32(0),
             "g_b": jnp.zeros(n, jnp.int32),
             "rb_w": jnp.zeros(n, jnp.int32),
-            "rp_live": jnp.zeros(2 * n, bool),
-            "rp_start": jnp.zeros(2 * n, dt),
-            "rp_end": jnp.full(2 * n, jnp.inf, dt),
+            "rp_live": jnp.zeros(n_slots, bool),
+            "rp_start": jnp.zeros(n_slots, dt),
+            "rp_end": jnp.full(n_slots, jnp.inf, dt),
             "batch_done": jnp.ones(n, bool),
             "batch_done_t": jnp.full(n, -jnp.inf, dt),
             "resc_pending": jnp.zeros(n, bool),
@@ -611,6 +746,15 @@ def _build_lane(cfg: _RunnerCfg):
                 obs_count=jnp.int32(0),
                 since_refit=jnp.int32(0),
             )
+        if spec is not None:
+            st.update(
+                sb_w=jnp.zeros(n, jnp.int32),
+                spec_obs=jnp.full(n, jnp.inf, dt),
+                spec_used=jnp.int32(0),
+                spec_k=jnp.int32(0),
+                spec_now=jnp.asarray(0.0, dt),
+                n_spec=jnp.int32(0),
+            )
 
         def chunk_body(carry):
             st, it = carry
@@ -635,6 +779,8 @@ def _build_lane(cfg: _RunnerCfg):
             "n_replicas_rescued": st["n_resc"],
             "n_replans": st["n_replans"],
         }
+        if spec is not None:
+            out["n_speculative"] = st["n_spec"]
         if cfg.full_outputs:
             out["br"] = st["br"]
             out["epoch_times"] = st["ep_times"]
@@ -692,8 +838,9 @@ def _build_space_lane(cfg: _RunnerCfg):
     J = jobs_pad  # sentinel: unallocated worker / free segment slot
     balanced = cfg.scheduler == "balanced"
 
-    def lane(tau, tau_resc, ev_t, ev_w, ev_up, b0, arrivals, speeds, n_real, jobs_real,
-             n_tasks, req_tab, b_tab, cancel_tab, default_req):
+    def lane(tau, tau_resc, tau_spec, ev_t, ev_w, ev_up, b0, arrivals, speeds, n_real,
+             jobs_real, n_tasks, req_tab, b_tab, cancel_tab, default_req):
+        del tau_spec  # speculation is gang-lane only (Scenario.validate)
         inf = jnp.asarray(jnp.inf, dt)
         jidx = jnp.arange(jobs_pad)
 
@@ -978,7 +1125,7 @@ def _get_runner(cfg: _RunnerCfg):
     if cfg in _RUNNERS:
         return _RUNNERS[cfg]
     lane = _build_space_lane(cfg) if cfg.scheduler is not None else _build_lane(cfg)
-    fn = jax.vmap(lane, in_axes=(0,) * 6 + (None,) * 9)
+    fn = jax.vmap(lane, in_axes=(0,) * 7 + (None,) * 9)
     if cfg.devices > 1:
         from jax.sharding import Mesh, PartitionSpec as P
 
@@ -990,13 +1137,13 @@ def _get_runner(cfg: _RunnerCfg):
         fn = shard_map(
             fn,
             mesh=mesh,
-            in_specs=(P("lanes"),) * 6 + (P(),) * 9,
+            in_specs=(P("lanes"),) * 7 + (P(),) * 9,
             out_specs=P("lanes"),
             check_vma=False,
         )
     # donating the big per-lane buffers lets XLA reuse them for the loop
     # carry; CPU does not support donation (it would only warn), so gate it
-    donate = () if jax.default_backend() == "cpu" else (0, 1, 2, 3, 4, 5)
+    donate = () if jax.default_backend() == "cpu" else (0, 1, 2, 3, 4, 5, 6)
     runner = jax.jit(fn, donate_argnums=donate)
     _RUNNERS[cfg] = runner
     return runner
@@ -1038,7 +1185,7 @@ def _pack_schedule(schedule: Optional[ChurnSchedule], n_lanes: int, ev_pad: int,
 
 
 def _prepare_lanes(dist, n_workers, n_pad, lane_idx, n_real, jobs_pad, ev_pad, resc_cap,
-                   seed, churn, churn_schedule, pairs, dtype):
+                   seed, churn, churn_schedule, pairs, dtype, spec_cap=0):
     """Per-lane inputs shared by both entry points: service draws, rescue
     draws, and the churn event stream.
 
@@ -1059,6 +1206,7 @@ def _prepare_lanes(dist, n_workers, n_pad, lane_idx, n_real, jobs_pad, ev_pad, r
     need_resc = sample_churn or (churn_schedule is not None and len(churn_schedule))
     tau = np.ones((n_lanes, jobs_pad, n_pad), dtype)
     tau_resc = np.ones((n_lanes, resc_cap, n_pad), dtype)
+    tau_spec = np.ones((n_lanes, max(spec_cap, 1), n_pad), dtype)
     if sample_churn:
         ev_t = np.full((n_lanes, ev_pad), np.inf, dtype)
         ev_w = np.full((n_lanes, ev_pad), -1, np.int32)
@@ -1068,6 +1216,8 @@ def _prepare_lanes(dist, n_workers, n_pad, lane_idx, n_real, jobs_pad, ev_pad, r
         tau[i] = dist.sample_np(rng, (jobs_pad, n_pad))
         if need_resc:
             tau_resc[i] = dist.sample_np(rng, (resc_cap, n_pad))
+        if spec_cap:
+            tau_spec[i] = dist.sample_np(rng, (spec_cap, n_pad))
         if sample_churn:
             t, w, u = _sample_churn_np(rng, churn, n_workers, pairs)
             k = min(len(t), ev_pad)
@@ -1076,10 +1226,10 @@ def _prepare_lanes(dist, n_workers, n_pad, lane_idx, n_real, jobs_pad, ev_pad, r
         ev_t, ev_w, ev_up = _pack_schedule(churn_schedule, n_lanes, ev_pad, dtype)
     else:
         ev_t, ev_w, ev_up = jnp.asarray(ev_t), jnp.asarray(ev_w), jnp.asarray(ev_up)
-    return jnp.asarray(tau), jnp.asarray(tau_resc), ev_t, ev_w, ev_up
+    return jnp.asarray(tau), jnp.asarray(tau_resc), jnp.asarray(tau_spec), ev_t, ev_w, ev_up
 
 
-def _shapes(n_workers, n_jobs, churn, churn_schedule, pairs):
+def _shapes(n_workers, n_jobs, churn, churn_schedule, pairs, speculation=None):
     n_pad = _bucket_workers(n_workers)
     # per-job output arrays are scattered into every step: bucket them at a
     # finer granularity than power-of-two (32) to keep the carried elements
@@ -1098,7 +1248,14 @@ def _shapes(n_workers, n_jobs, churn, churn_schedule, pairs):
     # step budget: one step per job dispatch + one per churn event + a rescue
     # allowance, plus one trailing commit; overruns leave jobs at inf exactly
     # like the engine's max_events cap
-    budget = jobs_pad + ev_pad + resc_cap + 2
+    if speculation is not None:
+        # event-granular commits consume one step per completion-time group
+        # (at most one per batch plus straggler/rescue retirements) plus one
+        # per backup launch and its (rare) 1-ulp re-arm
+        mb = speculation.max_backups
+        budget = jobs_pad * (n_pad + 1 + 2 * mb) + ev_pad + 2 * resc_cap + 2
+    else:
+        budget = jobs_pad + ev_pad + resc_cap + 2
     n_chunks = -(-budget // _STEP_CHUNK)
     return n_pad, jobs_pad, ev_pad, resc_cap, n_chunks
 
@@ -1120,9 +1277,10 @@ def _run_lanes(dist, cfg, n_workers, lane_idx, b0, arrivals_pad, n_jobs_real, se
     idx = np.concatenate([lane_idx, np.arange(lanes_pad - lanes) + (1 << 30)])
     b0 = np.concatenate([b0, np.zeros(lanes_pad - lanes, np.int32)])
     dtype = jnp.dtype(cfg.dtype)
-    tau, tau_resc, ev_t, ev_w, ev_up = _prepare_lanes(
+    spec_cap = cfg.jobs_pad * cfg.spec.max_backups if cfg.spec is not None else 0
+    tau, tau_resc, tau_spec, ev_t, ev_w, ev_up = _prepare_lanes(
         dist, n_workers, cfg.n, idx, lanes, cfg.jobs_pad, cfg.ev_pad, cfg.resc_cap,
-        seed, churn, churn_schedule, pairs, dtype,
+        seed, churn, churn_schedule, pairs, dtype, spec_cap=spec_cap,
     )
     if cfg.scheduler is not None:
         req_tab, b_tab, cancel_tab, default_req = space_tabs
@@ -1149,6 +1307,7 @@ def _run_lanes(dist, cfg, n_workers, lane_idx, b0, arrivals_pad, n_jobs_real, se
     out = runner(
         tau,
         tau_resc,
+        tau_spec,
         ev_t,
         ev_w,
         ev_up,
@@ -1255,6 +1414,7 @@ def simulate_epochs(
     churn_schedule=UNSET,
     churn_pairs_per_worker=UNSET,
     replan=UNSET,
+    speculation=UNSET,
     scheduler=UNSET,
     workers_per_job=UNSET,
     job_plans=UNSET,
@@ -1283,6 +1443,19 @@ def simulate_epochs(
     (whole-cluster dispatch, per-job B and cancellation).  ``replan`` is
     mutually exclusive with space sharing.
 
+    ``speculation=Speculation(...)`` enables reactive backup replicas on the
+    gang lane: completed sibling-batch durations feed a running lower
+    median, and a batch whose youngest live replica lags past ``theta x``
+    that median earns one backup at the next heartbeat epoch (one launch per
+    epoch, capped at ``max_backups`` per job) -- the exact trigger
+    :class:`~repro.cluster.master.ClusterEngine` fires, computed with the
+    same float expressions so the differential tests demand bit-equality on
+    shared schedules.  One live backup per batch: a batch whose backup is
+    still running is not re-eligible until it resolves (the engine's
+    youngest-replica rule differs only when the backup itself lags past the
+    trigger).  Mutually exclusive with ``replan`` and, on this backend, with
+    space sharing.
+
     Each Monte-Carlo rep derives every draw (replica durations, rescue draws,
     and -- when ``churn`` is given -- its own fail/join timeline of
     ``churn_pairs_per_worker`` up/down pairs per worker, after which that
@@ -1307,6 +1480,7 @@ def simulate_epochs(
             "churn_schedule": churn_schedule,
             "churn_pairs_per_worker": churn_pairs_per_worker,
             "replan": replan,
+            "speculation": speculation,
             "scheduler": scheduler,
             "workers_per_job": workers_per_job,
             "job_plans": job_plans,
@@ -1335,6 +1509,7 @@ def simulate_epochs(
     churn_schedule = sc.churn_schedule
     churn_pairs_per_worker = sc.churn_pairs_per_worker
     replan = sc.replan
+    speculation = sc.speculation
     scheduler = sc.scheduler_name
     workers_per_job = sc.workers_per_job
     job_plans = sc.job_plans
@@ -1344,7 +1519,8 @@ def simulate_epochs(
     n_tasks = sc.n_tasks if sc.n_tasks is not None else n_workers
     n_jobs = arrivals.size
     n_pad, jobs_pad, ev_pad, resc_cap, n_chunks = _shapes(
-        n_workers, n_jobs, churn, churn_schedule, churn_pairs_per_worker
+        n_workers, n_jobs, churn, churn_schedule, churn_pairs_per_worker,
+        speculation=speculation,
     )
     sched_name, tabs = _space_tabs(
         scheduler, workers_per_job, job_plans, n_jobs, jobs_pad, n_workers,
@@ -1354,6 +1530,7 @@ def simulate_epochs(
         n_pad, jobs_pad, ev_pad, resc_cap, n_chunks,
         bool(cancel_redundant), bool(size_dependent), replan, dtype, int(devices),
         scheduler=sched_name,
+        spec=speculation,
     )
     arrivals_pad = np.concatenate([arrivals, np.full(jobs_pad - n_jobs, np.inf)])
     b0_val = 0 if n_batches is None else int(n_batches)
@@ -1380,6 +1557,9 @@ def simulate_epochs(
         n_replicas_rescued=np.asarray(out["n_replicas_rescued"]),
         n_replans=np.asarray(out["n_replans"]),
         epoch_times=np.asarray(out["epoch_times"], np.float64),
+        n_speculative=(
+            np.asarray(out["n_speculative"]) if "n_speculative" in out else None
+        ),
     )
 
 
@@ -1399,6 +1579,7 @@ def frontier_job_times_dynamic(
     churn_schedule=UNSET,
     churn_pairs_per_worker=UNSET,
     replan=UNSET,
+    speculation=UNSET,
     scheduler=UNSET,
     workers_per_job=UNSET,
     job_plans=UNSET,
@@ -1441,6 +1622,7 @@ def frontier_job_times_dynamic(
             "churn_schedule": churn_schedule,
             "churn_pairs_per_worker": churn_pairs_per_worker,
             "replan": replan,
+            "speculation": speculation,
             "scheduler": scheduler,
             "workers_per_job": workers_per_job,
             "job_plans": job_plans,
@@ -1468,6 +1650,7 @@ def frontier_job_times_dynamic(
     churn_schedule = sc.churn_schedule
     churn_pairs_per_worker = sc.churn_pairs_per_worker
     replan = sc.replan
+    speculation = sc.speculation
     scheduler = sc.scheduler_name
     workers_per_job = sc.workers_per_job
     job_plans = sc.job_plans
@@ -1480,7 +1663,8 @@ def frontier_job_times_dynamic(
     s = math.ceil(n_reps / n_jobs)
     c = len(bs)
     n_pad, jobs_pad, ev_pad, resc_cap, n_chunks = _shapes(
-        n_workers, n_jobs, churn, churn_schedule, churn_pairs_per_worker
+        n_workers, n_jobs, churn, churn_schedule, churn_pairs_per_worker,
+        speculation=speculation,
     )
     sched_name, tabs = _space_tabs(
         scheduler, workers_per_job, job_plans, n_jobs, jobs_pad, n_workers,
@@ -1491,6 +1675,7 @@ def frontier_job_times_dynamic(
         bool(cancel_redundant), bool(size_dependent), replan, dtype, int(devices),
         full_outputs=False,  # planning reads starts/finishes only
         scheduler=sched_name,
+        spec=speculation,
     )
     arrivals_pad = np.concatenate([np.zeros(n_jobs), np.full(jobs_pad - n_jobs, np.inf)])
     chunks = []

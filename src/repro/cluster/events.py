@@ -21,6 +21,7 @@ __all__ = [
     "BATCH_DONE",
     "WORKER_FAIL",
     "WORKER_JOIN",
+    "SPEC_CHECK",
     "EventQueue",
     "SimClock",
     "RngStreams",
@@ -31,6 +32,7 @@ JOB_ARRIVAL = "job_arrival"
 BATCH_DONE = "batch_done"
 WORKER_FAIL = "worker_fail"
 WORKER_JOIN = "worker_join"
+SPEC_CHECK = "spec_check"  # speculative-backup heartbeat check (reactive replication)
 
 
 class EventQueue:

@@ -37,8 +37,8 @@ import numpy as np
 from ..core.service_time import Empirical, ServiceTime
 from ..core.simulator import JobTimeStats, stats_from_samples
 from . import events as ev
-from .control import OnlineReplanner
-from .scenario import UNSET, Scenario, resolve_scenario
+from .control import OnlineReplanner, SpeculativePolicy
+from .scenario import UNSET, Scenario, Speculation, resolve_scenario
 from .scheduler import JobPlan, Scheduler, make_scheduler
 from .workers import ChurnProcess, ChurnSchedule, Worker, WorkerPool, draw_batch_time
 
@@ -115,6 +115,7 @@ class EngineReport:
     n_replans: int
     final_n_batches: int
     epoch_times: tuple = ()  # applied churn-event times (epoch boundaries)
+    n_speculative: int = 0  # reactive backup replicas launched
 
     @property
     def compute_times(self) -> np.ndarray:
@@ -136,6 +137,7 @@ class EngineReport:
             "n_worker_failures": int(self.n_worker_failures),
             "n_replicas_rescued": int(self.n_replicas_rescued),
             "n_replans": int(self.n_replans),
+            "n_speculative": int(self.n_speculative),
         }
 
     def stats(self) -> JobTimeStats:
@@ -160,6 +162,11 @@ class _JobExec:
     done: Set[int] = dataclasses.field(default_factory=set)
     # batch -> wids with an in-flight replica of that batch
     outstanding: Dict[int, Set[int]] = dataclasses.field(default_factory=dict)
+    # completed sibling batch durations, in completion order: the running
+    # observations the speculative policy takes its median over
+    obs: List[float] = dataclasses.field(default_factory=list)
+    # speculative backups launched for this job (capped by the policy)
+    spec_used: int = 0
 
     @property
     def batch_tasks(self) -> float:
@@ -226,6 +233,8 @@ class ClusterEngine:
         churn: Optional[ChurnProcess] = None,
         churn_schedule: Optional[ChurnSchedule] = None,
         controller: Optional[OnlineReplanner] = None,
+        speculation: Optional[Speculation] = None,
+        speculation_times: Optional[Sequence[float]] = None,
         scheduler: "str | Scheduler" = "fifo_gang",
         workers_per_job: Optional[int] = None,
     ):
@@ -235,9 +244,15 @@ class ClusterEngine:
             speeds=speeds,
             churn=churn,
             churn_schedule=churn_schedule,
+            speculation=speculation,
             scheduler=scheduler,
             workers_per_job=workers_per_job,
         ).validate(n_workers=n_workers, backend="python", controller=controller)
+        if speculation_times is not None and speculation is None:
+            raise ValueError(
+                "speculation_times (scripted replay epochs) requires the "
+                "speculation=Speculation(...) policy they were recorded under"
+            )
         _scheduler = make_scheduler(scheduler)
         self.pool = WorkerPool(n_workers, speeds)
         self.rng = ev.RngStreams(seed)
@@ -247,6 +262,14 @@ class ClusterEngine:
         self.churn = churn
         self.churn_schedule = churn_schedule
         self.controller = controller
+        self.speculation = speculation
+        self._spec = SpeculativePolicy(speculation) if speculation is not None else None
+        # scripted mode (trace replay): launches happen at the recorded
+        # stamps instead of the policy's self-armed heartbeat grid
+        self._spec_script = tuple(speculation_times) if speculation_times is not None else None
+        self._spec_seq = 0
+        self._spec_armed_t = math.inf
+        self._n_spec = 0
         self.scheduler = _scheduler
         self.workers_per_job = None if workers_per_job is None else int(workers_per_job)
 
@@ -432,6 +455,108 @@ class ClusterEngine:
             self._n_rescued += 1
         self.rescue = collections.deque(remaining)
 
+    # -- speculative backups (reactive replication) --------------------------
+
+    def _spec_pick_worker(self, jexec: _JobExec):
+        """The worker a backup for this job would take: lowest free wid under
+        the gang regime; under space sharing the job's own free workers first,
+        else a free unallocated worker *regranted* into the allocation (the
+        same preference order rescues use).  Returns (worker, regrant)."""
+        free = self.pool.free_workers()
+        if not self.scheduler.space_sharing:
+            return (free[0], False) if free else (None, False)
+        own = [w for w in free if w.wid in jexec.alloc]
+        if own:
+            return self.scheduler.select(1, own, self._load_w)[0], False
+        outside = [w for w in free if w.wid not in self._allocated_wids()]
+        if outside:
+            return self.scheduler.select(1, outside, self._load_w)[0], True
+        return None, False
+
+    def _next_spec_time(self) -> float:
+        """Earliest heartbeat epoch at which some batch earns a backup.
+
+        A pure function of the current state -- the jax epoch scan computes
+        the identical formula on its replica vectors, which is what lets the
+        differential tests demand exact agreement: for every active job with
+        at least ``min_observations`` completed sibling durations, backup
+        budget left, and a worker available to it, each unfinished batch's
+        youngest in-flight replica crosses at ``start + theta x median``;
+        the launch lands on the first heartbeat strictly after the crossing
+        (or after now, when the crossing is already past).
+        """
+        cfg, pol = self.speculation, self._spec
+        best = math.inf
+        for job_id in sorted(self.active):
+            jexec = self.active[job_id]
+            if jexec.spec_used >= cfg.max_backups:
+                continue
+            med = pol.median(jexec.obs)
+            if med is None:
+                continue
+            if self._spec_pick_worker(jexec)[0] is None:
+                continue
+            for batch, wids in jexec.outstanding.items():
+                if batch in jexec.done or not wids:
+                    continue
+                y = max(self.pool[w].busy_since for w in wids)
+                best = min(best, pol.next_epoch(y + cfg.theta * med, self.clock.now))
+        return best
+
+    def _arm_spec(self) -> None:
+        """Re-arm the single outstanding SPEC_CHECK timer after a state
+        change (classic DES timer pattern: a bumped seq invalidates any
+        stale check already on the heap)."""
+        t = self._next_spec_time()
+        if t == self._spec_armed_t:
+            return
+        self._spec_seq += 1
+        self._spec_armed_t = t
+        if math.isfinite(t):
+            self.events.push(t, ev.SPEC_CHECK, seq=self._spec_seq)
+
+    def _on_spec_check(self, seq: Optional[int] = None, scripted: bool = False) -> None:
+        """Launch at most ONE backup: the first lagging (job, batch) in sorted
+        order.  One launch per check keeps every substrate aligned -- the jax
+        scan applies one action per event step, and the live trace stamps each
+        launch separately -- and the re-arm (next recorded stamp) picks up any
+        remaining laggard at the next heartbeat epoch, identically everywhere.
+        """
+        cfg, pol = self.speculation, self._spec
+        if not scripted:
+            if seq != self._spec_seq:
+                return  # stale timer: state changed since it was armed
+            self._spec_armed_t = math.inf  # consumed; the loop re-arms
+        now = self.clock.now
+        for job_id in sorted(self.active):
+            jexec = self.active[job_id]
+            if jexec.spec_used >= cfg.max_backups:
+                continue
+            med = pol.median(jexec.obs)
+            if med is None:
+                continue
+            for batch in sorted(jexec.outstanding):
+                wids = jexec.outstanding[batch]
+                if batch in jexec.done or not wids:
+                    continue
+                y = max(self.pool[w].busy_since for w in wids)
+                if not pol.lagging(now - y, med):
+                    continue
+                worker, regrant = self._spec_pick_worker(jexec)
+                if worker is None:
+                    break
+                if regrant:
+                    jexec.alloc.add(worker.wid)
+                self._assign(worker, jexec, batch)
+                jexec.spec_used += 1
+                self._n_spec += 1
+                return
+        if scripted:
+            raise RuntimeError(
+                "speculation replay diverged: the trace recorded a backup "
+                f"launch at t={now} but no batch is eligible under the policy"
+            )
+
     # -- event handlers -----------------------------------------------------
 
     def _release(self, worker: Worker) -> None:
@@ -470,6 +595,9 @@ class ClusterEngine:
 
         if batch not in jexec.done:
             jexec.done.add(batch)
+            # the batch's first completion is a sibling-duration observation
+            # for the speculative policy's running median
+            jexec.obs.append(duration)
             if jexec.cancel:
                 for sib_wid in sorted(jexec.outstanding[batch]):
                     sib = self.pool[sib_wid]
@@ -576,6 +704,11 @@ class ClusterEngine:
             self.events.push(job.arrival, ev.JOB_ARRIVAL, job=job)
         for worker in self.pool:
             self._schedule_failure(worker)
+        if self._spec_script is not None:
+            # trace replay: launches happen at the recorded stamps; the
+            # engine re-derives which batch and which worker from the policy
+            for t in self._spec_script:
+                self.events.push(t, ev.SPEC_CHECK, scripted=True)
         if self.churn_schedule is not None:
             # replay the explicit timeline: the k-th event of worker w expects
             # churn_epoch k (transitions are schedule-driven only, so the
@@ -609,8 +742,12 @@ class ClusterEngine:
                 self._on_worker_fail(**payload)
             elif kind == ev.WORKER_JOIN:
                 self._on_worker_join(**payload)
+            elif kind == ev.SPEC_CHECK:
+                self._on_spec_check(**payload)
             else:  # pragma: no cover - no other kinds are ever pushed
                 raise RuntimeError(f"unknown event kind {kind!r}")
+            if self._spec is not None and self._spec_script is None:
+                self._arm_spec()
 
         # flush replicas still in flight: their full duration is committed
         # worker time (it will burn whether or not we simulate it), which
@@ -660,6 +797,7 @@ class ClusterEngine:
             n_replans=len(self.controller.history) if self.controller else 0,
             final_n_batches=last_b,
             epoch_times=tuple(self._epoch_times),
+            n_speculative=self._n_spec,
         )
 
 
@@ -684,6 +822,7 @@ def sample_job_times(
     churn_schedule=UNSET,
     controller: Optional[OnlineReplanner] = None,
     replan=UNSET,
+    speculation=UNSET,
     scheduler=UNSET,
     workers_per_job=UNSET,
     job_plans=UNSET,
@@ -745,6 +884,7 @@ def sample_job_times(
             "churn_schedule": churn_schedule,
             "churn_pairs_per_worker": churn_pairs_per_worker,
             "replan": replan,
+            "speculation": speculation,
             "scheduler": scheduler,
             "workers_per_job": workers_per_job,
             "job_plans": job_plans,

@@ -36,8 +36,9 @@ import math
 import time
 from typing import Dict, List, Optional, Sequence, Set, Tuple
 
+from ..control import SpeculativePolicy
 from ..master import JobRecord
-from ..scenario import Scenario
+from ..scenario import UNSET, Scenario, resolve_scenario
 from ..scheduler import JobPlan
 from .protocol import read_msg, send_nowait
 from .trace import TICK, TraceRecorder, quantize, trace_accounting
@@ -88,6 +89,7 @@ class LiveReport:
     n_replicas_rescued: int
     trace: tuple
     completion_order: Tuple[int, ...]
+    n_speculative: int = 0
 
     def accounting(self) -> dict:
         """Same key set as :meth:`~repro.cluster.master.EngineReport.accounting`."""
@@ -97,6 +99,7 @@ class LiveReport:
             "n_worker_failures": int(self.n_worker_failures),
             "n_replicas_rescued": int(self.n_replicas_rescued),
             "n_replans": 0,
+            "n_speculative": int(self.n_speculative),
         }
 
 
@@ -112,6 +115,9 @@ class _LiveWorker:
     scheduled_end: float = math.inf
     last_hb: float = 0.0  # raw monotonic, detection only
     lease_deadline: float = math.inf  # raw monotonic, detection only
+    # latest heartbeat-reported progress fraction for the CURRENT assignment
+    # (None until the worker proves it is actually executing the replica)
+    progress: Optional[float] = None
 
     @property
     def free(self) -> bool:
@@ -127,6 +133,10 @@ class _LiveExec:
     cancel: bool
     done: Set[int] = dataclasses.field(default_factory=set)
     outstanding: Dict[int, Set[int]] = dataclasses.field(default_factory=dict)
+    # completed sibling durations (the speculative policy's running median)
+    # and the per-job backup budget consumed, mirroring the engine's _JobExec
+    obs: List[float] = dataclasses.field(default_factory=list)
+    spec_used: int = 0
 
     @property
     def complete(self) -> bool:
@@ -174,10 +184,20 @@ class RuntimeMaster:
         heartbeat_timeout_s: float = 0.5,
         lease_factor: float = 8.0,
         lease_floor_s: float = 2.0,
+        n_batches=UNSET,
+        cancel_redundant=UNSET,
+        speculation=UNSET,
     ):
-        self.scenario = _validate_runtime_scenario(
-            scenario if scenario is not None else Scenario(), n_workers
+        sc = resolve_scenario(
+            scenario,
+            {
+                "n_batches": n_batches,
+                "cancel_redundant": cancel_redundant,
+                "speculation": speculation,
+            },
+            where="RuntimeMaster",
         )
+        self.scenario = _validate_runtime_scenario(sc, n_workers)
         self.n_workers = int(n_workers)
         self.host = host
         self._port_req = int(port)
@@ -187,6 +207,15 @@ class RuntimeMaster:
         self.lease_floor_s = float(lease_floor_s)
 
         self.recorder = TraceRecorder()
+        # first trace event: the originating scenario + worker budget, so a
+        # trace file alone is replayable (replay_trace re-reads it when the
+        # caller passes neither n_workers nor scenario)
+        self.recorder.record(
+            "scenario",
+            self.recorder.stamp(),
+            n_workers=self.n_workers,
+            scenario=self.scenario.to_dict(),
+        )
         self.workers: List[_LiveWorker] = []
         self.queue: List[LiveJob] = []
         self.active: Dict[int, _LiveExec] = {}
@@ -199,10 +228,17 @@ class RuntimeMaster:
         self._saved = 0.0
         self._n_failures = 0
         self._n_rescued = 0
+        self._n_spec = 0
+        self._spec_policy = (
+            SpeculativePolicy(self.scenario.speculation)
+            if self.scenario.speculation is not None
+            else None
+        )
         self._n_jobs_expected = 0
         self._finalized = False
         self._server: Optional[asyncio.base_events.Server] = None
         self._watchdog_task: Optional[asyncio.Task] = None
+        self._spec_task: Optional[asyncio.Task] = None
         self._all_joined = asyncio.Event()
         self._done = asyncio.Event()
         self._ran = False
@@ -213,6 +249,8 @@ class RuntimeMaster:
         self._server = await asyncio.start_server(self._handle_conn, self.host, self._port_req)
         self.port = self._server.sockets[0].getsockname()[1]
         self._watchdog_task = asyncio.ensure_future(self._watchdog())
+        if self._spec_policy is not None:
+            self._spec_task = asyncio.ensure_future(self._spec_loop())
         return self.port
 
     async def wait_for_workers(self, timeout_s: float = 30.0) -> None:
@@ -240,11 +278,14 @@ class RuntimeMaster:
             n_replicas_rescued=self._n_rescued,
             trace=self.recorder.events,
             completion_order=tuple(self.completion_order),
+            n_speculative=self._n_spec,
         )
 
     async def close(self) -> None:
         if self._watchdog_task is not None:
             self._watchdog_task.cancel()
+        if self._spec_task is not None:
+            self._spec_task.cancel()
         for w in self.workers:
             try:
                 send_nowait(w.writer, {"type": "shutdown"})
@@ -281,6 +322,13 @@ class RuntimeMaster:
             kind = msg["type"]
             if kind == "hb":
                 worker.last_hb = time.monotonic()
+                if (
+                    worker.assignment is not None
+                    and msg.get("job") == worker.assignment[0]
+                    and msg.get("batch") == worker.assignment[1]
+                    and msg.get("epoch") == worker.epoch
+                ):
+                    worker.progress = float(msg.get("frac", 0.0))
             elif kind == "finish":
                 self._on_finish(worker, msg)
 
@@ -297,6 +345,60 @@ class RuntimeMaster:
                     self._fail(w, "heartbeat")
                 elif w.assignment is not None and now_m > w.lease_deadline:
                     self._fail(w, "lease")
+
+    # -- speculative backups (reactive replication, engine-aligned) ----------
+
+    async def _spec_loop(self) -> None:
+        """Heartbeat-epoch timer for the speculative policy: every interval,
+        look for a laggard and back at most one up (one stamped launch per
+        firing, the engine's rule)."""
+        interval = self.scenario.speculation.interval
+        while True:
+            await asyncio.sleep(interval)
+            if not self._finalized:
+                self._spec_check()
+
+    def _spec_check(self) -> None:
+        """Launch at most ONE backup: the first lagging (job, batch) in
+        sorted order, on the lowest-wid free worker -- decision-for-decision
+        the engine's ``_on_spec_check``, evaluated at one grid stamp so
+        :func:`~repro.cluster.runtime.trace.replay_trace` can feed the stamp
+        to the engine as a scripted ``speculation_times`` epoch and re-derive
+        the identical launch.
+
+        On top of the engine's policy the live master demands *partial
+        progress*: every outstanding replica of the laggard must have
+        heartbeat-reported progress on its current assignment.  A replica
+        that never reported is the failure detector's problem, not the
+        speculator's.  The gate only suppresses a launch (no stamp, so the
+        replay never checks it); it can never redirect one, which is what
+        keeps the scripted replay exact.
+        """
+        cfg, pol = self.scenario.speculation, self._spec_policy
+        now = self.recorder.stamp()
+        for job_id in sorted(self.active):
+            jexec = self.active[job_id]
+            if jexec.spec_used >= cfg.max_backups:
+                continue
+            med = pol.median(jexec.obs)
+            if med is None:
+                continue
+            for batch in sorted(jexec.outstanding):
+                wids = jexec.outstanding[batch]
+                if batch in jexec.done or not wids:
+                    continue
+                y = max(self.workers[w].busy_since for w in wids)
+                if not pol.lagging(now - y, med):
+                    continue
+                if any(self.workers[w].progress is None for w in wids):
+                    return  # laggard found but unproven: no launch this epoch
+                free = self._free_workers()
+                if not free:
+                    return
+                jexec.spec_used += 1
+                self._n_spec += 1
+                self._assign(free[0], jexec, batch, now, rescue=False, spec=True)
+                return
 
     # -- plan resolution (the engine's precedence, verbatim) -----------------
 
@@ -354,6 +456,10 @@ class RuntimeMaster:
         jexec.outstanding[batch].discard(worker.wid)
         if batch not in jexec.done:
             jexec.done.add(batch)
+            # the batch's first completion is a sibling-duration observation
+            # for the speculative policy's running median (engine-identical:
+            # grid-stamped finish minus grid-stamped dispatch)
+            jexec.obs.append(now - worker.busy_since)
             if jexec.cancel:
                 for sib_wid in sorted(jexec.outstanding[batch]):
                     self._cancel_replica(self.workers[sib_wid], now)
@@ -424,7 +530,14 @@ class RuntimeMaster:
             self._n_rescued += 1
 
     def _assign(
-        self, worker: _LiveWorker, jexec: _LiveExec, batch: int, now: float, *, rescue: bool
+        self,
+        worker: _LiveWorker,
+        jexec: _LiveExec,
+        batch: int,
+        now: float,
+        *,
+        rescue: bool,
+        spec: bool = False,
     ) -> None:
         costs = jexec.job.batch_costs(batch, jexec.n_batches)
         # per-replica expectation: the master schedules with the worker's
@@ -435,6 +548,7 @@ class RuntimeMaster:
         worker.assignment = (jexec.job.job_id, batch)
         worker.busy_since = now
         worker.scheduled_end = now + planned
+        worker.progress = None
         worker.lease_deadline = time.monotonic() + max(
             self.lease_floor_s, planned * self.lease_factor
         )
@@ -447,6 +561,7 @@ class RuntimeMaster:
             batch=batch,
             planned=planned,
             rescue=rescue,
+            spec=spec,
         )
         send_nowait(
             worker.writer,
@@ -469,6 +584,7 @@ class RuntimeMaster:
         worker.assignment = None
         worker.scheduled_end = math.inf
         worker.lease_deadline = math.inf
+        worker.progress = None
 
     def _cancel_replica(self, sib: _LiveWorker, now: float) -> None:
         job_id, batch = sib.assignment
@@ -562,11 +678,22 @@ class Runtime:
         heartbeat_s: float = 0.05,
         heartbeat_timeout_s: float = 0.5,
         host: str = "127.0.0.1",
+        n_batches=UNSET,
+        cancel_redundant=UNSET,
+        speculation=UNSET,
     ):
         if spawn not in ("thread", "subprocess"):
             raise ValueError(f"spawn must be 'thread' or 'subprocess', got {spawn!r}")
         self.n_workers = int(n_workers)
-        self.scenario = scenario
+        self.scenario = resolve_scenario(
+            scenario,
+            {
+                "n_batches": n_batches,
+                "cancel_redundant": cancel_redundant,
+                "speculation": speculation,
+            },
+            where="Runtime",
+        )
         self.spawn = spawn
         self.heartbeat_s = heartbeat_s
         self.heartbeat_timeout_s = heartbeat_timeout_s

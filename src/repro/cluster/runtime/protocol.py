@@ -12,7 +12,7 @@ type       fields                                                  direction
 ========== ======================================================= =========
 register   pid                                                     w -> m
 welcome    wid, heartbeat_s                                        m -> w
-hb         wid                                                     w -> m
+hb         wid [, job, batch, epoch, frac -- progress when busy]   w -> m
 task       job, batch, epoch, payload, costs, lease_s              m -> w
 finish     wid, job, batch, epoch                                  w -> m
 cancel     job, batch, epoch                                       m -> w

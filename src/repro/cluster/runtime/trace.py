@@ -16,9 +16,13 @@ order the live master processed them.
 Event vocabulary (``ev`` field):
 
 =========  =============================================================
+scenario   first event: the originating Scenario (t, n_workers,
+           scenario = ``Scenario.to_dict()``) -- a trace file alone is
+           replayable
 join       worker registered (t, wid)
 submit     job entered the queue (t, job, n_tasks, plan)
-dispatch   replica placed on a worker (t, wid, job, batch, planned, rescue)
+dispatch   replica placed on a worker (t, wid, job, batch, planned,
+           rescue, spec -- ``spec=True`` marks a speculative backup)
 finish     replica's finish processed (t, wid, job, batch)
 cancel     outstanding sibling reclaimed (t, wid, job, batch, sched_end)
 fail       worker declared dead (t, wid, cause: eof|heartbeat|lease)
@@ -110,6 +114,7 @@ def trace_accounting(events) -> dict:
     saved = 0.0
     n_failures = 0
     n_rescued = 0
+    n_spec = 0
     busy: Dict[int, dict] = {}  # wid -> its open dispatch event
     for e in events:
         kind = e["ev"]
@@ -117,6 +122,8 @@ def trace_accounting(events) -> dict:
             busy[e["wid"]] = e
             if e["rescue"]:
                 n_rescued += 1
+            if e.get("spec"):
+                n_spec += 1
         elif kind == "finish":
             d = busy.pop(e["wid"])
             ws += e["t"] - d["t"]
@@ -138,6 +145,7 @@ def trace_accounting(events) -> dict:
         "n_worker_failures": n_failures,
         "n_replicas_rescued": n_rescued,
         "n_replans": 0,
+        "n_speculative": n_spec,
     }
 
 
@@ -211,7 +219,7 @@ def _scripted_durations(events) -> Tuple[float, ...]:
     return tuple(durations)
 
 
-def replay_trace(events, n_workers: int, scenario=None):
+def replay_trace(events, n_workers: Optional[int] = None, scenario=None):
     """Replay a recorded runtime trace through the discrete-event engine.
 
     Builds the identical workload the live master saw -- same arrival
@@ -221,17 +229,36 @@ def replay_trace(events, n_workers: int, scenario=None):
     decisions; if runtime and engine implement the same semantics, the
     report's accounting and job records equal the live ones bit for bit.
 
-    ``scenario`` is the same :class:`~repro.cluster.scenario.Scenario` the
-    runtime ran (engine-wide ``n_batches`` / ``cancel_redundant``); per-job
-    :class:`~repro.cluster.scheduler.JobPlan` overrides ride in the trace's
-    ``submit`` events.
+    ``scenario`` / ``n_workers`` default to the trace's embedded
+    ``scenario`` event (the master records its originating
+    :class:`~repro.cluster.scenario.Scenario` and worker budget as the
+    first event), so ``replay_trace(events)`` works on a bare trace file;
+    per-job :class:`~repro.cluster.scheduler.JobPlan` overrides ride in the
+    trace's ``submit`` events.
+
+    Speculative launches replay *scripted*: each live launch stamp becomes
+    a ``speculation_times`` epoch, and the engine re-derives the target
+    batch and worker under the same policy -- a divergence raises instead
+    of silently misaligning the schedule.
     """
     from ..master import ClusterEngine, Job
     from ..scenario import Scenario
     from ..scheduler import JobPlan
     from ..workers import ChurnSchedule
 
-    sc = scenario if scenario is not None else Scenario()
+    embedded = next((e for e in events if e["ev"] == "scenario"), None)
+    sc = scenario
+    if sc is None and embedded is not None:
+        sc = Scenario.from_dict(embedded["scenario"])
+    if sc is None:
+        sc = Scenario()
+    if n_workers is None:
+        if embedded is None:
+            raise ValueError(
+                "replay_trace: n_workers is required when the trace has no "
+                "embedded scenario event"
+            )
+        n_workers = int(embedded["n_workers"])
     dist = _ScriptedService(_scripted_durations(events))
 
     jobs = []
@@ -261,6 +288,14 @@ def replay_trace(events, n_workers: int, scenario=None):
             wids=tuple(fail_wids),
             ups=(False,) * len(fail_times),
         )
+    spec_times = tuple(
+        e["t"] for e in events if e["ev"] == "dispatch" and e.get("spec")
+    )
+    if spec_times and sc.speculation is None:
+        raise ValueError(
+            "replay_trace: the trace stamps speculative launches but the "
+            "scenario carries no Speculation policy"
+        )
     engine = ClusterEngine(
         n_workers,
         seed=0,  # the scripted service ignores the rng; nothing else draws
@@ -268,6 +303,9 @@ def replay_trace(events, n_workers: int, scenario=None):
         cancel_redundant=sc.cancel_redundant,
         size_dependent=False,  # scripted draws are wall-clock durations
         churn_schedule=schedule,
+        speculation=sc.speculation,
+        # scripted replay: launch exactly at the live stamps, never self-arm
+        speculation_times=spec_times if sc.speculation is not None else None,
     )
     report = engine.run(jobs)
     if dist.cursor != len(dist.durations):

@@ -60,11 +60,22 @@ async def run_payload(payload: str, costs, factor: float = 1.0) -> None:
         raise ValueError(f"unknown payload kind {payload!r}")
 
 
-async def _heartbeat(writer, wid: int, interval_s: float) -> None:
+async def _heartbeat(writer, wid: int, interval_s: float, state: dict) -> None:
+    """Heartbeats double as progress reports: while a replica is running,
+    each beat carries its (job, batch, epoch) and the fraction of the
+    nominal cost elapsed -- the partial-progress evidence the master's
+    speculative policy requires before it backs a laggard up."""
     try:
         while True:
             await asyncio.sleep(interval_s)
-            await send_msg(writer, {"type": "hb", "wid": wid})
+            msg = {"type": "hb", "wid": wid}
+            cur = state.get("current")
+            if cur is not None:
+                total = state["total"]
+                elapsed = time.monotonic() - state["t0"]
+                frac = 1.0 if total <= 0.0 else min(elapsed / total, 1.0)
+                msg.update(job=cur["job"], batch=cur["batch"], epoch=cur["epoch"], frac=frac)
+            await send_msg(writer, msg)
     except (ConnectionError, RuntimeError):
         return  # the master tore the socket down; the read loop will exit too
 
@@ -78,7 +89,8 @@ async def worker_loop(host: str, port: int) -> None:
         writer.close()
         return
     wid = int(welcome["wid"])
-    hb = asyncio.ensure_future(_heartbeat(writer, wid, float(welcome["heartbeat_s"])))
+    state: dict = {"current": None, "t0": 0.0, "total": 0.0}
+    hb = asyncio.ensure_future(_heartbeat(writer, wid, float(welcome["heartbeat_s"]), state))
     current: dict | None = None
     task: asyncio.Task | None = None
 
@@ -100,6 +112,9 @@ async def worker_loop(host: str, port: int) -> None:
             raise
         except Exception:
             return  # broken payload or torn socket: no finish; the lease reaps it
+        finally:
+            if state.get("current") is msg:
+                state["current"] = None
 
     try:
         while True:
@@ -108,6 +123,10 @@ async def worker_loop(host: str, port: int) -> None:
                 break
             if msg["type"] == "task":
                 current = msg
+                factor = 1.0 + wid * float(msg.get("skew", 0.0))
+                state["current"] = msg
+                state["t0"] = time.monotonic()
+                state["total"] = float(sum(msg["costs"])) * factor
                 task = asyncio.ensure_future(execute(msg))
             elif msg["type"] == "cancel":
                 if (
@@ -117,6 +136,7 @@ async def worker_loop(host: str, port: int) -> None:
                     == (msg["job"], msg["batch"], msg["epoch"])
                 ):
                     task.cancel()
+                    state["current"] = None
     finally:
         hb.cancel()
         if task is not None:
@@ -147,9 +167,15 @@ def spawn_worker_subprocess(host: str, port: int) -> subprocess.Popen:
     spawn order: to kill a specific wid, look up its registered pid on the
     master (``master.workers[wid].pid``) rather than indexing the Popens.
     """
+    env = os.environ.copy()
+    # make repro importable in the child even when it is not installed
+    # (e.g. pytest's `pythonpath` ini only patches the parent's sys.path)
+    here = os.path.abspath(__file__)
+    pkg_root = os.path.dirname(os.path.dirname(os.path.dirname(os.path.dirname(here))))
+    env["PYTHONPATH"] = pkg_root + os.pathsep + env.get("PYTHONPATH", "")
     return subprocess.Popen(
         [sys.executable, "-m", "repro.cluster.runtime", host, str(port)],
-        env=os.environ.copy(),
+        env=env,
     )
 
 

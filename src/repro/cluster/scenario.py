@@ -27,6 +27,7 @@ processes what ``sample_job_times(scenario=...)`` simulates.
 from __future__ import annotations
 
 import dataclasses
+import json
 import warnings
 from typing import TYPE_CHECKING, Optional, Tuple, Union
 
@@ -37,7 +38,7 @@ if TYPE_CHECKING:  # pragma: no cover - annotation-only (avoids an import cycle
     # with epoch_scan, which routes its validation through this module)
     from .epoch_scan import ReplanConfig
 
-__all__ = ["Scenario", "UNSET", "resolve_scenario"]
+__all__ = ["Scenario", "Speculation", "UNSET", "resolve_scenario"]
 
 
 class _Unset:
@@ -67,6 +68,7 @@ _LEGACY_FIELDS = (
     "churn_schedule",
     "churn_pairs_per_worker",
     "replan",
+    "speculation",
     "scheduler",
     "workers_per_job",
     "job_plans",
@@ -75,6 +77,43 @@ _LEGACY_FIELDS = (
     "rep_chunk",
     "devices",
 )
+
+
+@dataclasses.dataclass(frozen=True)
+class Speculation:
+    """Reactive (speculative) replication policy: MapReduce backup tasks.
+
+    Per-task progress is observed at *heartbeat epochs* -- the time grid
+    ``k * interval`` in simulation, the workers' progress heartbeats in the
+    live runtime.  A batch whose youngest in-flight replica has been running
+    longer than ``theta x`` the running median of its completed siblings'
+    durations gets a backup replica launched on a free worker at the first
+    heartbeat epoch strictly after the crossing.  The backup races its
+    sibling under the usual earliest-cover rule (and is reclaimed by
+    ``cancel_redundant`` like any other redundant replica).
+
+    ``min_observations`` completed sibling batches are required before the
+    median is trusted; ``max_backups`` caps speculative launches per job.
+    Launches are opportunistic: a laggard with no free worker available is
+    reconsidered at the first heartbeat after one frees up.
+    """
+
+    interval: float = 0.25
+    theta: float = 1.5
+    min_observations: int = 1
+    max_backups: int = 1
+
+    def __post_init__(self):
+        if not (self.interval > 0.0):
+            raise ValueError(f"Speculation.interval: must be > 0, got {self.interval}")
+        if not (self.theta > 0.0):
+            raise ValueError(f"Speculation.theta: must be > 0, got {self.theta}")
+        if self.min_observations < 1:
+            raise ValueError(
+                f"Speculation.min_observations: must be >= 1, got {self.min_observations}"
+            )
+        if self.max_backups < 1:
+            raise ValueError(f"Speculation.max_backups: must be >= 1, got {self.max_backups}")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -105,6 +144,7 @@ class Scenario:
     churn_schedule: Optional[ChurnSchedule] = None
     churn_pairs_per_worker: int = 8
     replan: Optional[ReplanConfig] = None
+    speculation: Optional[Speculation] = None
     scheduler: Union[str, Scheduler] = "fifo_gang"
     workers_per_job: Optional[int] = None
     job_plans: Optional[Tuple[Optional[JobPlan], ...]] = None
@@ -143,6 +183,7 @@ class Scenario:
             or self.churn is not None
             or self.churn_schedule is not None
             or self.replan is not None
+            or self.speculation is not None
         )
 
     # -- the single validation path ------------------------------------------
@@ -222,6 +263,24 @@ class Scenario:
                     "backend='jax' (ring push bound); the Python engine has no "
                     "such floor"
                 )
+        if self.speculation is not None:
+            if not isinstance(self.speculation, Speculation):
+                raise ValueError(
+                    f"Scenario.speculation: expected a Speculation, got {type(self.speculation)}"
+                )
+            if self.replan is not None or controller is not None:
+                raise ValueError(
+                    "Scenario.speculation: speculative backups and online "
+                    "replanning are mutually exclusive adaptive policies -- "
+                    "pass one of speculation / replan (controller)"
+                )
+            if backend == "jax" and self.is_space:
+                raise ValueError(
+                    "Scenario.speculation: speculative backups under "
+                    "space-sharing schedulers / per-job plans run on "
+                    "backend='python' only (the jax lane implements the gang "
+                    "regime)"
+                )
         if not isinstance(self.scheduler, Scheduler) and self.scheduler not in SCHEDULERS:
             raise ValueError(
                 f"Scenario.scheduler: unknown scheduler {self.scheduler!r} "
@@ -297,6 +356,7 @@ class Scenario:
             "churn": self.churn,
             "churn_schedule": self.churn_schedule,
             "controller": controller,
+            "speculation": self.speculation,
             "scheduler": self.scheduler,
             "workers_per_job": self.workers_per_job,
         }
@@ -314,6 +374,7 @@ class Scenario:
             "churn_schedule": self.churn_schedule,
             "churn_pairs_per_worker": self.churn_pairs_per_worker,
             "replan": self.replan,
+            "speculation": self.speculation,
             "scheduler": self.scheduler_name,
             "workers_per_job": self.workers_per_job,
             "job_plans": self.job_plans,
@@ -329,7 +390,120 @@ class Scenario:
         return self.job_plans[i % len(self.job_plans)]
 
     def replace(self, **changes) -> "Scenario":
+        """A modified copy: ``sc.replace(cancel_redundant=True)`` -- the
+        ergonomic way to derive scenario variants from a base spec."""
         return dataclasses.replace(self, **changes)
+
+    # -- serialization (Scenario v2 JSON) ------------------------------------
+    #
+    # Schema: a flat object of the dataclass fields plus ``"version": 2``.
+    # Nested configs serialize as tagged objects -- ``dist`` as
+    # ``{"kind": "<ServiceTime subclass>", ...fields}``; ``churn`` /
+    # ``churn_schedule`` / ``replan`` / ``speculation`` as their dataclass
+    # fields; ``job_plans`` as a list of JobPlan objects or nulls;
+    # ``scheduler`` as its registry name.  Floats ride through ``json`` via
+    # ``repr`` shortest-round-trip, so ``from_json(to_json())`` is *exact*,
+    # not approximate -- the property the trace-embeds rely on.
+
+    def to_dict(self) -> dict:
+        out = {"version": 2}
+        for f in dataclasses.fields(self):
+            out[f.name] = _encode_field(f.name, getattr(self, f.name))
+        return out
+
+    def to_json(self, *, indent: Optional[int] = None) -> str:
+        """Serialize to JSON; ``Scenario.from_json`` round-trips exactly."""
+        return json.dumps(self.to_dict(), indent=indent)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "Scenario":
+        d = dict(d)
+        version = d.pop("version", None)
+        if version != 2:
+            raise ValueError(f"Scenario.from_dict: unsupported schema version {version!r}")
+        known = {f.name for f in dataclasses.fields(cls)}
+        unknown = set(d) - known
+        if unknown:
+            raise ValueError(f"Scenario.from_dict: unknown fields {sorted(unknown)}")
+        return cls(**{k: _decode_field(k, v) for k, v in d.items()})
+
+    @classmethod
+    def from_json(cls, s: str) -> "Scenario":
+        return cls.from_dict(json.loads(s))
+
+
+def _dist_registry() -> dict:
+    from ..core import service_time as st
+
+    return {
+        "Exponential": st.Exponential,
+        "ShiftedExponential": st.ShiftedExponential,
+        "Pareto": st.Pareto,
+        "Empirical": st.Empirical,
+    }
+
+
+def _encode_field(name: str, v):
+    if v is None:
+        return None
+    if name == "dist":
+        kind = type(v).__name__
+        if kind not in _dist_registry():
+            raise ValueError(
+                f"Scenario.dist: cannot serialize {kind} (expected one of "
+                f"{sorted(_dist_registry())})"
+            )
+        out = {"kind": kind}
+        out.update(
+            {k: (list(x) if isinstance(x, tuple) else x) for k, x in dataclasses.asdict(v).items()}
+        )
+        return out
+    if name in ("churn", "churn_schedule", "replan", "speculation"):
+        return {k: (list(x) if isinstance(x, tuple) else x) for k, x in dataclasses.asdict(v).items()}
+    if name == "scheduler":
+        if isinstance(v, Scheduler):
+            if v.name not in SCHEDULERS:
+                raise ValueError(
+                    f"Scenario.scheduler: cannot serialize unregistered scheduler {v.name!r}"
+                )
+            return v.name
+        return v
+    if name == "job_plans":
+        return [None if p is None else dataclasses.asdict(p) for p in v]
+    if name == "speeds":
+        return list(v)
+    return v
+
+
+def _decode_field(name: str, v):
+    if v is None:
+        return None
+    if name == "dist":
+        d = dict(v)
+        kind = d.pop("kind", None)
+        reg = _dist_registry()
+        if kind not in reg:
+            raise ValueError(f"Scenario.dist: unknown distribution kind {kind!r}")
+        if "samples" in d:
+            d["samples"] = tuple(d["samples"])
+        return reg[kind](**d)
+    if name == "churn":
+        return ChurnProcess(**v)
+    if name == "churn_schedule":
+        return ChurnSchedule(
+            times=tuple(v["times"]), wids=tuple(v["wids"]), ups=tuple(v["ups"])
+        )
+    if name == "replan":
+        from .epoch_scan import ReplanConfig
+
+        return ReplanConfig(**v)
+    if name == "speculation":
+        return Speculation(**v)
+    if name == "job_plans":
+        return tuple(None if p is None else JobPlan(**p) for p in v)
+    if name == "speeds":
+        return tuple(v)
+    return v
 
 
 def resolve_scenario(

@@ -176,6 +176,7 @@ class RedundancyPlanner:
         churn=_UNSET,
         churn_schedule=_UNSET,
         replan=_UNSET,
+        speculation=_UNSET,
         scheduler=_UNSET,
         workers_per_job=_UNSET,
         job_plans=_UNSET,
@@ -199,9 +200,11 @@ class RedundancyPlanner:
         ``repro.cluster.vectorized`` when the cluster is static, or the
         bounded epoch-scan step loop of ``repro.cluster.epoch_scan`` once any dynamic
         knob is set -- ``speeds`` (heterogeneous workers), ``churn`` /
-        ``churn_schedule`` (fail/join dynamics with replica rescue), or
+        ``churn_schedule`` (fail/join dynamics with replica rescue),
         ``replan`` (a :class:`~repro.cluster.epoch_scan.ReplanConfig` running
-        the windowed online replanner while candidates are scored).  No
+        the windowed online replanner while candidates are scored), or
+        ``speculation`` (a :class:`~repro.cluster.scenario.Speculation`
+        policy launching reactive backups for laggards).  No
         scenario falls back to the Python engine.  ``backend="python"`` runs
         the event-driven engine per candidate over the same knobs -- the
         reference the differential tests compare against.  Replica
@@ -253,6 +256,7 @@ class RedundancyPlanner:
                     "churn_schedule": churn_schedule,
                     "churn_pairs_per_worker": churn_pairs_per_worker,
                     "replan": replan,
+                    "speculation": speculation,
                     "scheduler": scheduler,
                     "workers_per_job": workers_per_job,
                     "job_plans": job_plans,
@@ -408,6 +412,7 @@ def plan_sweep(
     churn=_UNSET,
     churn_schedule=_UNSET,
     replan=_UNSET,
+    speculation=_UNSET,
     scheduler=_UNSET,
     workers_per_job=_UNSET,
     job_plans=_UNSET,
@@ -469,6 +474,7 @@ def plan_sweep(
             "churn": churn,
             "churn_schedule": churn_schedule,
             "replan": replan,
+            "speculation": speculation,
             "scheduler": scheduler,
             "workers_per_job": workers_per_job,
             "job_plans": job_plans,

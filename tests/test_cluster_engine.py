@@ -78,6 +78,7 @@ def test_churn_schedule_replay_and_epoch_fields():
         "n_worker_failures",
         "n_replicas_rescued",
         "n_replans",
+        "n_speculative",
     }
 
 

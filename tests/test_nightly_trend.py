@@ -37,18 +37,23 @@ def test_multi_file_mode_renders_one_row_per_run_in_order():
     ).stdout
     lines = [ln for ln in out.splitlines() if ln.startswith("|")]
     # header + separator + one row per fixture run
-    assert len(lines) == 2 + 3, out
+    assert len(lines) == 2 + 4, out
     body = lines[2:]
-    # natural (chronological) order: 101 < 102 < 110, and the nested
+    # natural (chronological) order: 101 < 102 < 110 < 120, and the nested
     # gh-run-download layout is labelled by its run directory
     assert body[0].startswith("| run-101 ")
     assert body[1].startswith("| run-102 ")
     assert body[2].startswith("| run-110 ")
+    assert body[3].startswith("| run-120 ")
     # the load-bearing series render with their units
     assert "91x" in body[0] and "0.41x" in body[0] and "12.81x" in body[0]
     assert "37x" in body[1] and "0.39x" in body[1]
     # run-110 predates the space_sharing section: dashes, not a crash
     assert " -..- " in body[2] and "12.50x" in body[2]
+    # the speculation column: values where the section exists, dashes before
+    assert "1.31x/1.88x" in body[1]
+    assert body[2].rstrip().endswith("| -/- |")
+    assert "1.42x/1.95x" in body[3]
 
 
 def test_mixed_dir_and_file_args(tmp_path):
@@ -82,7 +87,7 @@ def test_mixed_dir_and_file_args(tmp_path):
         check=True,
     ).stdout
     body = [ln for ln in out.splitlines() if ln.startswith("|")][2:]  # drop header rows
-    assert len(body) == 4
+    assert len(body) == 5
     assert body[-1].startswith("| cluster-bench-full ")
     assert "0.35x" in body[-1]
 
@@ -93,6 +98,47 @@ def test_empty_history_is_an_error_not_a_crash(tmp_path):
     )
     assert r.returncode == 1
     assert "no bench JSONs" in r.stderr
+
+
+def test_svg_flag_writes_sparklines(tmp_path):
+    svg_path = tmp_path / "plots" / "trend.svg"
+    r = subprocess.run(
+        [sys.executable, str(SCRIPT), str(FIXTURE), "--svg", str(svg_path)],
+        capture_output=True,
+        text=True,
+        check=True,
+    )
+    assert f"wrote {svg_path}" in r.stderr
+    svg = svg_path.read_text()
+    assert svg.startswith("<svg ") and svg.endswith("</svg>")
+    # one labelled sparkline per load-bearing series, speculation included
+    for label in (
+        "static edge (min)",
+        "dynamic edge (min)",
+        "space edge (min)",
+        "packed/gang response",
+        "dynamic cold (s)",
+        "heavy-tail speedup",
+        "spec pareto (react)",
+        "spec pareto (hybrid)",
+    ):
+        assert label in svg
+    # series present in every fixture run draw a 4-point polyline; the
+    # 2-point speculation series still draws a line and its latest value
+    assert svg.count("<polyline") >= 7
+    assert "1.42" in svg and "1.95" in svg
+
+
+def test_sparkline_svg_handles_missing_and_single_point_series():
+    nt = _mod()
+    rows = [
+        ("run-1", {"backend": {"min_speedup_warm": 90.0}}),
+        ("run-2", {"speculation": {"pareto_speculative_speedup": 1.4}}),
+    ]
+    svg = nt.sparkline_svg(rows)
+    # the single-point series renders a dot (no polyline), never crashes
+    assert "<circle" in svg
+    assert "spec pareto (react)" in svg and "1.40" in svg
 
 
 def test_label_and_natkey_helpers():

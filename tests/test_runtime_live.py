@@ -139,6 +139,66 @@ def test_trace_fold_matches_live_counters():
 
 
 # --------------------------------------------------------------------------
+# speculative backups from partial progress -> scripted exact replay
+# --------------------------------------------------------------------------
+
+
+def test_twin_exact_speculative_backup():
+    """Two fast batches complete and seed the median; the skewed straggler
+    crosses theta x median, a backup launches from heartbeat-reported
+    progress, wins the race, and the straggler is reclaimed.  The stamped
+    launch replays through the engine as a scripted speculation epoch --
+    exactly."""
+    from repro.cluster.scenario import Speculation
+
+    sc = Scenario(
+        n_batches=3,
+        cancel_redundant=True,
+        speculation=Speculation(interval=0.12, theta=2.0),
+    )
+    # batch 2 lands on w2 (skew factor 2.6): ~2.6 s against ~0.15 s siblings
+    jobs = [LiveJob(job_id=0, costs=(0.15, 0.15, 1.0), skew=0.8)]
+    report = Runtime(3, sc).run(jobs, timeout_s=30.0)
+    assert report.n_speculative == 1
+    assert report.accounting()["n_speculative"] == 1
+    specs = [e for e in report.trace if e["ev"] == "dispatch" and e.get("spec")]
+    assert len(specs) == 1 and specs[0]["batch"] == 2 and not specs[0]["rescue"]
+    # the backup won: the straggler's tail was reclaimed by cancellation
+    assert report.cancelled_seconds_saved > 0.5
+    assert report.records[0].finish < 2.0
+    eng = assert_exact_twin(report, 3, sc)
+    assert eng.n_speculative == 1
+
+
+def test_trace_alone_replays_with_embedded_scenario():
+    """The first trace event embeds the originating Scenario + worker
+    budget: a JSON round-tripped trace replays with no other inputs."""
+    from repro.cluster.scenario import Speculation
+
+    sc = Scenario(
+        n_batches=3,
+        cancel_redundant=True,
+        speculation=Speculation(interval=0.12, theta=2.0),
+    )
+    report = Runtime(3, sc).run(
+        [LiveJob(job_id=0, costs=(0.15, 0.15, 1.0), skew=0.8)], timeout_s=30.0
+    )
+    head = report.trace[0]
+    assert head["ev"] == "scenario" and head["n_workers"] == 3
+    assert Scenario.from_dict(head["scenario"]) == sc
+    # the trace is a plain JSON document; a file-loaded copy is sufficient
+    events = json.loads(json.dumps(list(report.trace)))
+    eng = replay_trace(events)  # no n_workers, no scenario
+    assert eng.accounting() == report.accounting()
+    # a trace stripped of its scenario event needs the explicit arguments
+    bare = [e for e in events if e["ev"] != "scenario"]
+    with pytest.raises(ValueError, match="n_workers"):
+        replay_trace(bare)
+    with pytest.raises(ValueError, match="Speculation"):
+        replay_trace(bare, 3)  # spec launches stamped, policy missing
+
+
+# --------------------------------------------------------------------------
 # chaos: SIGKILL a subprocess worker mid-task -> rescue -> exact replay
 # --------------------------------------------------------------------------
 
@@ -314,6 +374,7 @@ def test_trace_accounting_hand_built():
         "n_worker_failures": 1,
         "n_replicas_rescued": 2,
         "n_replans": 0,
+        "n_speculative": 0,
     }
 
 

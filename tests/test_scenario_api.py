@@ -212,6 +212,88 @@ def test_scenario_from_kwargs_is_silent_internal_plumbing():
 
 
 # --------------------------------------------------------------------------
+# every entry point's loose-kwarg shim: warns exactly once, naming itself
+# --------------------------------------------------------------------------
+
+
+def _call_sample_job_times(kw):
+    sample_job_times(Exponential(1.0), 4, 2, 4, seed=0, backend="python", **kw)
+
+
+def _call_simulate_epochs(kw):
+    from repro.cluster import simulate_epochs
+
+    simulate_epochs(Exponential(1.0), 2, 2, np.zeros(1), 2, seed=0, **kw)
+
+
+def _call_frontier_dynamic(kw):
+    frontier_job_times_dynamic(
+        Exponential(1.0), 2, [1], 2, seed=0, **dict(kw, speeds=(1.0, 1.0))
+    )
+
+
+def _call_plan_cluster(kw):
+    planner = RedundancyPlanner(4, candidates=[1, 2])
+    planner.plan_cluster(Exponential(1.0), n_reps=4, seed=0, backend="python", **kw)
+
+
+def _call_plan_sweep(kw):
+    plan_sweep([Exponential(1.0)], [4], n_reps=4, seed=0, backend="python", **kw)
+
+
+def _call_runtime(kw):
+    from repro.cluster.runtime import Runtime
+
+    Runtime(2, **kw)  # construction resolves the scenario; no sockets yet
+
+
+def _call_runtime_master(kw):
+    from repro.cluster.runtime import RuntimeMaster
+
+    RuntimeMaster(2, **kw)
+
+
+def _loose_kwarg_cases():
+    from repro.cluster import Speculation
+
+    return [
+        pytest.param({"cancel_redundant": True}, id="cancel_redundant"),
+        pytest.param({"speculation": Speculation(interval=0.5, theta=2.0)}, id="speculation"),
+    ]
+
+
+@pytest.mark.parametrize("kw", _loose_kwarg_cases())
+@pytest.mark.parametrize(
+    "name,call",
+    [
+        ("sample_job_times", _call_sample_job_times),
+        ("simulate_epochs", _call_simulate_epochs),
+        ("frontier_job_times_dynamic", _call_frontier_dynamic),
+        ("plan_cluster", _call_plan_cluster),
+        ("plan_sweep", _call_plan_sweep),
+        ("Runtime", _call_runtime),
+        ("RuntimeMaster", _call_runtime_master),
+    ],
+    ids=lambda v: v if isinstance(v, str) else "",
+)
+def test_every_entry_point_loose_kwarg_warns_once_naming_itself(name, call, kw):
+    """Every public entry point -- including the live runtime constructors --
+    shims every legacy loose-kwarg spelling through one DeprecationWarning
+    that names the entry point; nested delegation (plan_sweep -> plan_cluster
+    -> sample_job_times) must not warn again."""
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        call(kw)
+    shim = [
+        w
+        for w in caught
+        if issubclass(w.category, DeprecationWarning) and "loose keyword" in str(w.message)
+    ]
+    assert len(shim) == 1, [str(w.message) for w in caught]
+    assert str(shim[0].message).startswith(f"{name}: "), str(shim[0].message)
+
+
+# --------------------------------------------------------------------------
 # the single validation path: errors name the field, once, everywhere
 # --------------------------------------------------------------------------
 
@@ -294,4 +376,90 @@ def test_to_engine_kwargs_requires_workers():
         "controller",
         "scheduler",
         "workers_per_job",
+        "speculation",
     }
+
+
+# --------------------------------------------------------------------------
+# Scenario v2 serialization: exact JSON round-trip + replace()
+# --------------------------------------------------------------------------
+
+
+def _kitchen_sink_scenario():
+    from repro.cluster import ChurnSchedule, Speculation
+
+    return Scenario(
+        dist=Pareto(sigma=0.1 + 0.2, alpha=2.2),  # non-representable floats
+        n_workers=8,
+        n_batches=4,
+        n_tasks=16,
+        cancel_redundant=True,
+        size_dependent=False,
+        speeds=(1.0, 0.3, 1.7, 1.0, 1.0, 1.0, 1.0, 2.0 / 3.0),
+        churn_schedule=ChurnSchedule(times=(0.5, 1.25), wids=(3, 3), ups=(False, True)),
+        speculation=Speculation(interval=0.23, theta=1.5, min_observations=2, max_backups=3),
+        scheduler="packed",
+        workers_per_job=2,
+        job_plans=(JobPlan(workers=2, n_batches=2), None),
+        jobs_per_stream=8,
+        dtype="float64",
+        rep_chunk=32,
+        devices=1,
+    )
+
+
+def test_scenario_json_roundtrip_is_exact():
+    sc = _kitchen_sink_scenario()
+    back = Scenario.from_json(sc.to_json())
+    assert back == sc  # dataclass equality: every field, floats bit-exact
+    assert Scenario.from_json(Scenario().to_json()) == Scenario()
+    # each distribution family round-trips
+    for dist in (
+        Exponential(1.0 / 3.0),
+        ShiftedExponential(0.1 + 0.2, 1.7),
+        Pareto(0.9, 2.2),
+    ):
+        assert Scenario.from_json(Scenario(dist=dist).to_json()) == Scenario(dist=dist)
+    from repro.core.service_time import Empirical
+
+    emp = Scenario(dist=Empirical(samples=(0.5, 1.0 / 7.0, 2.0)))
+    assert Scenario.from_json(emp.to_json()) == emp
+
+
+def test_scenario_json_churn_process_and_replan_roundtrip():
+    from repro.cluster import ReplanConfig
+
+    sc = Scenario(
+        churn=ChurnProcess(fail_rate=0.05, mean_downtime=1.0 / 3.0),
+        replan=ReplanConfig(window=256, refit_every=64, min_observations=32, objective="cov"),
+    )
+    assert Scenario.from_json(sc.to_json()) == sc
+
+
+def test_scenario_json_schema_is_tagged_and_versioned():
+    import json
+
+    d = json.loads(_kitchen_sink_scenario().to_json())
+    assert d["version"] == 2
+    assert d["dist"] == {"kind": "Pareto", "sigma": 0.1 + 0.2, "alpha": 2.2}
+    assert d["speculation"]["theta"] == 1.5
+    assert d["scheduler"] == "packed"
+    assert d["job_plans"][1] is None
+
+
+def test_scenario_from_dict_rejects_bad_version_and_unknown_fields():
+    with pytest.raises(ValueError, match="version"):
+        Scenario.from_dict({"version": 1})
+    with pytest.raises(ValueError, match="unknown fields"):
+        Scenario.from_dict({"version": 2, "frobnicate": 1})
+    with pytest.raises(ValueError, match="unknown distribution kind"):
+        Scenario.from_dict({"version": 2, "dist": {"kind": "Cauchy"}})
+
+
+def test_scenario_replace_derives_variants():
+    base = Scenario(n_batches=2, cancel_redundant=False)
+    on = base.replace(cancel_redundant=True)
+    assert on.cancel_redundant and on.n_batches == 2
+    assert base.cancel_redundant is False  # frozen original untouched
+    with pytest.raises(TypeError):
+        base.replace(no_such_field=1)
