@@ -26,7 +26,13 @@ vary with the runner).  Two properties are load-bearing and fail the build:
   6. reactive speculation keeps beating the no-redundancy baseline on the
      heavy Pareto tail (``speculation.pareto_speculative_speedup`` above an
      absolute floor -- backups launched from partial progress must keep
-     truncating the straggler tail).
+     truncating the straggler tail), and
+  7. the trace-scale stream path keeps cluster-day throughput *and* its
+     O(slab) memory story (``trace_scale.sweep_seconds_warm`` -- the full
+     (family x budget x scheduler) grid over the synthetic cluster-day,
+     warm -- stays below an absolute ceiling, and ``trace_scale.peak_rss_mb``
+     stays below the committed RSS ceiling; a path that re-materializes
+     per-job outputs blows through both).
 
 Floors are env-overridable so a one-off noisy runner can be diagnosed
 without editing the workflow:
@@ -38,6 +44,8 @@ without editing the workflow:
   BENCH_MIN_JAX_SPACE_SPEEDUP    absolute floor on space_sharing.min_speedup_warm (8)
   BENCH_MAX_SPACE_RESPONSE_RATIO ceiling on packed/gang response ratio (0.85)
   BENCH_MIN_SPEC_SPEEDUP         floor on speculation.pareto_speculative_speedup (1.1)
+  BENCH_MAX_TRACE_SWEEP_SECONDS  ceiling on trace_scale.sweep_seconds_warm (9.0)
+  BENCH_MAX_TRACE_PEAK_RSS_MB    ceiling on trace_scale.peak_rss_mb (2048)
 """
 from __future__ import annotations
 
@@ -54,6 +62,8 @@ DEFAULT_MAX_JAX_DYNAMIC_COLD_SECONDS = 4.0
 DEFAULT_MIN_JAX_SPACE_SPEEDUP = 8.0
 DEFAULT_MAX_SPACE_RESPONSE_RATIO = 0.85
 DEFAULT_MIN_SPEC_SPEEDUP = 1.1
+DEFAULT_MAX_TRACE_SWEEP_SECONDS = 9.0
+DEFAULT_MAX_TRACE_PEAK_RSS_MB = 2048.0
 
 
 def check(
@@ -66,6 +76,8 @@ def check(
     min_jax_space_speedup: float = DEFAULT_MIN_JAX_SPACE_SPEEDUP,
     max_space_response_ratio: float = DEFAULT_MAX_SPACE_RESPONSE_RATIO,
     min_spec_speedup: float = DEFAULT_MIN_SPEC_SPEEDUP,
+    max_trace_sweep_seconds: float = DEFAULT_MAX_TRACE_SWEEP_SECONDS,
+    max_trace_peak_rss_mb: float = DEFAULT_MAX_TRACE_PEAK_RSS_MB,
 ) -> list:
     """Return a list of human-readable failure strings (empty = gate passes)."""
     failures = []
@@ -149,6 +161,29 @@ def check(
                 f"{base_sk.get('pareto_speculative_speedup', float('nan')):.2f}x)"
             )
 
+    cur_tr = current.get("trace_scale", {})
+    base_tr = baseline.get("trace_scale", {})
+    if not cur_tr or not base_tr:
+        failures.append("trace_scale section missing from current or baseline")
+    else:
+        warm = cur_tr.get("sweep_seconds_warm")
+        if warm is None or warm > max_trace_sweep_seconds:
+            failures.append(
+                f"trace-scale sweep slowed down: sweep_seconds_warm "
+                f"{warm if warm is None else format(warm, '.2f')}s "
+                f"> ceiling {max_trace_sweep_seconds:.2f}s (baseline recorded "
+                f"{base_tr.get('sweep_seconds_warm', float('nan')):.2f}s)"
+            )
+        rss = cur_tr.get("peak_rss_mb")
+        if rss is None or rss > max_trace_peak_rss_mb:
+            failures.append(
+                f"trace-scale memory story broke: peak_rss_mb "
+                f"{rss if rss is None else format(rss, '.0f')} MB "
+                f"> ceiling {max_trace_peak_rss_mb:.0f} MB (baseline recorded "
+                f"{base_tr.get('peak_rss_mb', float('nan')):.0f} MB) -- "
+                f"the stream path must stay O(slab), not O(jobs)"
+            )
+
     return failures
 
 
@@ -181,10 +216,17 @@ def main() -> int:
         os.environ.get("BENCH_MAX_SPACE_RESPONSE_RATIO", DEFAULT_MAX_SPACE_RESPONSE_RATIO)
     )
     min_spec = float(os.environ.get("BENCH_MIN_SPEC_SPEEDUP", DEFAULT_MIN_SPEC_SPEEDUP))
+    max_trace_sweep = float(
+        os.environ.get("BENCH_MAX_TRACE_SWEEP_SECONDS", DEFAULT_MAX_TRACE_SWEEP_SECONDS)
+    )
+    max_trace_rss = float(
+        os.environ.get("BENCH_MAX_TRACE_PEAK_RSS_MB", DEFAULT_MAX_TRACE_PEAK_RSS_MB)
+    )
 
     failures = check(
         current, baseline, min_jax_speedup, heavy_tolerance, min_jax_dynamic,
         max_dynamic_cold, min_jax_space, max_space_ratio, min_spec,
+        max_trace_sweep, max_trace_rss,
     )
 
     cur_b, base_b = current["backend"], baseline["backend"]
@@ -243,6 +285,18 @@ def main() -> int:
             f"vs no redundancy (baseline "
             f"x{base_sk.get('pareto_speculative_speedup', float('nan')):.2f}, "
             f"floor {min_spec:.2f}x)"
+        )
+
+    cur_tr = current.get("trace_scale", {})
+    base_tr = baseline.get("trace_scale", {})
+    if cur_tr and base_tr:
+        print(
+            f"trace-scale cluster-day: {cur_tr.get('n_cells', 0)}-cell sweep "
+            f"{cur_tr.get('sweep_seconds_warm', float('nan')):.2f}s warm "
+            f"(baseline {base_tr.get('sweep_seconds_warm', float('nan')):.2f}s, "
+            f"ceiling {max_trace_sweep:.1f}s); peak RSS "
+            f"{cur_tr.get('peak_rss_mb', float('nan')):.0f} MB "
+            f"(ceiling {max_trace_rss:.0f} MB)"
         )
 
     if failures:

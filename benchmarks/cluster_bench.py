@@ -28,6 +28,11 @@ Six scenarios on the synthetic Google-trace jobs (and parametric tails):
     mean/p95 compute time, worker-seconds, and backup counts per variant.
     The regression gate keys on the Pareto row (reactive backups must keep
     beating the no-redundancy baseline).
+  * ``trace_scale``  -- a 10k-job synthetic cluster-day streamed through the
+    O(slab)-memory jax path (``repro.cluster.stream``): the full
+    (family x budget x scheduler) grid, gated on whole-grid warm wall time
+    (single-digit seconds) and process peak RSS (the streaming-aggregation
+    memory ceiling).
   * ``space_sharing`` -- the space-sharing scheduler: mean response-time
     ratio of ``packed`` (narrow concurrent jobs on disjoint subsets) vs the
     ``fifo_gang`` baseline on one saturated workload, plus the jax-vs-python
@@ -96,6 +101,15 @@ def _cfg(smoke: bool) -> dict:
             "dyn_reps": 960,
             "space_workers": 12,
             "space_reps": 768,
+            # the trace section streams the REAL 10k-job day even in smoke:
+            # the whole grid is ~2s warm, and the acceptance gate is about
+            # the full-scale stream, not a toy one.  Smoke only shrinks the
+            # cluster (fewer pools -> smaller carry, same stream length).
+            "trace_stream_jobs": 10_000,
+            "trace_stream_reps": 2,
+            "trace_slab": 1024,
+            "trace_pool": 6,
+            "trace_pools": 96,
         }
     return {
         "n_workers": 20,
@@ -108,6 +122,11 @@ def _cfg(smoke: bool) -> dict:
         "dyn_reps": 2048,
         "space_workers": 16,
         "space_reps": 2048,
+        "trace_stream_jobs": 10_000,
+        "trace_stream_reps": 2,
+        "trace_slab": 1024,
+        "trace_pool": 6,
+        "trace_pools": 2304,
     }
 
 
@@ -466,6 +485,94 @@ def bench_speculation(cfg: dict, seed: int = 0) -> dict:
     return out
 
 
+def bench_trace_scale(cfg: dict, seed: int = 0) -> dict:
+    """Trace-scale throughput: a 10k-job cluster-day through the stream path.
+
+    The full (distribution family x budget x scheduler) grid -- 12 cells --
+    over one synthetic cluster-day per family, on a trace-sized cluster
+    (``trace_pools`` pools of ``trace_pool`` workers; the 2011 Google trace
+    holds ~12.5k machines).  Every cell streams the whole day through
+    ``simulate_stream``: draws generated per slab, statistics carried in the
+    scan, so peak memory is O(slab) regardless of the stream length.
+
+    Two gates (``check_bench_regression.py``):
+
+      * ``sweep_seconds_warm`` -- min-of-3 full-grid wall time after the cold
+        pass compiled the six kernel shapes (families reuse compiles).  The
+        whole cluster-day grid must stay single-digit seconds warm.
+      * ``peak_rss_mb`` -- process high-water RSS after the sweep; the O(slab)
+        memory story's observable.  A materialized (reps x jobs x B x r) path
+        would blow straight through the ceiling.
+
+    ``fifo_gang`` cells run one pool-width gang (the exact ``simulate_fifo``
+    regime); ``packed``/``balanced`` split the cluster into disjoint pools.
+    """
+    from repro.cluster import simulate_stream
+    from repro.core.traces import synthetic_cluster_day
+
+    pool = cfg["trace_pool"]
+    n_jobs = cfg["trace_stream_jobs"]
+    reps = cfg["trace_stream_reps"]
+    slab = cfg["trace_slab"]
+    n_workers = pool * cfg["trace_pools"]
+    days = {
+        fam: synthetic_cluster_day(n_jobs=n_jobs, seed=seed + 7, families=(fam,))
+        for fam in ("exponential", "heavy")
+    }
+    budgets = {"planned": pool // 2, "no_redundancy": pool}
+
+    def sweep() -> dict:
+        cells = {}
+        for fam, day in days.items():
+            for sched in ("fifo_gang", "packed", "balanced"):
+                gang = sched == "fifo_gang"
+                for bname, b in budgets.items():
+                    sc = Scenario(
+                        outputs="stream",
+                        scheduler=sched,
+                        workers_per_job=None if gang else pool,
+                        cancel_redundant=True,
+                    )
+                    stats = simulate_stream(
+                        day, pool if gang else n_workers, b, reps,
+                        scenario=sc, slab=slab,
+                    )
+                    s = stats.summary()
+                    cells[f"{fam}/{sched}/{bname}"] = {
+                        "B": b,
+                        "r": pool // b,
+                        "mean_response": s["mean_response"],
+                        "p99_response": s["p99_response"],
+                        "worker_seconds": s["worker_seconds"],
+                        "cancelled_seconds_saved": s["cancelled_seconds_saved"],
+                    }
+        return cells
+
+    jax.clear_caches()  # force real compiles into the cold pass
+    t0 = time.time()
+    cells = sweep()
+    cold = time.time() - t0
+    warms = []
+    for _ in range(3):
+        t0 = time.time()
+        cells = sweep()
+        warms.append(time.time() - t0)
+    rss_scale = 1024.0**2 if sys.platform == "darwin" else 1024.0
+    return {
+        "n_jobs": n_jobs,
+        "n_reps": reps,
+        "slab": slab,
+        "pool_width": pool,
+        "n_pools": cfg["trace_pools"],
+        "n_cells": len(cells),
+        "cells": cells,
+        "sweep_seconds_cold": cold,
+        "sweep_seconds_warm": min(warms),
+        "jobs_per_second_warm": len(cells) * n_jobs * reps / max(min(warms), 1e-9),
+        "peak_rss_mb": resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / rss_scale,
+    }
+
+
 def run_all(smoke: bool = True, seed: int = 0) -> list:
     """CSV rows for the benchmark aggregator (smoke sizes by default)."""
     cfg = _cfg(smoke)
@@ -549,6 +656,17 @@ def run_all(smoke: bool = True, seed: int = 0) -> list:
             f"..{sp['max_speedup_warm']:.0f}x",
         )
     )
+    t0 = time.time()
+    tr = bench_trace_scale(cfg, seed)
+    rows.append(
+        (
+            "cluster_trace_scale",
+            (time.time() - t0) * 1e6 / max(cfg["trace_stream_jobs"], 1),
+            f"{tr['n_cells']}-cell day sweep {tr['sweep_seconds_warm']:.1f}s warm "
+            f"({tr['jobs_per_second_warm'] / 1e3:.0f}k jobs/s, "
+            f"rss {tr['peak_rss_mb']:.0f}MB)",
+        )
+    )
     return rows
 
 
@@ -576,6 +694,7 @@ def main() -> None:
         "dynamic": bench_dynamic(cfg, args.seed),
         "space_sharing": bench_space_sharing(cfg, args.seed),
         "speculation": bench_speculation(cfg, args.seed),
+        "trace_scale": bench_trace_scale(cfg, args.seed),
     }
     if args.backend in ("python", "both"):
         result["redundancy"] = bench_redundancy(cfg, args.seed, backend="python")

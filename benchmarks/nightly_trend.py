@@ -5,8 +5,8 @@ artifacts; this script folds any number of those JSONs (a directory of
 downloaded artifacts, or just the fresh run) into a compact markdown table
 of the load-bearing series -- the jax speed edges (static + dynamic + space
 sweeps), the packed-vs-gang response ratio, the dynamic cold start, the
-heavy-tail redundancy speedup, and the speculative-vs-planned Pareto
-speedups.  Rows are labelled by the run id carried in the artifact path
+trace-scale cluster-day sweep (warm seconds + peak RSS), the heavy-tail
+redundancy speedup, and the speculative-vs-planned Pareto speedups.  Rows are labelled by the run id carried in the artifact path
 (``gh run download`` lands each artifact in its own directory) and sorted
 naturally, so the table reads chronologically.
 
@@ -83,8 +83,9 @@ def trend_table(rows: list[tuple[str, dict]]) -> str:
     header = (
         "| run | static edge (min..max) | dynamic edge (min..max) "
         "| space edge (min..max) | packed/gang resp | dynamic cold (s) "
-        "| peak RSS (MB) | heavy-tail speedup | spec pareto (react/hybrid) |\n"
-        "|---|---|---|---|---|---|---|---|---|"
+        "| peak RSS (MB) | trace warm (s) | trace RSS (MB) "
+        "| heavy-tail speedup | spec pareto (react/hybrid) |\n"
+        "|---|---|---|---|---|---|---|---|---|---|---|"
     )
     lines = [header]
     for name, d in rows:
@@ -92,13 +93,14 @@ def trend_table(rows: list[tuple[str, dict]]) -> str:
         dy = _get(d, "dynamic") or {}
         sp = _get(d, "space_sharing") or {}
         sk = _get(d, "speculation") or {}
+        tr = _get(d, "trace_scale") or {}
         heavy = _get(d, "redundancy", "_summary", "max_heavy_speedup")
 
         def fmt(v, spec=".1f", suffix=""):
             return format(v, spec) + suffix if isinstance(v, (int, float)) else "-"
 
         lines.append(
-            "| {} | {}..{} | {}..{} | {}..{} | {} | {} | {} | {} | {}/{} |".format(
+            "| {} | {}..{} | {}..{} | {}..{} | {} | {} | {} | {} | {} | {} | {}/{} |".format(
                 name,
                 fmt(b.get("min_speedup_warm"), ".0f", "x"),
                 fmt(b.get("max_speedup_warm"), ".0f", "x"),
@@ -109,6 +111,8 @@ def trend_table(rows: list[tuple[str, dict]]) -> str:
                 fmt(sp.get("response_ratio_packed_vs_gang"), ".2f", "x"),
                 fmt(dy.get("max_cold_seconds"), ".2f"),
                 fmt(dy.get("peak_rss_mb"), ".0f"),
+                fmt(tr.get("sweep_seconds_warm"), ".2f"),
+                fmt(tr.get("peak_rss_mb"), ".0f"),
                 fmt(heavy, ".2f", "x"),
                 fmt(sk.get("pareto_speculative_speedup"), ".2f", "x"),
                 fmt(sk.get("pareto_hybrid_speedup"), ".2f", "x"),
@@ -125,6 +129,8 @@ _SERIES = [
     ("space edge (min)", ("space_sharing", "min_speedup_warm")),
     ("packed/gang response", ("space_sharing", "response_ratio_packed_vs_gang")),
     ("dynamic cold (s)", ("dynamic", "max_cold_seconds")),
+    ("trace sweep warm (s)", ("trace_scale", "sweep_seconds_warm")),
+    ("trace peak RSS (MB)", ("trace_scale", "peak_rss_mb")),
     ("heavy-tail speedup", ("redundancy", "_summary", "max_heavy_speedup")),
     ("spec pareto (react)", ("speculation", "pareto_speculative_speedup")),
     ("spec pareto (hybrid)", ("speculation", "pareto_hybrid_speedup")),

@@ -36,6 +36,15 @@ Public surface:
     ``plan_cluster`` takes when any dynamic knob is set, so
     ``backend="jax"`` never falls back to the Python engine for
     churned/heterogeneous scenarios
+  * stream     -- trace-scale streaming: a
+    :class:`~repro.core.traces.TraceStream` (thousands of arrivals
+    resampling per-job trace ECDFs, seeded/versioned, chunked) driven
+    through a fixed-slab jax kernel whose scan carries running statistics
+    (count, moment sums, min/max, log-spaced response histogram) instead of
+    per-job outputs -- a 10k-job cluster-day compiles once and streams in
+    O(slab) memory (``simulate_stream``); ``Scenario.outputs="stream"``
+    gives ``simulate_epochs`` the same aggregation, bit-identical to the
+    materialized fold on float64 lanes
   * scenario   -- the one frozen, validated spec shared by every entry
     point: ``Scenario`` + ``Scenario.validate()`` replace the four
     separately-maintained copies of the dynamics-kwarg validation;
@@ -48,10 +57,11 @@ Public surface:
     twin.  Imported lazily (``import repro.cluster.runtime``): simulation
     users never pay for the service stack
 """
-from . import control, epoch_scan, events, master, scenario, scheduler, vectorized, workers
+from . import control, epoch_scan, events, master, scenario, scheduler, stream, vectorized, workers
 from .control import OnlineReplanner, SpeculativePolicy
 from .epoch_scan import (
     EpochReport,
+    EpochStreamReport,
     ReplanConfig,
     frontier_job_times_dynamic,
     simulate_epochs,
@@ -66,6 +76,7 @@ from .master import (
     jobs_from_traces,
     sample_job_times,
 )
+from .stream import StreamFullReport, StreamStats, epoch_stream_stats, fold_stream_stats, simulate_stream
 from .vectorized import FifoReport, frontier_job_times, simulate_fifo
 from .workers import ChurnProcess, ChurnSchedule, Worker, WorkerPool, sample_churn_schedule
 
@@ -76,6 +87,7 @@ __all__ = [
     "master",
     "scenario",
     "scheduler",
+    "stream",
     "vectorized",
     "workers",
     "Scenario",
@@ -88,6 +100,7 @@ __all__ = [
     "ClusterEngine",
     "EngineReport",
     "EpochReport",
+    "EpochStreamReport",
     "ReplanConfig",
     "Job",
     "JobRecord",
@@ -95,6 +108,11 @@ __all__ = [
     "sample_job_times",
     "simulate_epochs",
     "FifoReport",
+    "StreamFullReport",
+    "StreamStats",
+    "simulate_stream",
+    "fold_stream_stats",
+    "epoch_stream_stats",
     "frontier_job_times",
     "frontier_job_times_dynamic",
     "simulate_fifo",

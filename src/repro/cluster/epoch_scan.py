@@ -74,6 +74,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import warnings
 from typing import Optional, Sequence
 
 import jax
@@ -90,6 +91,7 @@ from .workers import ChurnProcess, ChurnSchedule
 __all__ = [
     "ReplanConfig",
     "EpochReport",
+    "EpochStreamReport",
     "simulate_epochs",
     "frontier_job_times_dynamic",
     "runner_cache_stats",
@@ -148,6 +150,10 @@ class EpochReport:
     n_replans: np.ndarray  # (n_reps,)
     epoch_times: np.ndarray  # (n_reps, n_events) applied boundaries, inf pad
     n_speculative: np.ndarray = None  # (n_reps,) reactive backups launched
+    # (n_reps,) bool: the rep's timeline outran its sampled churn horizon
+    # (workers stayed up past it while the engine's law keeps churning);
+    # None when churn is scheduled or absent -- see simulate_epochs
+    churn_truncated: np.ndarray = None
 
     @property
     def compute_times(self) -> np.ndarray:
@@ -167,6 +173,49 @@ class EpochReport:
 
     def accounting(self) -> dict:
         """Per-rep counters, keyed identically to ``EngineReport.accounting``."""
+        return {
+            "worker_seconds": self.worker_seconds,
+            "cancelled_seconds_saved": self.cancelled_seconds_saved,
+            "n_worker_failures": self.n_worker_failures,
+            "n_replicas_rescued": self.n_replicas_rescued,
+            "n_replans": self.n_replans,
+            "n_speculative": (
+                self.n_speculative
+                if self.n_speculative is not None
+                else np.zeros_like(self.n_replans)
+            ),
+        }
+
+
+@dataclasses.dataclass(frozen=True)
+class EpochStreamReport:
+    """``Scenario.outputs="stream"`` outcome of :func:`simulate_epochs`.
+
+    Carries O(n_reps) streaming aggregates instead of ``(n_reps, n_jobs)``
+    per-job records: ``stats`` is a
+    :class:`~repro.cluster.stream.StreamStats` whose response/compute fields
+    come from the on-device fold (its ``busy_sum`` / ``saved_sum`` are the
+    lane's per-rep worker-seconds totals), plus the usual per-rep counters.
+    ``n_unfinished`` counts jobs never completed (dead cluster) -- those are
+    excluded from the statistics rather than surfacing as ``inf`` records.
+    On float64 lanes the stats equal the host fold of the equivalent
+    ``outputs="full"`` report bit for bit (shared seeds; the draw pipeline
+    is identical in both modes).
+    """
+
+    arrivals: np.ndarray  # (n_jobs,)
+    stats: "object"  # StreamStats (declared loose: stream.py imports us not)
+    n_unfinished: np.ndarray  # (n_reps,)
+    worker_seconds: np.ndarray  # (n_reps,)
+    cancelled_seconds_saved: np.ndarray  # (n_reps,)
+    n_worker_failures: np.ndarray  # (n_reps,)
+    n_replicas_rescued: np.ndarray  # (n_reps,)
+    n_replans: np.ndarray  # (n_reps,)
+    n_speculative: np.ndarray = None  # (n_reps,)
+    churn_truncated: np.ndarray = None  # see EpochReport
+
+    def accounting(self) -> dict:
+        """Per-rep counters, keyed identically to ``EpochReport.accounting``."""
         return {
             "worker_seconds": self.worker_seconds,
             "cancelled_seconds_saved": self.cancelled_seconds_saved,
@@ -235,6 +284,12 @@ class _RunnerCfg:
     # records plus their per-step scatters; the cheap scalar counters stay.
     # The plan_cluster/plan_sweep hot path only reads starts/finishes.
     full_outputs: bool = True
+    # True folds the per-job starts/finishes into streaming accumulators
+    # (count, response moment sums, min/max, log histogram) on device before
+    # anything leaves the lane -- Scenario.outputs="stream".  Implies
+    # full_outputs=False; the lane internals are untouched, so "full" paths
+    # stay bit-identical.
+    stream: bool = False
     # None selects the legacy single-gang lane; a policy name selects the
     # space-sharing lane (per-worker job assignment, per-job plan tables).
     scheduler: Optional[str] = None
@@ -950,7 +1005,9 @@ def _build_space_lane(cfg: _RunnerCfg):
             st["resc_pending"] = st["resc_pending"].at[i_s].set(False)
             st["w_job"] = st["w_job"].at[i_w].set(j_star.astype(jnp.int32))
             st["w_avail"] = st["w_avail"].at[i_w].set(serve_min + dur_r)
-            st["w_load"] = st["w_load"].at[i_w].add(dur_r)
+            # speed-weighted load (duration / speed), same op order as the
+            # engine's _assign so f64 lanes replay placement bit-for-bit
+            st["w_load"] = st["w_load"].at[i_w].add(dur_r / speeds[w_star])
             st["n_resc"] = st["n_resc"] + can_r
             st["resc_k"] = st["resc_k"] + can_r
 
@@ -1012,7 +1069,7 @@ def _build_space_lane(cfg: _RunnerCfg):
                 td + dur,
                 jnp.where(can_d & sel_alloc, td, st["w_avail"]),
             )
-            st["w_load"] = st["w_load"] + jnp.where(can_d & sel_rep, dur, 0.0)
+            st["w_load"] = st["w_load"] + jnp.where(can_d & sel_rep, dur / speeds, 0.0)
             st["seg_job"] = jnp.where(
                 can_d & segfree & (seg_rank < b_d), q_star.astype(jnp.int32), st["seg_job"]
             )
@@ -1121,10 +1178,81 @@ def _build_space_lane(cfg: _RunnerCfg):
     return lane
 
 
+def _wrap_stream_lane(lane, cfg: _RunnerCfg):
+    """Fold a lane's per-job outputs into streaming accumulators on device.
+
+    Runs *after* the untouched lane body, as a sequential ``lax.scan`` over
+    the job axis in arrival order -- the exact fold order the host reference
+    (:func:`repro.cluster.stream.epoch_stream_stats`) replays over a full
+    report, which is what makes streaming equal materialized bit for bit
+    (float64 lanes).  Jobs past the real count and jobs never finished
+    (dead cluster) are masked out of the statistics; the latter are counted
+    in ``n_unfinished`` and force ``fin_max`` to the sampled-churn check's
+    conservative side via the unfinished flag.
+    """
+    from .vectorized import STREAM_HIST_BINS, STREAM_HIST_EDGES
+
+    dt = jnp.dtype(cfg.dtype)
+    edges = jnp.asarray(STREAM_HIST_EDGES, dt)
+
+    def wrapped(*args):
+        out = lane(*args)
+        arrivals, jobs_real = args[7], args[10]
+        starts = out.pop("starts")
+        fins = out.pop("finishes")
+
+        def fold(acc, inp):
+            a, s, f, j = inp
+            real = j < jobs_real
+            m = real & jnp.isfinite(f)
+            resp = f - a
+            comp = f - s
+            one = m.astype(jnp.int32)
+            bins = jnp.searchsorted(edges, resp, side="right")
+            # max(sq, 0) pins the square as a standalone IEEE multiply --
+            # see the matching comment in vectorized._stream_slab
+            resp2 = jnp.maximum(resp * resp, 0.0)
+            return {
+                "count": acc["count"] + one,
+                "resp_sum": acc["resp_sum"] + jnp.where(m, resp, 0.0),
+                "resp_sq": acc["resp_sq"] + jnp.where(m, resp2, 0.0),
+                "resp_min": jnp.minimum(acc["resp_min"], jnp.where(m, resp, jnp.inf)),
+                "resp_max": jnp.maximum(acc["resp_max"], jnp.where(m, resp, -jnp.inf)),
+                "comp_sum": acc["comp_sum"] + jnp.where(m, comp, 0.0),
+                "hist": acc["hist"].at[bins].add(one),
+                "n_unfinished": acc["n_unfinished"] + (real & ~jnp.isfinite(f)).astype(jnp.int32),
+                "fin_max": jnp.maximum(acc["fin_max"], jnp.where(m, f, -jnp.inf)),
+            }, None
+
+        zero = jnp.asarray(0.0, dt)
+        acc0 = {
+            "count": jnp.int32(0),
+            "resp_sum": zero,
+            "resp_sq": zero,
+            "resp_min": jnp.asarray(jnp.inf, dt),
+            "resp_max": jnp.asarray(-jnp.inf, dt),
+            "comp_sum": zero,
+            "hist": jnp.zeros(STREAM_HIST_BINS, jnp.int32),
+            "n_unfinished": jnp.int32(0),
+            "fin_max": jnp.asarray(-jnp.inf, dt),
+        }
+        acc, _ = jax.lax.scan(
+            fold,
+            acc0,
+            (arrivals, starts, fins, jnp.arange(cfg.jobs_pad, dtype=jnp.int32)),
+        )
+        out.update(acc)
+        return out
+
+    return wrapped
+
+
 def _get_runner(cfg: _RunnerCfg):
     if cfg in _RUNNERS:
         return _RUNNERS[cfg]
     lane = _build_space_lane(cfg) if cfg.scheduler is not None else _build_lane(cfg)
+    if cfg.stream:
+        lane = _wrap_stream_lane(lane, cfg)
     fn = jax.vmap(lane, in_axes=(0,) * 7 + (None,) * 9)
     if cfg.devices > 1:
         from jax.sharding import Mesh, PartitionSpec as P
@@ -1155,7 +1283,16 @@ def _get_runner(cfg: _RunnerCfg):
 
 
 def _sample_churn_np(rng, churn: ChurnProcess, n_workers: int, pairs: int):
-    """One lane's alternating-renewal fail/join timeline, the engine's law."""
+    """One lane's alternating-renewal fail/join timeline, the engine's law.
+
+    Also returns the lane's *horizon*: the earliest time any worker's
+    sampled stream runs dry (its last of ``2 * pairs`` events).  Past the
+    horizon the lane's workers stay up while the engine keeps churning, so
+    a simulation that outruns it has silently left the engine's law --
+    callers compare finish times against it and warn.  With
+    ``mean_downtime == 0`` downtimes are infinite (failures are permanent),
+    every stream ends at +inf, and the horizon is never reached.
+    """
     ups = rng.exponential(1.0 / churn.fail_rate, (n_workers, pairs))
     if churn.mean_downtime > 0.0:
         downs = rng.exponential(churn.mean_downtime, (n_workers, pairs))
@@ -1163,12 +1300,13 @@ def _sample_churn_np(rng, churn: ChurnProcess, n_workers: int, pairs: int):
         downs = np.full((n_workers, pairs), np.inf)
     iv = np.stack([ups, downs], axis=-1).reshape(n_workers, 2 * pairs)
     t = np.cumsum(iv, axis=-1)  # fail at even positions, join at odd
+    horizon = float(np.min(t[:, -1]))
     u = np.broadcast_to((np.arange(2 * pairs) % 2).astype(bool), t.shape).ravel()
     w = np.broadcast_to(np.arange(n_workers, dtype=np.int32)[:, None], t.shape).ravel()
     t = t.ravel()
     order = np.argsort(t, kind="stable")
     t, w, u = t[order], w[order], u[order]
-    return t, np.where(np.isfinite(t), w, -1), u
+    return t, np.where(np.isfinite(t), w, -1), u, horizon
 
 
 def _pack_schedule(schedule: Optional[ChurnSchedule], n_lanes: int, ev_pad: int, dtype):
@@ -1207,6 +1345,7 @@ def _prepare_lanes(dist, n_workers, n_pad, lane_idx, n_real, jobs_pad, ev_pad, r
     tau = np.ones((n_lanes, jobs_pad, n_pad), dtype)
     tau_resc = np.ones((n_lanes, resc_cap, n_pad), dtype)
     tau_spec = np.ones((n_lanes, max(spec_cap, 1), n_pad), dtype)
+    horizon = np.full(n_lanes, np.inf)
     if sample_churn:
         ev_t = np.full((n_lanes, ev_pad), np.inf, dtype)
         ev_w = np.full((n_lanes, ev_pad), -1, np.int32)
@@ -1219,14 +1358,17 @@ def _prepare_lanes(dist, n_workers, n_pad, lane_idx, n_real, jobs_pad, ev_pad, r
         if spec_cap:
             tau_spec[i] = dist.sample_np(rng, (spec_cap, n_pad))
         if sample_churn:
-            t, w, u = _sample_churn_np(rng, churn, n_workers, pairs)
+            t, w, u, horizon[i] = _sample_churn_np(rng, churn, n_workers, pairs)
             k = min(len(t), ev_pad)
             ev_t[i, :k], ev_w[i, :k], ev_up[i, :k] = t[:k], w[:k], u[:k]
     if not sample_churn:
         ev_t, ev_w, ev_up = _pack_schedule(churn_schedule, n_lanes, ev_pad, dtype)
     else:
         ev_t, ev_w, ev_up = jnp.asarray(ev_t), jnp.asarray(ev_w), jnp.asarray(ev_up)
-    return jnp.asarray(tau), jnp.asarray(tau_resc), jnp.asarray(tau_spec), ev_t, ev_w, ev_up
+    return (
+        jnp.asarray(tau), jnp.asarray(tau_resc), jnp.asarray(tau_spec),
+        ev_t, ev_w, ev_up, horizon,
+    )
 
 
 def _shapes(n_workers, n_jobs, churn, churn_schedule, pairs, speculation=None):
@@ -1278,7 +1420,7 @@ def _run_lanes(dist, cfg, n_workers, lane_idx, b0, arrivals_pad, n_jobs_real, se
     b0 = np.concatenate([b0, np.zeros(lanes_pad - lanes, np.int32)])
     dtype = jnp.dtype(cfg.dtype)
     spec_cap = cfg.jobs_pad * cfg.spec.max_backups if cfg.spec is not None else 0
-    tau, tau_resc, tau_spec, ev_t, ev_w, ev_up = _prepare_lanes(
+    tau, tau_resc, tau_spec, ev_t, ev_w, ev_up, horizon = _prepare_lanes(
         dist, n_workers, cfg.n, idx, lanes, cfg.jobs_pad, cfg.ev_pad, cfg.resc_cap,
         seed, churn, churn_schedule, pairs, dtype, spec_cap=spec_cap,
     )
@@ -1319,12 +1461,44 @@ def _run_lanes(dist, cfg, n_workers, lane_idx, b0, arrivals_pad, n_jobs_real, se
         jnp.asarray(n_tasks, dtype),
         *tail,
     )
-    return {k: np.asarray(v)[:lanes] for k, v in out.items()}
+    res = {k: np.asarray(v)[:lanes] for k, v in out.items()}
+    res["churn_horizon"] = horizon[:lanes]  # host-side, inf unless churn sampled
+    return res
 
 
 # --------------------------------------------------------------------------
 # public entry points
 # --------------------------------------------------------------------------
+
+
+# float32 resolves consecutive integers only up to 2^24; past half that, a
+# single ulp of an absolute timestamp already approaches one second, and
+# sub-second queue waits / service times start quantizing away.
+_F32_SAFE_TIME = float(2**23)
+
+
+def _check_arrival_span(arrivals, dtype):
+    """Refuse f32 lanes whose absolute arrivals exceed the f32-safe range.
+
+    Unlike the gang kernel in :mod:`repro.cluster.vectorized` (whose scan
+    carries only backlog-sized slack and rebuilds absolute times in
+    float64), the epoch-scan lanes -- the space-delegated lane in
+    particular -- carry *absolute* event times in the lane dtype.  Under
+    float32 an arrival near 1e7 s has a ulp around 1 s, so statistics come
+    back subtly wrong with no error.  Fail loudly and name the fix instead.
+    """
+    if dtype != "float32":
+        return  # float64 is safe; invalid dtypes get the validation error
+    finite = arrivals[np.isfinite(arrivals)]
+    span = float(np.abs(finite).max()) if finite.size else 0.0
+    if span > _F32_SAFE_TIME:
+        raise ValueError(
+            f"arrival magnitude {span:.6g} s exceeds the float32-safe range "
+            f"(~{_F32_SAFE_TIME:.3g} s): the scan lanes carry absolute times "
+            "in the lane dtype, and float32 ulps this large silently quantize "
+            'queue waits and service times.  Pass dtype="float64" (requires '
+            "jax x64) or rebase arrivals near zero."
+        )
 
 
 def _validate_common(n_workers, sc):
@@ -1390,6 +1564,53 @@ def _space_tabs(scheduler, workers_per_job, job_plans, n_jobs, jobs_pad, n_worke
     return scheduler, (req_tab, b_tab, cancel_tab, default_req)
 
 
+def _resolve_churn_pairs(pairs, dist, churn, n_workers, n_batches, n_tasks,
+                         size_dependent, speeds, arrivals, n_jobs):
+    """Resolve ``churn_pairs_per_worker`` (None = auto-size from the stream).
+
+    The engine's alternating-renewal churn runs forever; the scan lanes
+    sample a finite stream of fail/join pairs per worker, after which that
+    worker stays up -- so a horizon shorter than the simulated timeline
+    silently leaves the engine's law.  Auto-sizing estimates the timeline
+    (arrival span plus a serial-gang bound on total service: jobs x mean
+    batch duration at the slowest speed) and draws enough pairs to cover
+    twice that, floored at the historical default of 8 and capped at 1024
+    to bound the event-step budget -- the post-run truncation check warns
+    loudly if even the cap fell short.  An explicit integer is honoured
+    bit-for-bit (pair count determines the lanes' draw shapes).
+    """
+    if pairs is not None:
+        return int(pairs)
+    if churn is None or churn.fail_rate <= 0.0:
+        return 8  # no sampled churn: the horizon is never consulted
+    # mean service estimate from a fixed-seed host draw: it only sizes an
+    # integer, so it must not perturb (or depend on) the caller's seed
+    rng = np.random.default_rng(np.random.SeedSequence((0x5A11, 0)))
+    mean_tau = float(np.mean(dist.sample_np(rng, (256,))))
+    b = int(n_batches) if n_batches else n_workers
+    scale = (float(n_tasks) / b) if size_dependent else 1.0
+    slow = float(np.min(speeds)) if len(speeds) else 1.0
+    span = float(arrivals[-1] - arrivals[0]) if arrivals is not None and len(arrivals) else 0.0
+    t_est = span + n_jobs * mean_tau * scale / max(slow, 1e-12)
+    period = 1.0 / churn.fail_rate + churn.mean_downtime
+    pairs = math.ceil(2.0 * t_est / max(period, 1e-12)) + 4
+    return max(8, min(int(pairs), 1024))
+
+
+def _warn_churn_truncated(truncated, pairs):
+    n_hit, n_reps = int(np.sum(truncated)), len(truncated)
+    warnings.warn(
+        f"sampled churn horizon ended before the simulated timeline in "
+        f"{n_hit}/{n_reps} rep(s): past the horizon the lanes' workers stay "
+        "up while the Python engine keeps churning, so results diverge from "
+        f"the engine's law.  Raise churn_pairs_per_worker (resolved to "
+        f"{pairs}; None auto-sizes from the stream) or pass an explicit "
+        "churn_schedule, which both backends replay identically.",
+        RuntimeWarning,
+        stacklevel=3,
+    )
+
+
 def _rep_slices(total: int, rep_chunk: Optional[int]):
     if rep_chunk is None or rep_chunk >= total:
         return [(0, total)]
@@ -1421,6 +1642,7 @@ def simulate_epochs(
     dtype=UNSET,
     rep_chunk=UNSET,
     devices=UNSET,
+    outputs=UNSET,
     scenario: Optional["Scenario"] = None,
 ) -> EpochReport:
     """Replay the full engine semantics on the jax epoch scan.
@@ -1462,8 +1684,21 @@ def simulate_epochs(
     worker stays up) from ``default_rng(SeedSequence((seed, rep)))``, so results are
     bit-identical under ``rep_chunk`` chunking (bounding device memory for
     rep budgets in the hundreds-to-thousands) and under multi-device
-    ``devices`` sharding.  ``dtype="float64"`` runs the scan lanes in double
-    precision for long-horizon workloads (requires jax x64).
+    ``devices`` sharding.  ``churn_pairs_per_worker=None`` (the default)
+    auto-sizes the sampled-churn horizon from the stream length; a rep whose
+    timeline still outruns its horizon triggers a loud ``RuntimeWarning``
+    and is flagged in ``EpochReport.churn_truncated``.  ``dtype="float64"``
+    runs the scan lanes in double precision for long-horizon workloads
+    (requires jax x64).
+
+    ``outputs="stream"`` (``Scenario.outputs``) folds the per-job records
+    into streaming accumulators on device and returns an
+    :class:`EpochStreamReport` instead -- O(n_reps) memory for trace-scale
+    job counts.  The lane internals and the draw pipeline are identical in
+    both modes, so on float64 lanes the streamed statistics equal the host
+    fold of the ``outputs="full"`` report bit for bit (the property
+    ``tests/test_stream.py`` enforces); the default ``"full"`` path is
+    untouched.
 
     The scenario knobs (dynamics, space sharing, scale) are best passed as
     one validated ``scenario=Scenario(...)``; the loose keyword forms keep
@@ -1487,6 +1722,7 @@ def simulate_epochs(
             "dtype": dtype,
             "rep_chunk": rep_chunk,
             "devices": devices,
+            "outputs": outputs,
         },
         where="simulate_epochs",
     )
@@ -1500,6 +1736,7 @@ def simulate_epochs(
         raise ValueError("arrivals must be a non-empty 1-D array")
     if (np.diff(arrivals) < 0).any():
         raise ValueError("arrivals must be sorted (FIFO order)")
+    _check_arrival_span(arrivals, sc.dtype)
     if n_batches is not None and not (1 <= int(n_batches) <= n_workers):
         raise ValueError(f"n_batches must lie in [1, {n_workers}] or be None")
     speeds = _validate_common(n_workers, sc)
@@ -1518,6 +1755,10 @@ def simulate_epochs(
     devices = sc.devices
     n_tasks = sc.n_tasks if sc.n_tasks is not None else n_workers
     n_jobs = arrivals.size
+    churn_pairs_per_worker = _resolve_churn_pairs(
+        churn_pairs_per_worker, dist, churn, n_workers, n_batches, n_tasks,
+        size_dependent, speeds, arrivals, n_jobs,
+    )
     n_pad, jobs_pad, ev_pad, resc_cap, n_chunks = _shapes(
         n_workers, n_jobs, churn, churn_schedule, churn_pairs_per_worker,
         speculation=speculation,
@@ -1526,9 +1767,12 @@ def simulate_epochs(
         scheduler, workers_per_job, job_plans, n_jobs, jobs_pad, n_workers,
         cancel_redundant, replan,
     )
+    stream_mode = sc.outputs == "stream"
     cfg = _RunnerCfg(
         n_pad, jobs_pad, ev_pad, resc_cap, n_chunks,
         bool(cancel_redundant), bool(size_dependent), replan, dtype, int(devices),
+        full_outputs=not stream_mode,
+        stream=stream_mode,
         scheduler=sched_name,
         spec=speculation,
     )
@@ -1544,11 +1788,58 @@ def simulate_epochs(
             )
         )
     out = {k: np.concatenate([c[k] for c in chunks], axis=0) for k in chunks[0]}
+    sampled = churn is not None and churn.fail_rate > 0.0
+    if stream_mode:
+        from .stream import StreamStats
+
+        n_unfinished = np.asarray(out["n_unfinished"])
+        truncated = None
+        if sampled:
+            # unfinished jobs have no finish stamp: count them as outrunning
+            # the horizon, exactly like the full path's inf finishes do
+            truncated = (np.asarray(out["fin_max"], np.float64) > out["churn_horizon"]) | (
+                n_unfinished > 0
+            )
+            if truncated.any():
+                _warn_churn_truncated(truncated, churn_pairs_per_worker)
+        stats = StreamStats(
+            count=np.asarray(out["count"]),
+            resp_sum=np.asarray(out["resp_sum"]),
+            resp_sq=np.asarray(out["resp_sq"]),
+            resp_min=np.asarray(out["resp_min"]),
+            resp_max=np.asarray(out["resp_max"]),
+            comp_sum=np.asarray(out["comp_sum"]),
+            busy_sum=np.asarray(out["worker_seconds"]),
+            saved_sum=np.asarray(out["cancelled_seconds_saved"]),
+            hist=np.asarray(out["hist"]),
+        )
+        return EpochStreamReport(
+            arrivals=arrivals,
+            stats=stats,
+            n_unfinished=n_unfinished,
+            worker_seconds=np.asarray(out["worker_seconds"], np.float64),
+            cancelled_seconds_saved=np.asarray(out["cancelled_seconds_saved"], np.float64),
+            n_worker_failures=np.asarray(out["n_worker_failures"]),
+            n_replicas_rescued=np.asarray(out["n_replicas_rescued"]),
+            n_replans=np.asarray(out["n_replans"]),
+            n_speculative=(
+                np.asarray(out["n_speculative"]) if "n_speculative" in out else None
+            ),
+            churn_truncated=truncated,
+        )
     br = np.asarray(out["br"])[:, :n_jobs]
+    finishes = np.asarray(out["finishes"], np.float64)[:, :n_jobs]
+    truncated = None
+    if sampled:
+        # a rep whose timeline outran its sampled horizon ran its tail
+        # churn-free (unfinished jobs at inf count as outrunning it)
+        truncated = finishes.max(axis=1) > out["churn_horizon"]
+        if truncated.any():
+            _warn_churn_truncated(truncated, churn_pairs_per_worker)
     return EpochReport(
         arrivals=arrivals,
         starts=np.asarray(out["starts"], np.float64)[:, :n_jobs],
-        finishes=np.asarray(out["finishes"], np.float64)[:, :n_jobs],
+        finishes=finishes,
         n_batches_used=br >> 16,
         replication_used=br & 0xFFFF,
         worker_seconds=np.asarray(out["worker_seconds"], np.float64),
@@ -1560,6 +1851,7 @@ def simulate_epochs(
         n_speculative=(
             np.asarray(out["n_speculative"]) if "n_speculative" in out else None
         ),
+        churn_truncated=truncated,
     )
 
 
@@ -1610,6 +1902,10 @@ def frontier_job_times_dynamic(
     per candidate per device call; ``devices`` shards the (candidate x
     stream) lane grid via ``shard_map``.  Both are bit-identical to the
     single-call single-device result (per-lane ``SeedSequence`` derivation).
+
+    ``Scenario.outputs`` is accepted and ignored: this path *is* the
+    planner's per-job-times source, so it always runs the reduced-output
+    lanes (no per-event/per-plan buffers) and never the streaming fold.
     """
     sc = resolve_scenario(
         scenario,
@@ -1662,6 +1958,12 @@ def frontier_job_times_dynamic(
     n_jobs = max(1, min(int(n_jobs), int(n_reps)))
     s = math.ceil(n_reps / n_jobs)
     c = len(bs)
+    # auto-size against the widest-scale candidate (smallest B): its jobs
+    # run longest, so its streams are the ones that outlive short horizons
+    churn_pairs_per_worker = _resolve_churn_pairs(
+        churn_pairs_per_worker, dist, churn, n_workers, int(bs.min()), n_tasks,
+        size_dependent, speeds, None, n_jobs,
+    )
     n_pad, jobs_pad, ev_pad, resc_cap, n_chunks = _shapes(
         n_workers, n_jobs, churn, churn_schedule, churn_pairs_per_worker,
         speculation=speculation,
@@ -1679,6 +1981,7 @@ def frontier_job_times_dynamic(
     )
     arrivals_pad = np.concatenate([np.zeros(n_jobs), np.full(jobs_pad - n_jobs, np.inf)])
     chunks = []
+    trunc = np.zeros(0, bool)
     for lo, hi in _rep_slices(s, rep_chunk):
         # lane (ci, rep) has global index ci * s + rep: chunking over reps
         # keeps every lane's SeedSequence identity, hence its draws, unchanged
@@ -1691,8 +1994,12 @@ def frontier_job_times_dynamic(
         )
         fin = np.asarray(out["finishes"], np.float64)
         start = np.asarray(out["starts"], np.float64)
+        if churn is not None and churn.fail_rate > 0.0:
+            trunc = np.append(trunc, fin[:, :n_jobs].max(axis=1) > out["churn_horizon"])
         # unfinished jobs (inf start and finish) score inf, not inf - inf
         with np.errstate(invalid="ignore"):
             t = np.where(np.isfinite(fin), fin - start, np.inf)
         chunks.append(t[:, :n_jobs].reshape(c, (hi - lo) * n_jobs))
+    if trunc.any():
+        _warn_churn_truncated(trunc, churn_pairs_per_worker)
     return np.concatenate(chunks, axis=1)

@@ -282,8 +282,12 @@ class ClusterEngine:
 
         self._worker_seconds = 0.0
         self._saved_seconds = 0.0
-        # cumulative assigned wall-clock per worker: the 'balanced' policy's
-        # load metric (accrued at placement so the jax lane can replay it)
+        # cumulative speed-weighted assigned load per worker (wall-clock
+        # duration / speed, accrued at placement so the jax lane can replay
+        # it): the 'balanced' policy's load metric.  Dividing by speed makes
+        # a slow worker accrue more load per batch than a fast one, so under
+        # heterogeneous speeds the policy steers work toward fast workers
+        # instead of treating equally-busy workers as equally attractive.
         self._load_w = [0.0] * n_workers
         self._n_failures = 0
         self._n_rescued = 0
@@ -342,7 +346,7 @@ class ClusterEngine:
         worker.assignment = (jexec.job.job_id, batch)
         worker.busy_since = now
         worker.scheduled_end = now + duration
-        self._load_w[worker.wid] += duration
+        self._load_w[worker.wid] += duration / worker.speed
         jexec.outstanding.setdefault(batch, set()).add(worker.wid)
         self.events.push(
             now + duration,
@@ -861,12 +865,14 @@ def sample_job_times(
     ``workers_per_job``).  Any space knob routes ``backend="jax"`` to the
     epoch scan's space lane even when the cluster is otherwise static.
 
-    Churn-horizon caveat: the jax path truncates sampled ``churn`` after
+    Churn-horizon note: the jax path samples ``churn`` as a finite stream of
     ``churn_pairs_per_worker`` fail/join pairs per worker (each worker then
-    stays up), while the Python engine samples churn for the whole run --
-    for streams long enough to outlive the default horizon, raise
-    ``churn_pairs_per_worker`` (or pass an explicit ``churn_schedule``,
-    which both backends replay identically and truncate identically).
+    stays up), while the Python engine samples churn for the whole run.
+    The default (``None``) auto-sizes that horizon from the stream length,
+    and a run whose timeline still outruns it emits a loud
+    ``RuntimeWarning`` and sets ``EpochReport.churn_truncated`` -- raise
+    ``churn_pairs_per_worker`` explicitly, or pass a ``churn_schedule``,
+    which both backends replay identically and truncate identically.
 
     The scenario knobs are best passed as one validated
     ``scenario=Scenario(...)`` (which may also carry ``dist`` /

@@ -300,22 +300,21 @@ class RuntimeMaster:
 
     async def _handle_conn(self, reader, writer) -> None:
         msg = await read_msg(reader)
-        if msg is None or msg.get("type") != "register" or len(self.workers) >= self.n_workers:
+        if msg is None or msg.get("type") != "register":
             writer.close()
             return
-        worker = _LiveWorker(
-            wid=len(self.workers),
-            writer=writer,
-            pid=int(msg.get("pid", -1)),
-            last_hb=time.monotonic(),
-        )
-        self.workers.append(worker)
-        self.recorder.record("join", self.recorder.stamp(), wid=worker.wid, pid=worker.pid)
-        send_nowait(writer, {"type": "welcome", "wid": worker.wid, "heartbeat_s": self.heartbeat_s})
-        if len(self.workers) == self.n_workers:
-            self._all_joined.set()
+        worker = self._grant_registration(writer, int(msg.get("pid", -1)))
+        if worker is None:
+            writer.close()
+            return
         while True:
             msg = await read_msg(reader)
+            if worker.writer is not writer:
+                # this connection's registration was retired by a re-join:
+                # whatever the stale socket still delivers (late heartbeats,
+                # its eventual EOF) must not touch the fresh registration
+                writer.close()
+                return
             if msg is None:
                 self._fail(worker, "eof")
                 return
@@ -331,6 +330,58 @@ class RuntimeMaster:
                     worker.progress = float(msg.get("frac", 0.0))
             elif kind == "finish":
                 self._on_finish(worker, msg)
+
+    def _grant_registration(self, writer, pid: int) -> Optional[_LiveWorker]:
+        """Admit a registering connection: fresh wid, re-joined slot, or None.
+
+        Below the worker budget, registrations fill fresh wids exactly as
+        before.  At budget, a new connection may *re-join*: if some worker
+        is dead, its stale registration is retired (socket closed at failure
+        time, epoch already bumped so in-flight messages stay stale) and its
+        wid granted to the newcomer, which becomes dispatchable immediately
+        -- pending rescues first, then the gang, like any capacity gain.
+        The re-join is stamped as a ``join`` event, which
+        :func:`~repro.cluster.runtime.trace.replay_trace` feeds to the
+        engine as an up-transition on the shared churn timeline, so the
+        digital twin replays the recovery exactly.  Registrations after the
+        run finalized (or with every wid alive) are refused.
+        """
+        if self._finalized:
+            return None
+        if len(self.workers) < self.n_workers:
+            worker = _LiveWorker(
+                wid=len(self.workers),
+                writer=writer,
+                pid=pid,
+                last_hb=time.monotonic(),
+            )
+            self.workers.append(worker)
+            self.recorder.record("join", self.recorder.stamp(), wid=worker.wid, pid=worker.pid)
+            send_nowait(
+                writer, {"type": "welcome", "wid": worker.wid, "heartbeat_s": self.heartbeat_s}
+            )
+            if len(self.workers) == self.n_workers:
+                self._all_joined.set()
+            return worker
+        worker = next((w for w in self.workers if not w.alive), None)
+        if worker is None:
+            return None
+        worker.writer = writer
+        worker.pid = pid
+        worker.alive = True
+        worker.assignment = None
+        worker.scheduled_end = math.inf
+        worker.lease_deadline = math.inf
+        worker.progress = None
+        worker.last_hb = time.monotonic()
+        now = self.recorder.stamp()
+        self.recorder.record("join", now, wid=worker.wid, pid=worker.pid)
+        send_nowait(
+            writer, {"type": "welcome", "wid": worker.wid, "heartbeat_s": self.heartbeat_s}
+        )
+        self._assign_rescues(now)
+        self._try_dispatch(now)
+        return worker
 
     async def _watchdog(self) -> None:
         """Missed-heartbeat and blown-lease detection."""

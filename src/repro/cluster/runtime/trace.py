@@ -262,8 +262,10 @@ def replay_trace(events, n_workers: Optional[int] = None, scenario=None):
     dist = _ScriptedService(_scripted_durations(events))
 
     jobs = []
-    fail_times: List[float] = []
-    fail_wids: List[int] = []
+    churn_times: List[float] = []
+    churn_wids: List[int] = []
+    churn_ups: List[bool] = []
+    down: set = set()
     for e in events:
         if e["ev"] == "submit":
             plan = e.get("plan")
@@ -278,15 +280,26 @@ def replay_trace(events, n_workers: Optional[int] = None, scenario=None):
                 )
             )
         elif e["ev"] == "fail":
-            fail_times.append(e["t"])
-            fail_wids.append(e["wid"])
+            churn_times.append(e["t"])
+            churn_wids.append(e["wid"])
+            churn_ups.append(False)
+            down.add(e["wid"])
+        elif e["ev"] == "join" and e["wid"] in down:
+            # a re-join: the master retired the wid's stale registration and
+            # granted it to a fresh connection -- an up-transition on the
+            # engine's shared churn timeline (first-time joins at startup
+            # precede any fail and stay outside the schedule)
+            churn_times.append(e["t"])
+            churn_wids.append(e["wid"])
+            churn_ups.append(True)
+            down.discard(e["wid"])
 
     schedule = None
-    if fail_times:
+    if churn_times:
         schedule = ChurnSchedule(
-            times=tuple(fail_times),
-            wids=tuple(fail_wids),
-            ups=(False,) * len(fail_times),
+            times=tuple(churn_times),
+            wids=tuple(churn_wids),
+            ups=tuple(churn_ups),
         )
     spec_times = tuple(
         e["t"] for e in events if e["ev"] == "dispatch" and e.get("spec")

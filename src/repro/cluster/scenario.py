@@ -76,6 +76,7 @@ _LEGACY_FIELDS = (
     "dtype",
     "rep_chunk",
     "devices",
+    "outputs",
 )
 
 
@@ -142,7 +143,10 @@ class Scenario:
     speeds: Optional[Tuple[float, ...]] = None
     churn: Optional[ChurnProcess] = None
     churn_schedule: Optional[ChurnSchedule] = None
-    churn_pairs_per_worker: int = 8
+    # sampled-churn horizon (fail/join pairs per worker) on the jax lanes;
+    # None auto-sizes it from the stream length (epoch_scan warns loudly if
+    # the simulated timeline still outruns it)
+    churn_pairs_per_worker: Optional[int] = None
     replan: Optional[ReplanConfig] = None
     speculation: Optional[Speculation] = None
     scheduler: Union[str, Scheduler] = "fifo_gang"
@@ -152,6 +156,12 @@ class Scenario:
     dtype: str = "float32"
     rep_chunk: Optional[int] = None
     devices: int = 1
+    # "full" returns per-job starts/finishes (the classic reports); "stream"
+    # carries running aggregates (count, moment sums, min/max, a log-spaced
+    # response histogram) in the scan instead, so trace-scale runs never
+    # materialize (reps x jobs) outputs.  jax backends only; "full" paths
+    # stay bit-identical when this is left at the default.
+    outputs: str = "full"
 
     def __post_init__(self):
         # freeze the sequence-valued fields so the dataclass stays hashable
@@ -242,10 +252,10 @@ class Scenario:
         if self.churn_schedule is not None and len(self.churn_schedule) and n is not None:
             if min(self.churn_schedule.wids) < 0 or max(self.churn_schedule.wids) >= n:
                 raise ValueError(f"Scenario.churn_schedule: worker ids must lie in [0, {n})")
-        if self.churn_pairs_per_worker < 1:
+        if self.churn_pairs_per_worker is not None and self.churn_pairs_per_worker < 1:
             raise ValueError(
-                "Scenario.churn_pairs_per_worker: must be >= 1, "
-                f"got {self.churn_pairs_per_worker}"
+                "Scenario.churn_pairs_per_worker: must be >= 1 (or None to "
+                f"auto-size from the stream), got {self.churn_pairs_per_worker}"
             )
         if self.jobs_per_stream < 1:
             raise ValueError(f"Scenario.jobs_per_stream: must be >= 1, got {self.jobs_per_stream}")
@@ -317,6 +327,10 @@ class Scenario:
             )
         if self.rep_chunk is not None and self.rep_chunk < 1:
             raise ValueError(f"Scenario.rep_chunk: rep_chunk must be >= 1, got {self.rep_chunk}")
+        if self.outputs not in ("full", "stream"):
+            raise ValueError(
+                f"Scenario.outputs: must be 'full' or 'stream', got {self.outputs!r}"
+            )
         if self.devices < 1:
             raise ValueError(f"Scenario.devices: devices must be >= 1, got {self.devices}")
         if backend == "python":
@@ -331,6 +345,12 @@ class Scenario:
                     "Scenario.devices: device sharding is a jax epoch-scan knob "
                     "(backend='jax' on dynamic scenarios); the Python engine is "
                     "single-process"
+                )
+            if self.outputs != "full":
+                raise ValueError(
+                    "Scenario.outputs: streaming aggregation is a jax knob "
+                    "(simulate_epochs / simulate_stream); the Python engine "
+                    "returns full per-job records"
                 )
         return self
 
@@ -381,6 +401,7 @@ class Scenario:
             "dtype": self.dtype,
             "rep_chunk": self.rep_chunk,
             "devices": self.devices,
+            "outputs": self.outputs,
         }
 
     def job_plan_for(self, i: int) -> Optional[JobPlan]:

@@ -19,14 +19,18 @@ engine-wide), so jobs with heterogeneous redundancy plans run concurrently:
   fits on the lowest-wid free workers.  Packs the cluster tightly and lets
   later narrow jobs overtake a wide head-of-line job that does not fit yet.
 * ``balanced``   -- same first-fit admission, but workers are chosen by
-  least cumulative *assigned* wall-clock (ties by wid), spreading load
-  across the pool instead of hammering the low wids.
+  least cumulative *speed-weighted* assigned load (ties by wid), spreading
+  load across the pool instead of hammering the low wids.
 
 "Least loaded" is deliberately measured as cumulative assigned duration
-(accrued when a replica is placed, not when it finishes): the jax epoch scan
-replays placement decisions out of the event loop, and an
-accrue-at-assignment metric is exactly reproducible there, where
-accrue-at-release would depend on commit order within an epoch.
+divided by the worker's speed (accrued when a replica is placed, not when
+it finishes): the jax epoch scan replays placement decisions out of the
+event loop, and an accrue-at-assignment metric is exactly reproducible
+there, where accrue-at-release would depend on commit order within an
+epoch.  The speed weighting makes heterogeneous clusters behave: a slow
+worker accrues more load per placed replica than a fast one, so the policy
+steers work toward fast workers instead of piling it on slow ones (with
+homogeneous speeds the metric reduces to plain assigned wall-clock).
 
 Per-job plans: a :class:`JobPlan` attached to a
 :class:`~repro.cluster.master.Job` overrides any of (worker request, B,
@@ -119,7 +123,7 @@ class PackedScheduler(Scheduler):
 
 
 class BalancedScheduler(Scheduler):
-    """Least-loaded placement: least cumulative assigned time, ties by wid."""
+    """Least-loaded placement: least speed-weighted assigned load, ties by wid."""
 
     name = "balanced"
     space_sharing = True

@@ -1,0 +1,421 @@
+"""Trace-scale streaming simulation: a cluster-day through the jax path.
+
+:func:`~repro.cluster.vectorized.simulate_fifo` materializes ``(n_reps,
+n_jobs, B, r)`` draws and ``(n_reps, n_jobs)`` outputs -- fine for tens of
+jobs, hopeless for the thousands a real cluster trace holds.  This module
+is the trace-scale path:
+
+* the workload is a :class:`~repro.core.traces.TraceStream` -- thousands of
+  arrivals, each resampling one source trace job's empirical service-time
+  distribution (per-job ECDF inverse draws, seeded and versioned);
+* service draws are generated **per slab** on the host (a prefix-stable
+  consumption of each rep's generator, so any slab partition yields the
+  same numbers bit for bit) and fed to one fixed-width compiled kernel --
+  a 10k-job stream compiles once and runs in arrival-ordered slabs;
+* statistics stream: the scan carries running count / moment sums /
+  min-max / a log-spaced response histogram per rep
+  (:data:`~repro.cluster.vectorized.STREAM_HIST_EDGES`) instead of
+  returning per-job outputs, so peak memory is O(slab), independent of the
+  stream length.
+
+The queueing model is **symmetric gang pools**: ``fifo_gang`` is the exact
+single-pool FIFO gang regime of ``simulate_fifo``; ``packed`` / ``balanced``
+split the cluster into ``n_workers // workers_per_job`` disjoint pools and
+dispatch each arrival to the earliest-free pool (ties: lowest index /
+least cumulative placed load) -- the statically-partitioned limit of the
+space-sharing schedulers.  The engine-exact space lane (workers freed
+individually, first-fit over the whole cluster) remains
+:func:`~repro.cluster.epoch_scan.simulate_epochs`, which offers the same
+``outputs="stream"`` aggregation for moderate job counts.
+
+``outputs="full"`` runs the identical kernel while *also* collecting the
+per-job arrays, and :func:`fold_stream_stats` re-derives the accumulators
+from them with the same fold, in the same job order, in the same dtype --
+the property suite asserts streaming == materialized **bit for bit** (f64).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.traces import TraceStream
+from .scenario import Scenario
+from .vectorized import (
+    STREAM_HIST_BINS,
+    STREAM_HIST_EDGES,
+    _stream_slab,
+    stream_acc_init,
+)
+
+__all__ = [
+    "StreamStats",
+    "StreamFullReport",
+    "simulate_stream",
+    "fold_stream_stats",
+    "epoch_stream_stats",
+]
+
+_ACC_FIELDS = (
+    "count",
+    "resp_sum",
+    "resp_sq",
+    "resp_min",
+    "resp_max",
+    "comp_sum",
+    "busy_sum",
+    "saved_sum",
+    "hist",
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamStats:
+    """Streaming aggregates of one run (axis 0 = Monte-Carlo rep).
+
+    Everything a trace-scale sweep reports, in O(n_reps) memory: response
+    moments and extremes, total compute / charged worker-seconds /
+    cancellation savings, and a fixed log-spaced response histogram
+    (:data:`~repro.cluster.vectorized.STREAM_HIST_EDGES`) standing in for
+    the full response vector.  Integer counts and a fixed fold order make
+    every field an exact function of the run, not an approximation -- only
+    :meth:`quantile` is resolution-limited (one histogram bin, ~18%).
+    """
+
+    count: np.ndarray  # (S,) completed jobs
+    resp_sum: np.ndarray  # (S,) sum of response times
+    resp_sq: np.ndarray  # (S,) sum of squared response times
+    resp_min: np.ndarray  # (S,)
+    resp_max: np.ndarray  # (S,)
+    comp_sum: np.ndarray  # (S,) sum of compute (cover) times
+    busy_sum: np.ndarray  # (S,) charged worker-seconds
+    saved_sum: np.ndarray  # (S,) cancelled-seconds-saved
+    hist: np.ndarray  # (S, STREAM_HIST_BINS) response histogram
+
+    @classmethod
+    def from_device(cls, acc: dict) -> "StreamStats":
+        return cls(**{k: np.asarray(acc[k]) for k in _ACC_FIELDS})
+
+    @property
+    def mean_response(self) -> np.ndarray:
+        return self.resp_sum / np.maximum(self.count, 1)
+
+    @property
+    def std_response(self) -> np.ndarray:
+        m = self.mean_response
+        var = self.resp_sq / np.maximum(self.count, 1) - m * m
+        return np.sqrt(np.maximum(var, 0.0))
+
+    @property
+    def worker_seconds(self) -> np.ndarray:
+        return self.busy_sum
+
+    @property
+    def cancelled_seconds_saved(self) -> np.ndarray:
+        return self.saved_sum
+
+    def quantile(self, q: float) -> float:
+        """Pooled response quantile from the histogram (bin upper edge).
+
+        Resolution is one log bin (adjacent edges differ by ~18%); the exact
+        extremes are ``resp_min`` / ``resp_max``.
+        """
+        h = self.hist.sum(axis=0)
+        total = int(h.sum())
+        if total == 0:
+            return float("nan")
+        k = int(np.ceil(float(q) * total))
+        idx = int(np.searchsorted(np.cumsum(h), max(k, 1)))
+        if idx >= STREAM_HIST_EDGES.size:
+            return float(self.resp_max.max())
+        return float(STREAM_HIST_EDGES[idx])
+
+    def summary(self) -> dict:
+        """Pooled scalar summary (the bench/golden payload)."""
+        total = int(self.count.sum())
+        return {
+            "n_jobs_done": total,
+            "mean_response": float(self.resp_sum.sum() / max(total, 1)),
+            "p50_response": self.quantile(0.50),
+            "p95_response": self.quantile(0.95),
+            "p99_response": self.quantile(0.99),
+            "max_response": float(self.resp_max.max()),
+            "mean_compute": float(self.comp_sum.sum() / max(total, 1)),
+            "worker_seconds": float(self.busy_sum.sum() / self.count.shape[0]),
+            "cancelled_seconds_saved": float(
+                self.saved_sum.sum() / self.count.shape[0]
+            ),
+        }
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamFullReport:
+    """``outputs="full"`` result: the materialized reference of the stream.
+
+    Per-job arrays stay in the kernel's compute dtype (what the device
+    actually produced); absolute times are rebuilt on the host in float64
+    from the relative waits, exactly like :func:`simulate_fifo`.  ``stats``
+    carries the accumulators the very same kernel run computed -- the
+    streaming side of the bit-for-bit property.
+    """
+
+    arrivals: np.ndarray  # (J,) float64
+    waits: np.ndarray  # (S, J) queue waits, compute dtype
+    t_job: np.ndarray  # (S, J) cover times, compute dtype
+    busy_j: np.ndarray  # (S, J) charged worker-seconds per job
+    planned_j: np.ndarray  # (S, J) placed (full-duration) worker-seconds
+    saved_j: np.ndarray  # (S, J) cancellation savings per job
+    stats: StreamStats
+
+    @property
+    def starts(self) -> np.ndarray:
+        return self.arrivals[None, :] + np.asarray(self.waits, dtype=np.float64)
+
+    @property
+    def finishes(self) -> np.ndarray:
+        return self.starts + np.asarray(self.t_job, dtype=np.float64)
+
+    @property
+    def response_times(self) -> np.ndarray:
+        return self.finishes - self.arrivals[None, :]
+
+
+def fold_stream_stats(waits, t_job, busy_j, planned_j, saved_j) -> StreamStats:
+    """The host reference fold: materialized arrays -> StreamStats.
+
+    Replays exactly the accumulator updates the device scan performs -- same
+    job order (arrival order), same operations, same dtype, same histogram
+    edges -- as a sequential numpy loop.  This is what "streaming equals
+    materialized bit for bit" means operationally: this fold of the full
+    outputs must equal the device's carried accumulators exactly.
+    """
+    waits = np.asarray(waits)
+    t_job = np.asarray(t_job)
+    dt = waits.dtype
+    s, n = waits.shape
+    edges = STREAM_HIST_EDGES.astype(dt)
+    count = np.zeros(s, dtype=np.int32)
+    resp_sum = np.zeros(s, dtype=dt)
+    resp_sq = np.zeros(s, dtype=dt)
+    resp_min = np.full(s, np.inf, dtype=dt)
+    resp_max = np.full(s, -np.inf, dtype=dt)
+    comp_sum = np.zeros(s, dtype=dt)
+    busy_sum = np.zeros(s, dtype=dt)
+    saved_sum = np.zeros(s, dtype=dt)
+    hist = np.zeros((s, STREAM_HIST_BINS), dtype=np.int32)
+    rows = np.arange(s)
+    for j in range(n):
+        resp = waits[:, j] + t_job[:, j]
+        count += 1
+        resp_sum += resp
+        resp_sq += resp * resp
+        resp_min = np.minimum(resp_min, resp)
+        resp_max = np.maximum(resp_max, resp)
+        comp_sum += t_job[:, j]
+        busy_sum += np.asarray(busy_j)[:, j].astype(dt, copy=False)
+        saved_sum += np.asarray(saved_j)[:, j].astype(dt, copy=False)
+        hist[rows, np.searchsorted(edges, resp, side="right")] += 1
+    return StreamStats(
+        count=count,
+        resp_sum=resp_sum,
+        resp_sq=resp_sq,
+        resp_min=resp_min,
+        resp_max=resp_max,
+        comp_sum=comp_sum,
+        busy_sum=busy_sum,
+        saved_sum=saved_sum,
+        hist=hist,
+    )
+
+
+def epoch_stream_stats(report) -> StreamStats:
+    """Host reference fold for the epoch scan's ``outputs="stream"`` mode.
+
+    Folds an ``outputs="full"`` :class:`~repro.cluster.epoch_scan.EpochReport`
+    into the same accumulators the on-device wrapper
+    (``epoch_scan._wrap_stream_lane``) carries -- same arrival order, same
+    masking of never-finished jobs, same operations.  On float64 lanes the
+    result equals ``simulate_epochs(..., outputs="stream").stats`` bit for
+    bit on shared seeds (float32 lanes fold on device in f32, so only the
+    f64 contract is exact).  ``busy_sum`` / ``saved_sum`` mirror the
+    report's per-rep worker-seconds totals, as in the device report.
+    """
+    arr = np.asarray(report.arrivals, dtype=np.float64)
+    st = np.asarray(report.starts, dtype=np.float64)
+    fin = np.asarray(report.finishes, dtype=np.float64)
+    s, n = fin.shape
+    edges = STREAM_HIST_EDGES
+    count = np.zeros(s, dtype=np.int32)
+    resp_sum = np.zeros(s)
+    resp_sq = np.zeros(s)
+    resp_min = np.full(s, np.inf)
+    resp_max = np.full(s, -np.inf)
+    comp_sum = np.zeros(s)
+    hist = np.zeros((s, STREAM_HIST_BINS), dtype=np.int32)
+    rows = np.arange(s)
+    for j in range(n):
+        f = fin[:, j]
+        m = np.isfinite(f)
+        resp = f - arr[j]
+        comp = f - st[:, j]
+        count += m
+        resp_sum += np.where(m, resp, 0.0)
+        resp_sq += np.where(m, resp * resp, 0.0)
+        resp_min = np.minimum(resp_min, np.where(m, resp, np.inf))
+        resp_max = np.maximum(resp_max, np.where(m, resp, -np.inf))
+        comp_sum += np.where(m, comp, 0.0)
+        hist[rows, np.searchsorted(edges, resp, side="right")] += m
+    return StreamStats(
+        count=count,
+        resp_sum=resp_sum,
+        resp_sq=resp_sq,
+        resp_min=resp_min,
+        resp_max=resp_max,
+        comp_sum=comp_sum,
+        busy_sum=np.asarray(report.worker_seconds, dtype=np.float64),
+        saved_sum=np.asarray(report.cancelled_seconds_saved, dtype=np.float64),
+        hist=hist,
+    )
+
+
+def _resolve_pools(sc: Scenario, n_workers: int, n_batches: int):
+    """Map the scenario's scheduler knobs onto (n_gangs, pool_width, b, r)."""
+    name = sc.scheduler_name
+    if name == "fifo_gang":
+        if sc.workers_per_job is not None and int(sc.workers_per_job) != int(n_workers):
+            raise ValueError(
+                "simulate_stream: workers_per_job applies to the packed/"
+                "balanced pool schedulers; fifo_gang uses the whole cluster"
+            )
+        pool, gangs = int(n_workers), 1
+    else:
+        if sc.workers_per_job is None:
+            raise ValueError(
+                f"simulate_stream: scheduler={name!r} needs workers_per_job "
+                "(the pool width) set on the Scenario"
+            )
+        pool = int(sc.workers_per_job)
+        gangs = int(n_workers) // pool
+        if gangs < 1:
+            raise ValueError(
+                f"simulate_stream: workers_per_job={pool} exceeds "
+                f"n_workers={n_workers}"
+            )
+    b = int(n_batches)
+    if not (1 <= b <= pool):
+        raise ValueError(
+            f"simulate_stream: n_batches must lie in [1, {pool}] "
+            f"(the pool width), got {b}"
+        )
+    return gangs, pool, b, pool // b
+
+
+def simulate_stream(
+    stream: TraceStream,
+    n_workers: int,
+    n_batches: int,
+    n_reps: int,
+    *,
+    scenario: Scenario | None = None,
+    slab: int | None = 1024,
+):
+    """Run a :class:`~repro.core.traces.TraceStream` through the jax path.
+
+    Returns :class:`StreamStats` (``scenario.outputs == "stream"``, the
+    default here) or :class:`StreamFullReport` (``outputs="full"``).  Knobs
+    honoured from the scenario: ``cancel_redundant``, ``size_dependent``,
+    ``scheduler`` (+ ``workers_per_job``), ``dtype``, ``outputs``.  Dynamic
+    knobs (churn, speeds, replan, speculation, per-job plans) belong to
+    :func:`~repro.cluster.epoch_scan.simulate_epochs` -- this path raises
+    on them rather than silently ignoring the physics.
+
+    ``slab`` bounds host+device memory: draws, padding, and outputs are all
+    O(slab) per step, and the kernel compiles once for the fixed slab width.
+    Draw streams are owned by the :class:`TraceStream` seed (one generator
+    per rep, consumed slab-wise in arrival order), so the slab size never
+    changes a single drawn number.
+    """
+    if not isinstance(stream, TraceStream):
+        raise TypeError(f"simulate_stream expects a TraceStream, got {type(stream)}")
+    sc = scenario if scenario is not None else Scenario(outputs="stream")
+    sc.validate(n_workers, backend="jax")
+    for field in ("churn", "churn_schedule", "speeds", "replan", "speculation", "job_plans"):
+        if getattr(sc, field) is not None:
+            raise ValueError(
+                f"simulate_stream: Scenario.{field} is not supported on the "
+                "streaming gang-pool path; use simulate_epochs for dynamic "
+                "scenarios"
+            )
+    if sc.dtype == "float64":
+        import jax
+
+        if not jax.config.jax_enable_x64:
+            raise ValueError(
+                "dtype='float64' needs jax x64 enabled "
+                "(jax.config.update('jax_enable_x64', True))"
+            )
+    dt = jnp.float64 if sc.dtype == "float64" else jnp.float32
+    gangs, _pool, b, r = _resolve_pools(sc, n_workers, n_batches)
+    balanced = sc.scheduler_name == "balanced"
+    n_reps = int(n_reps)
+    n = stream.n_jobs
+    j_pad = n if slab is None else min(int(slab), n)
+    collect = sc.outputs == "full"
+
+    rngs = [stream.make_rng(rep) for rep in range(n_reps)]
+    # host-side f64 precompute, O(n): gaps and per-job batch-size scales
+    diffs = np.append(np.diff(stream.arrivals), 0.0)
+    scales_all = (
+        stream.n_tasks.astype(np.float64) / b
+        if sc.size_dependent
+        else np.ones(n, dtype=np.float64)
+    )
+    edges = jnp.asarray(STREAM_HIST_EDGES, dtype=dt)
+    rel_free = jnp.full((n_reps, gangs), -float(stream.arrivals[0]), dtype=dt)
+    load = jnp.zeros((n_reps, gangs), dtype=dt)
+    acc = stream_acc_init(n_reps, dt)
+    full_parts: list = []
+    for lo, hi in stream.slabs(j_pad):
+        k = hi - lo
+        draws = np.stack(
+            [stream.sample_slab(rngs[s], lo, hi, b * r) for s in range(n_reps)]
+        ).reshape(n_reps, k, b, r)
+        if k < j_pad:  # final partial slab: pad with masked-out unit jobs
+            draws = np.concatenate(
+                [draws, np.ones((n_reps, j_pad - k, b, r))], axis=1
+            )
+        pad = (0, j_pad - k)
+        rel_free, load, acc, outs = _stream_slab(
+            jnp.asarray(draws, dtype=dt),
+            jnp.asarray(np.pad(scales_all[lo:hi], pad, constant_values=1.0), dtype=dt),
+            jnp.asarray(np.pad(diffs[lo:hi], pad), dtype=dt),
+            jnp.asarray(np.arange(j_pad) < k),
+            rel_free,
+            load,
+            acc,
+            edges,
+            b=b,
+            r=r,
+            n_gangs=gangs,
+            cancel_redundant=bool(sc.cancel_redundant),
+            balanced=balanced,
+            collect=collect,
+        )
+        if collect:
+            full_parts.append(tuple(np.asarray(o)[:, :k] for o in outs))
+    stats = StreamStats.from_device(acc)
+    if not collect:
+        return stats
+    waits, t_job, busy_j, planned_j, saved_j = (
+        np.concatenate(parts, axis=1) for parts in zip(*full_parts)
+    )
+    return StreamFullReport(
+        arrivals=stream.arrivals,
+        waits=waits,
+        t_job=t_job,
+        busy_j=busy_j,
+        planned_j=planned_j,
+        saved_j=saved_j,
+        stats=stats,
+    )

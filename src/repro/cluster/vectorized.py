@@ -50,7 +50,13 @@ import numpy as np
 from ..core.service_time import ServiceTime
 from ..core.simulator import gang_cover_times
 
-__all__ = ["frontier_job_times", "simulate_fifo", "FifoReport"]
+__all__ = [
+    "frontier_job_times",
+    "simulate_fifo",
+    "FifoReport",
+    "STREAM_HIST_EDGES",
+    "STREAM_HIST_BINS",
+]
 
 
 def _candidate_grid(n_workers: int, candidates) -> tuple[np.ndarray, np.ndarray]:
@@ -269,8 +275,10 @@ def simulate_fifo(
     timeline), which shares this module's masked-cover semantics per batch.
     Precision caveat on that delegated path: the scan lanes carry *absolute*
     times in ``dtype`` (default float32), unlike this kernel's float64
-    arrival arithmetic -- for arrival offsets large enough to quantize
-    (~1e7), pass ``dtype="float64"`` (requires jax x64) exactly as with
+    arrival arithmetic -- arrival offsets large enough to quantize (beyond
+    ~8.4e6 s, where a float32 ulp approaches one second) now raise a
+    ``ValueError`` naming the fix rather than returning silently corrupted
+    statistics; pass ``dtype="float64"`` (requires jax x64) exactly as with
     :func:`~repro.cluster.epoch_scan.simulate_epochs`.
     """
     from .scheduler import is_space
@@ -339,3 +347,129 @@ def simulate_fifo(
         worker_seconds=np.asarray(busy, dtype=np.float64),
         cancelled_seconds_saved=np.asarray(saved, dtype=np.float64),
     )
+
+
+# --------------------------------------------------------------------------
+# trace-scale streaming: multi-gang pools with an accumulator carry
+# --------------------------------------------------------------------------
+#
+# The arrival scan above materializes (n_reps, n_jobs) outputs and one gang.
+# The slab kernel below is its trace-scale sibling: G symmetric gang *pools*
+# (fifo_gang is the G=1 special case), an accumulator dict carried through
+# the scan instead of per-job ys, and a fixed padded slab width so a
+# 10k-job stream compiles once and runs in slabs.  The carry holds pool
+# free-times *relative to the current arrival* (shifted by each
+# inter-arrival gap), so no absolute timestamp ever enters the device --
+# the float32 arrival-span hazard of the absolute-time lanes does not
+# exist here.
+
+# Log-spaced response-time histogram edges shared by the on-device fold and
+# the host reference fold: 1 ms .. 1e6 s at ~18% per-bin resolution.  Bin i
+# holds responses in [edges[i-1], edges[i]); integer counts make the sketch
+# exactly order-independent, so streaming equals materialized bit for bit.
+STREAM_HIST_EDGES = np.logspace(-3.0, 6.0, 128)
+STREAM_HIST_BINS = STREAM_HIST_EDGES.size + 1
+
+
+def stream_acc_init(n_reps: int, dtype) -> dict:
+    """Zeroed accumulator carry for :func:`_stream_slab` (one row per rep)."""
+    z = jnp.zeros(n_reps, dtype=dtype)
+    return {
+        "count": jnp.zeros(n_reps, dtype=jnp.int32),
+        "resp_sum": z,
+        "resp_sq": z,
+        "resp_min": jnp.full(n_reps, jnp.inf, dtype=dtype),
+        "resp_max": jnp.full(n_reps, -jnp.inf, dtype=dtype),
+        "comp_sum": z,
+        "busy_sum": z,
+        "saved_sum": z,
+        "hist": jnp.zeros((n_reps, STREAM_HIST_BINS), dtype=jnp.int32),
+    }
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("b", "r", "n_gangs", "cancel_redundant", "balanced", "collect"),
+)
+def _stream_slab(
+    draws: jax.Array,  # (S, J, b, r) unscaled service draws
+    scales: jax.Array,  # (J,) per-job batch-size scale
+    gaps: jax.Array,  # (J,) inter-arrival deltas (gap[j] = a[j+1] - a[j])
+    mask: jax.Array,  # (J,) bool: real job vs slab padding
+    rel_free: jax.Array,  # (S, G) pool free-times relative to current arrival
+    load: jax.Array,  # (S, G) cumulative placed load (balanced tie-break)
+    acc: dict,  # accumulator carry, see stream_acc_init
+    edges: jax.Array,  # histogram edges in the compute dtype
+    *,
+    b: int,
+    r: int,
+    n_gangs: int,
+    cancel_redundant: bool,
+    balanced: bool,
+    collect: bool,
+):
+    """One slab of the multi-gang streaming FIFO scan.
+
+    Each arrival is a gang of ``b`` batches x ``r`` replicas dispatched to
+    the earliest-free pool (ties: lowest index for packed/fifo, least
+    cumulative placed load for balanced).  The accumulators update *inside*
+    the scan step -- response = wait + cover time, computed before any
+    absolute time could exist -- so ``collect=False`` returns only
+    O(n_reps)-sized state.  ``collect=True`` additionally returns the per-job
+    arrays (waits, cover times, charged/planned/saved worker-seconds) for
+    the materialized reference path; the accumulators are computed in both
+    modes, which is what the bit-for-bit streaming-vs-materialized property
+    asserts against.
+    """
+    d = draws * scales[None, :, None, None]
+    batch_min = jnp.min(d, axis=-1)  # (S, J, b)
+    t_job = gang_cover_times(d, jnp.asarray(b), jnp.asarray(r))  # (S, J)
+    last_replica = jnp.max(d, axis=(-2, -1))
+    hold = t_job if cancel_redundant else last_replica
+    planned = jnp.sum(d, axis=(-2, -1))  # every replica's full duration
+    busy = r * jnp.sum(batch_min, axis=-1) if cancel_redundant else planned
+    saved = planned - busy
+    gidx = jnp.arange(n_gangs, dtype=d.dtype)
+
+    def step(carry, inp):
+        rel_free, load, acc = carry
+        t, h, w, pl, v, gap, m = inp  # (S,) each; gap/m scalar
+        feas = jnp.min(rel_free, axis=1)  # (S,) earliest any pool frees
+        elig = rel_free <= feas[:, None]
+        key = jnp.where(elig, load if balanced else gidx[None, :], jnp.inf)
+        g = jnp.argmin(key, axis=1)  # ties -> lowest pool index
+        wait = jnp.maximum(feas, 0.0)
+        resp = wait + t
+        sel = jnp.arange(n_gangs)[None, :] == g[:, None]
+        upd = jnp.where(sel, (wait + h)[:, None], rel_free)
+        rel_free = jnp.where(m, upd, rel_free) - jnp.where(m, gap, 0.0)
+        load = load + jnp.where(m & sel, pl[:, None], 0.0)
+        one = m.astype(jnp.int32)
+        bins = jnp.searchsorted(edges, resp, side="right")
+        # max(sq, 0) is a value-identity on a square, but it pins the multiply
+        # as a standalone IEEE op: XLA's CPU loop codegen otherwise contracts
+        # mul+accumulate into an FMA (even across optimization_barrier once
+        # the select is hoisted), breaking bit-equality with the fma-free
+        # host reference fold
+        resp2 = jnp.maximum(resp * resp, 0.0)
+        acc = {
+            "count": acc["count"] + one,
+            "resp_sum": acc["resp_sum"] + jnp.where(m, resp, 0.0),
+            "resp_sq": acc["resp_sq"] + jnp.where(m, resp2, 0.0),
+            "resp_min": jnp.minimum(acc["resp_min"], jnp.where(m, resp, jnp.inf)),
+            "resp_max": jnp.maximum(acc["resp_max"], jnp.where(m, resp, -jnp.inf)),
+            "comp_sum": acc["comp_sum"] + jnp.where(m, t, 0.0),
+            "busy_sum": acc["busy_sum"] + jnp.where(m, w, 0.0),
+            "saved_sum": acc["saved_sum"] + jnp.where(m, v, 0.0),
+            "hist": acc["hist"].at[jnp.arange(resp.shape[0]), bins].add(one),
+        }
+        return (rel_free, load, acc), (wait if collect else 0.0)
+
+    (rel_free, load, acc), waits = jax.lax.scan(
+        step,
+        (rel_free, load, acc),
+        (t_job.T, hold.T, busy.T, planned.T, saved.T, gaps, mask),
+    )
+    if collect:
+        return rel_free, load, acc, (waits.T, t_job, busy, planned, saved)
+    return rel_free, load, acc, None

@@ -236,6 +236,14 @@ class RedundancyPlanner:
         frontier path raises if they are set, rather than silently ignoring
         them.
 
+        ``Scenario.outputs`` rides through untouched: candidate scoring
+        needs per-job compute times, so the frontier paths always run the
+        reduced-output lanes (``full_outputs=False`` -- no per-event or
+        per-job-plan buffers) regardless of the knob, and
+        ``outputs="stream"`` changes nothing here.  The streaming
+        aggregation applies to the *simulation* entry points
+        (``simulate_epochs`` / ``simulate_stream``), not to planning.
+
         All scenario knobs are best passed as one validated
         ``scenario=Scenario(...)`` (which may also carry ``dist``); the
         loose keyword forms keep working behind a
@@ -454,7 +462,10 @@ def plan_sweep(
     Scenario knobs are best passed as one ``scenario=Scenario(...)``; the
     loose keyword forms keep working behind a ``DeprecationWarning`` shim.
     A callable ``speeds`` stays a sweep-level convenience (it cannot live in
-    a frozen Scenario) and is re-attached per budget.
+    a frozen Scenario) and is re-attached per budget.  ``Scenario.outputs``
+    forwards like every other field but does not change planning: every grid
+    point scores on the reduced-output frontier lanes either way (see
+    :meth:`RedundancyPlanner.plan_cluster`).
     """
     from ..cluster.scenario import resolve_scenario
 

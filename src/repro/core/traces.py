@@ -21,7 +21,16 @@ from typing import Dict, List
 
 import numpy as np
 
-__all__ = ["TraceJob", "synthetic_google_jobs", "save_jobs", "load_jobs", "tail_family"]
+__all__ = [
+    "TraceJob",
+    "TraceStream",
+    "STREAM_VERSION",
+    "synthetic_google_jobs",
+    "synthetic_cluster_day",
+    "save_jobs",
+    "load_jobs",
+    "tail_family",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -69,6 +78,135 @@ def synthetic_google_jobs(seed: int = 2020) -> List[TraceJob]:
         x = np.where(mask, x * rng.uniform(10.0, 30.0, size=n), x)
         jobs.append(TraceJob(name=f"job{i}", family="heavy", task_times=x))
     return jobs
+
+
+# --------------------------------------------------------------------------
+# trace-scale streams: thousands of jobs resampled from per-job ECDFs
+# --------------------------------------------------------------------------
+
+# Bump when the stream construction (arrival law, source assignment, ECDF
+# inverse) changes incompatibly: the version is folded into every seed
+# derivation, so old and new code can never silently produce the same draws.
+STREAM_VERSION = 1
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class TraceStream:
+    """A cluster-scale workload: many arrivals resampling a few trace jobs.
+
+    The paper's trace section evaluates tens of jobs; a cluster-*day* is
+    thousands.  A stream keeps only what that scale needs -- sorted arrival
+    times, a source-job id per arrival, and one concatenated sorted-sample
+    buffer over the source jobs -- and resamples service times *per slab* via
+    the ECDF inverse (``sorted_samples[floor(u * m)]``), so no caller ever
+    materializes the full (reps x jobs x batches) draw tensor.
+
+    Draws are seeded and versioned: ``sample_slab`` consumes a caller-owned
+    ``numpy.random.Generator`` strictly left-to-right along the job axis, so
+    the draws for jobs ``[lo, hi)`` are a prefix-stable function of the
+    generator state -- any slab partition of the same stream yields the same
+    numbers bit for bit.
+    """
+
+    arrivals: np.ndarray  # (n_jobs,) float64, sorted ascending
+    job_ids: np.ndarray  # (n_jobs,) index into sources
+    sources: tuple  # tuple[TraceJob, ...]
+    seed: int
+    version: int = STREAM_VERSION
+
+    def __post_init__(self):
+        arr = np.ascontiguousarray(np.asarray(self.arrivals, dtype=np.float64))
+        if arr.ndim != 1 or arr.size == 0:
+            raise ValueError("TraceStream needs a non-empty 1-D arrival vector")
+        if np.any(np.diff(arr) < 0):
+            raise ValueError("TraceStream arrivals must be sorted ascending")
+        jid = np.ascontiguousarray(np.asarray(self.job_ids, dtype=np.int64))
+        if jid.shape != arr.shape:
+            raise ValueError("TraceStream job_ids must match arrivals in shape")
+        if not self.sources:
+            raise ValueError("TraceStream needs at least one source TraceJob")
+        if jid.min() < 0 or jid.max() >= len(self.sources):
+            raise ValueError("TraceStream job_ids index outside sources")
+        object.__setattr__(self, "arrivals", arr)
+        object.__setattr__(self, "job_ids", jid)
+        # concatenated per-source sorted samples + offsets: one gather serves
+        # every ECDF inverse draw of a slab
+        sizes = np.array([s.n_tasks for s in self.sources], dtype=np.int64)
+        off = np.zeros(len(self.sources), dtype=np.int64)
+        np.cumsum(sizes[:-1], out=off[1:])
+        flat = np.concatenate(
+            [np.sort(np.asarray(s.task_times, dtype=np.float64)) for s in self.sources]
+        )
+        object.__setattr__(self, "_sizes", sizes)
+        object.__setattr__(self, "_off", off)
+        object.__setattr__(self, "_flat", flat)
+
+    @property
+    def n_jobs(self) -> int:
+        return int(self.arrivals.size)
+
+    @property
+    def n_tasks(self) -> np.ndarray:
+        """Per-arrival task count: the source job's recorded task count."""
+        return self._sizes[self.job_ids]
+
+    def slabs(self, slab: int | None):
+        """Yield ``(lo, hi)`` index ranges covering the stream in order."""
+        n = self.n_jobs
+        slab = n if slab is None else int(slab)
+        if slab <= 0:
+            raise ValueError(f"slab must be positive, got {slab}")
+        for lo in range(0, n, slab):
+            yield lo, min(lo + slab, n)
+
+    def make_rng(self, rep: int) -> np.random.Generator:
+        """The rep's draw stream, derived from (seed, version, rep)."""
+        return np.random.default_rng(
+            np.random.SeedSequence((int(self.seed), int(self.version), int(rep)))
+        )
+
+    def sample_slab(self, rng: np.random.Generator, lo: int, hi: int, n_slots: int):
+        """ECDF-inverse service draws for jobs ``[lo, hi)``: (hi-lo, n_slots).
+
+        Row ``i`` draws ``n_slots`` iid samples from the empirical
+        distribution of source job ``job_ids[lo + i]`` -- the inverse-CDF
+        transform on its sorted task times.  Exactly ``(hi-lo) * n_slots``
+        uniforms are consumed, row-major, so slab partitioning never changes
+        which uniform lands on which (job, slot) pair.
+        """
+        jid = self.job_ids[lo:hi]
+        u = rng.random((hi - lo, int(n_slots)))
+        m = self._sizes[jid][:, None]
+        idx = np.minimum((u * m).astype(np.int64), m - 1)
+        return self._flat[self._off[jid][:, None] + idx]
+
+
+def synthetic_cluster_day(
+    n_jobs: int = 10_000,
+    duration: float = 86_400.0,
+    seed: int = 7,
+    families=("exponential", "heavy"),
+    trace_seed: int = 2020,
+) -> TraceStream:
+    """A synthetic cluster-day: ``n_jobs`` arrivals over ``duration`` seconds.
+
+    Arrivals are sorted uniforms over the day (a Poisson process conditioned
+    on its count) and each arrival resamples one of the
+    :func:`synthetic_google_jobs` source jobs restricted to ``families``,
+    chosen uniformly.  Fully determined by ``(seed, trace_seed,
+    STREAM_VERSION)``.
+    """
+    sources = tuple(
+        j for j in synthetic_google_jobs(trace_seed) if j.family in families
+    )
+    if not sources:
+        raise ValueError(f"no synthetic trace jobs in families {families!r}")
+    rng = np.random.default_rng(
+        np.random.SeedSequence((int(seed), STREAM_VERSION, 0xDA7))
+    )
+    arrivals = np.sort(rng.uniform(0.0, float(duration), size=int(n_jobs)))
+    job_ids = rng.integers(0, len(sources), size=int(n_jobs))
+    return TraceStream(arrivals=arrivals, job_ids=job_ids, sources=sources, seed=seed)
 
 
 def tail_family(task_times: np.ndarray) -> str:

@@ -92,6 +92,29 @@ def test_deterministic_and_seed_sensitive():
     assert not np.array_equal(a.finishes, c.finishes)
 
 
+def test_churn_horizon_autosizes_and_warns_when_truncation_bites():
+    """Sampled churn no longer silently truncates under long streams: the
+    default horizon auto-sizes from the stream length (no warning, no flag),
+    while an explicit short horizon that the timeline outruns emits a loud
+    RuntimeWarning and flags the report."""
+    import warnings as _warnings
+
+    d = Empirical(samples=(1.0,))
+    churn = ChurnProcess(fail_rate=0.5, mean_downtime=0.5)
+    arr = np.arange(40, dtype=np.float64)  # ~40+ s stream, churn period 2.5 s
+    with _warnings.catch_warnings():
+        _warnings.simplefilter("error", RuntimeWarning)  # auto horizon covers it
+        rep = simulate_epochs(d, 4, 2, arr, 3, seed=5, churn=churn)
+    assert rep.churn_truncated is not None and not rep.churn_truncated.any()
+    with pytest.warns(RuntimeWarning, match="churn horizon"):
+        short = simulate_epochs(
+            d, 4, 2, arr, 3, seed=5, churn=churn, churn_pairs_per_worker=1
+        )
+    assert short.churn_truncated.any()
+    # churn-free runs carry no flag at all
+    assert simulate_epochs(d, 4, 2, arr[:4], 1, seed=5).churn_truncated is None
+
+
 # --------------------------------------------------------------------------
 # exact differential: shared schedule + constant service time pins every draw
 # --------------------------------------------------------------------------
@@ -516,9 +539,10 @@ def test_sharded_devices_match_single_device():
 
 
 def test_float64_lanes_fix_large_arrival_offsets():
-    """The documented float32 caveat, now fixed by dtype='float64': absolute
-    times ~1e7 quantize float32 queue waits, while float64 lanes track the
-    (float64) engine to ~1e-6."""
+    """Absolute times ~1e7 would quantize float32 queue waits (a ulp there is
+    ~1 s); the float32 lane now refuses such arrivals loudly, naming
+    dtype='float64', while float64 lanes track the (float64) engine to
+    ~1e-6."""
     import jax
 
     d = Empirical(samples=(1.3,))
@@ -532,23 +556,29 @@ def test_float64_lanes_fix_large_arrival_offsets():
     er = ClusterEngine(n, seed=3, n_batches=b, speeds=speeds).run(jobs)
     e_start = np.array([r.start for r in er.records])
     e_fin = np.array([r.finish for r in er.records])
-    f32 = simulate_epochs(d, n, b, arr, 1, seed=3, speeds=speeds)
+    # the float32 lane refuses rather than returning quantized statistics,
+    # and the message names the fix
+    with pytest.raises(ValueError, match=r'dtype="float64"'):
+        simulate_epochs(d, n, b, arr, 1, seed=3, speeds=speeds)
+    # ... the space-delegated lane of simulate_fifo inherits the same guard
+    with pytest.raises(ValueError, match=r'dtype="float64"'):
+        simulate_fifo(d, n, b, arr, 1, seed=3, scheduler="packed", workers_per_job=2)
+    # arrivals within the f32-safe range stay accepted on the float32 lane
+    simulate_epochs(d, n, b, arr - off, 1, seed=3, speeds=speeds)
     prev = jax.config.jax_enable_x64
     jax.config.update("jax_enable_x64", True)
     try:
         f64 = simulate_epochs(d, n, b, arr, 1, seed=3, speeds=speeds, dtype="float64")
     finally:
         jax.config.update("jax_enable_x64", prev)
-    err32 = np.max(np.abs(f32.finishes[0] - e_fin))
     err64 = np.max(np.abs(f64.finishes[0] - e_fin))
     assert err64 < 1e-6, err64
     assert np.max(np.abs(f64.starts[0] - e_start)) < 1e-6
-    assert err32 > 0.1  # float32 eps at 1e7 is ~1: the caveat is real
     # float64 without x64 enabled is a loud error, not silent downcast
     with pytest.raises(ValueError, match="x64"):
         simulate_epochs(d, n, b, arr, 1, seed=3, dtype="float64")
     with pytest.raises(ValueError, match="dtype"):
-        simulate_epochs(d, n, b, arr, 1, seed=3, dtype="float16")
+        simulate_epochs(d, n, b, arr - off, 1, seed=3, dtype="float16")
 
 
 def test_plan_sweep_one_compile_per_shape_bucket():

@@ -54,6 +54,9 @@ def test_multi_file_mode_renders_one_row_per_run_in_order():
     assert "1.31x/1.88x" in body[1]
     assert body[2].rstrip().endswith("| -/- |")
     assert "1.42x/1.95x" in body[3]
+    # the trace-scale columns: only run-120 carries the section
+    assert "| 2.31 | 273 |" in body[3]
+    assert "| - | - |" in body[0] and "| - | - |" in body[2]
 
 
 def test_mixed_dir_and_file_args(tmp_path):
@@ -118,11 +121,15 @@ def test_svg_flag_writes_sparklines(tmp_path):
         "space edge (min)",
         "packed/gang response",
         "dynamic cold (s)",
+        "trace sweep warm (s)",
+        "trace peak RSS (MB)",
         "heavy-tail speedup",
         "spec pareto (react)",
         "spec pareto (hybrid)",
     ):
         assert label in svg
+    # the single-run trace series still renders its dot + latest value
+    assert "2.31" in svg and "273" in svg
     # series present in every fixture run draw a 4-point polyline; the
     # 2-point speculation series still draws a line and its latest value
     assert svg.count("<polyline") >= 7

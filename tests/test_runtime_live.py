@@ -251,6 +251,63 @@ def test_subprocess_kill_mid_task_rescued_exactly():
     assert_exact_twin(report, 3, Scenario(n_batches=3))
 
 
+def test_subprocess_rejoin_serves_rescue_and_replays_exactly():
+    """Kill a worker mid-task, then connect a replacement: the master retires
+    the stale registration, grants the dead wid to the newcomer, the pending
+    rescue runs on the re-joined worker, and the trace (fail + re-join on the
+    churn timeline) still replays exactly through the engine."""
+
+    async def run() -> tuple:
+        sc = Scenario(n_batches=2)
+        master = RuntimeMaster(2, sc, heartbeat_s=0.05, heartbeat_timeout_s=5.0)
+        port = await master.start()
+        procs = [spawn_worker_subprocess(master.host, port) for _ in range(2)]
+        try:
+            await master.wait_for_workers()
+            # batch 0 = costs[0::2] holds the survivor busy long enough that
+            # only a re-joined worker can serve the rescue of batch 1
+            jobs = [LiveJob(job_id=0, costs=(2.5, 1.2), name="rejoin-run")]
+            run_task = asyncio.ensure_future(master.run(jobs, timeout_s=60.0))
+            victim_wid = None
+            while victim_wid is None:
+                await asyncio.sleep(0.01)
+                for e in master.recorder.events:
+                    if e["ev"] == "dispatch" and e["batch"] == 1:
+                        victim_wid = e["wid"]
+            await asyncio.sleep(0.3)  # let the batch be genuinely mid-task
+            os.kill(master.workers[victim_wid].pid, signal.SIGKILL)
+            while not any(e["ev"] == "fail" for e in master.recorder.events):
+                await asyncio.sleep(0.01)
+            # the replacement registers against a full budget: re-join path
+            procs.append(spawn_worker_subprocess(master.host, port))
+            report = await run_task
+        finally:
+            await master.close()
+            for p in procs:
+                try:
+                    p.wait(timeout=5.0)
+                except Exception:
+                    p.kill()
+        return report, victim_wid
+
+    report, victim_wid = asyncio.run(run())
+    assert report.n_worker_failures == 1
+    assert report.n_replicas_rescued == 1
+    joins = [e for e in report.trace if e["ev"] == "join"]
+    fails = [e for e in report.trace if e["ev"] == "fail"]
+    assert [e["wid"] for e in fails] == [victim_wid]
+    # three joins: two initial registrations plus the re-join of the dead wid
+    assert len(joins) == 3 and joins[2]["wid"] == victim_wid
+    assert joins[2]["t"] > fails[0]["t"]
+    rescues = [e for e in report.trace if e["ev"] == "dispatch" and e["rescue"]]
+    assert len(rescues) == 1 and rescues[0]["batch"] == 1
+    # the rescue ran on the re-joined wid, at or after its join stamp
+    assert rescues[0]["wid"] == victim_wid
+    assert rescues[0]["t"] >= joins[2]["t"]
+    assert len(report.records) == 1 and report.records[0].finish < float("inf")
+    assert_exact_twin(report, 2, Scenario(n_batches=2))
+
+
 # --------------------------------------------------------------------------
 # failure detection: missed heartbeats fire within the configured window
 # --------------------------------------------------------------------------

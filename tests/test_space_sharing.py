@@ -337,6 +337,64 @@ def test_balanced_spreads_load_packed_hammers_low_wids():
     assert lb.max() < lp.max()
 
 
+def test_balanced_is_speed_aware_and_backends_agree():
+    """Speed-weighted balanced placement (load = duration / speed), pinned
+    differentially under a 2x speed skew.
+
+    The scenario is crafted so the legacy wall-clock metric and the
+    speed-weighted one *disagree* on a placement: with speeds (2, 1) and
+    sparse 1-wide jobs, the fast worker's wall-clock load catches up to the
+    slow worker's after a few jobs (old metric would start alternating),
+    while per-speed weighting keeps preferring the fast worker.  The engine
+    must steer all but one job to the fast worker, and the f64 jax space
+    lane must replay the placements exactly."""
+    d = Empirical(samples=(1.0,))
+    speeds = (2.0, 1.0)
+    n, n_jobs = 2, 6
+    arr = np.array([8.0 * i for i in range(n_jobs)])
+    jobs = [Job(job_id=i, dist=d, n_tasks=n, arrival=float(arr[i])) for i in range(n_jobs)]
+    eng = ClusterEngine(
+        n, seed=1, n_batches=1, speeds=speeds, scheduler="balanced", workers_per_job=1
+    )
+    er = eng.run(jobs)
+    # one job takes 2 tasks x 1.0s / speed: 1.0s on the fast worker, 2.0s on
+    # the slow one.  Speed-weighted accrual (duration / speed) is 0.5 vs 2.0,
+    # so after the slow worker's single job it is never preferred again:
+    # 5 jobs on wid 0, 1 on wid 1.  (The legacy wall-clock metric would have
+    # sent jobs 4 and 5 back to the slow worker.)
+    assert eng._load_w[0] == pytest.approx(5 * (1.0 / 2.0))
+    assert eng._load_w[1] == pytest.approx(2.0)
+    with _x64():
+        vr = simulate_epochs(
+            d, n, 1, arr, 1, seed=1, speeds=speeds, scheduler="balanced",
+            workers_per_job=1, dtype="float64",
+        )
+    _assert_exact(er, vr)
+
+
+def test_balanced_speed_skew_differential_generated():
+    """4x speed skew, multi-replica jobs, both backends: placement under the
+    speed-weighted metric stays an exact engine replay (f64).  Speeds and
+    arrivals are all distinct so no two jobs complete at the same instant
+    (tied completions hit a separate, pre-existing lane-granularity limit:
+    the engine releases allocations event-by-event within a timestamp while
+    the lane batches them per boundary)."""
+    d = Empirical(samples=(1.3,))
+    speeds = (4.0, 1.0, 3.0, 1.4, 2.2, 0.8)
+    n, n_jobs = 6, 10
+    arr = np.array([0.0, 0.3, 0.9, 1.4, 2.2, 3.1, 4.4, 5.0, 6.3, 7.1])
+    jobs = [Job(job_id=i, dist=d, n_tasks=n, arrival=float(arr[i])) for i in range(n_jobs)]
+    er = ClusterEngine(
+        6, seed=3, n_batches=2, speeds=speeds, scheduler="balanced", workers_per_job=2
+    ).run(jobs)
+    with _x64():
+        vr = simulate_epochs(
+            d, 6, 2, arr, 1, seed=3, speeds=speeds, scheduler="balanced",
+            workers_per_job=2, dtype="float64",
+        )
+    _assert_exact(er, vr)
+
+
 def test_rep_chunk_bit_identical_space_lane():
     """The chunk/shard reproducibility contract extends to the space lane."""
     d = Exponential(1.0)
