@@ -32,7 +32,12 @@ vary with the runner).  Two properties are load-bearing and fail the build:
      (family x budget x scheduler) grid over the synthetic cluster-day,
      warm -- stays below an absolute ceiling, and ``trace_scale.peak_rss_mb``
      stays below the committed RSS ceiling; a path that re-materializes
-     per-job outputs blows through both).
+     per-job outputs blows through both), and
+  8. master crash-recovery stays cheap on the live runtime (``--runtime``
+     takes ``runtime_bench.py``'s JSON and gates
+     ``recovery.recovery_overhead`` -- the crashed-and-journal-recovered
+     makespan over the uninterrupted one -- below a ceiling, and requires
+     the recovered journal to have replayed exactly through the engine).
 
 Floors are env-overridable so a one-off noisy runner can be diagnosed
 without editing the workflow:
@@ -46,6 +51,7 @@ without editing the workflow:
   BENCH_MIN_SPEC_SPEEDUP         floor on speculation.pareto_speculative_speedup (1.1)
   BENCH_MAX_TRACE_SWEEP_SECONDS  ceiling on trace_scale.sweep_seconds_warm (9.0)
   BENCH_MAX_TRACE_PEAK_RSS_MB    ceiling on trace_scale.peak_rss_mb (2048)
+  BENCH_MAX_RECOVERY_OVERHEAD    ceiling on recovery.recovery_overhead (3.0)
 """
 from __future__ import annotations
 
@@ -64,6 +70,35 @@ DEFAULT_MAX_SPACE_RESPONSE_RATIO = 0.85
 DEFAULT_MIN_SPEC_SPEEDUP = 1.1
 DEFAULT_MAX_TRACE_SWEEP_SECONDS = 9.0
 DEFAULT_MAX_TRACE_PEAK_RSS_MB = 2048.0
+DEFAULT_MAX_RECOVERY_OVERHEAD = 3.0
+
+
+def check_runtime(runtime: dict, max_recovery_overhead: float) -> list:
+    """Gate the live-runtime bench JSON (``runtime_bench.py`` output): master
+    crash-recovery must stay cheap and the recovered journal must have
+    replayed exactly.  Returns human-readable failure strings."""
+    failures = []
+    rec = runtime.get("recovery", {})
+    if not rec:
+        failures.append("recovery section missing from runtime bench JSON")
+        return failures
+    if not rec.get("crash_exercised"):
+        failures.append(
+            "recovery bench never crashed the master: the workload finished "
+            "before the crash timer, so the recovery path went unmeasured"
+        )
+    if not rec.get("twin_replay_exact"):
+        failures.append("engine replay of the crashed-and-recovered journal is not exact")
+    overhead = rec.get("recovery_overhead")
+    if overhead is None or overhead > max_recovery_overhead:
+        failures.append(
+            f"master crash-recovery got expensive: recovery_overhead "
+            f"{overhead if overhead is None else format(overhead, '.2f')}x "
+            f"> ceiling {max_recovery_overhead:.2f}x "
+            f"(recovered makespan {rec.get('recovered_makespan_s', float('nan'))}s "
+            f"vs plain {rec.get('plain_makespan_s', float('nan'))}s)"
+        )
+    return failures
 
 
 def check(
@@ -195,6 +230,12 @@ def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("current", type=pathlib.Path, help="freshly produced smoke-bench JSON")
     ap.add_argument("baseline", type=pathlib.Path, help="committed BENCH_cluster.json baseline")
+    ap.add_argument(
+        "--runtime",
+        type=pathlib.Path,
+        default=None,
+        help="runtime_bench.py smoke JSON: gates recovery overhead and replay exactness",
+    )
     args = ap.parse_args()
 
     current = json.loads(args.current.read_text())
@@ -223,11 +264,18 @@ def main() -> int:
         os.environ.get("BENCH_MAX_TRACE_PEAK_RSS_MB", DEFAULT_MAX_TRACE_PEAK_RSS_MB)
     )
 
+    max_recovery = float(
+        os.environ.get("BENCH_MAX_RECOVERY_OVERHEAD", DEFAULT_MAX_RECOVERY_OVERHEAD)
+    )
+
     failures = check(
         current, baseline, min_jax_speedup, heavy_tolerance, min_jax_dynamic,
         max_dynamic_cold, min_jax_space, max_space_ratio, min_spec,
         max_trace_sweep, max_trace_rss,
     )
+    runtime = json.loads(args.runtime.read_text()) if args.runtime else None
+    if runtime is not None:
+        failures += check_runtime(runtime, max_recovery)
 
     cur_b, base_b = current["backend"], baseline["backend"]
     print(
@@ -298,6 +346,17 @@ def main() -> int:
             f"{cur_tr.get('peak_rss_mb', float('nan')):.0f} MB "
             f"(ceiling {max_trace_rss:.0f} MB)"
         )
+
+    if runtime is not None:
+        rec = runtime.get("recovery", {})
+        if rec:
+            print(
+                f"runtime crash-recovery: makespan overhead "
+                f"x{rec.get('recovery_overhead', float('nan')):.2f} "
+                f"(ceiling {max_recovery:.2f}x); recovered journal replay "
+                f"{'exact' if rec.get('twin_replay_exact') else 'NOT EXACT'}; "
+                f"{rec.get('n_journal_events', 0)} journal events"
+            )
 
     if failures:
         for f in failures:

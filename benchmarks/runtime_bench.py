@@ -18,21 +18,39 @@ payloads) and compares three layers:
 simulated makespan.  ``--smoke`` keeps the workload at a few hundred
 milliseconds for CI, which uploads the JSON as an artifact; a ratio above
 ``--max-ratio`` (sanity, generous) fails the run.
+
+The ``recovery`` section crashes the master halfway through the same
+workload (journaled, abrupt -- no cleanup), rebuilds it with
+``RuntimeMaster.recover`` from the write-ahead journal, resumes with fresh
+workers, and reports ``recovery_overhead``: the crashed-and-recovered
+makespan over the uninterrupted one.  ``check_bench_regression.py`` gates
+that ratio (``BENCH_MAX_RECOVERY_OVERHEAD``); here it is recorded, and the
+run fails hard only if the recovered journal does not replay exactly.
 """
 
 from __future__ import annotations
 
 import argparse
+import asyncio
 import dataclasses
 import json
 import pathlib
 import sys
+import tempfile
 import time
 
 sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent / "src"))
 
 from repro.cluster.master import ClusterEngine, Job  # noqa: E402
-from repro.cluster.runtime import LiveJob, Runtime, replay_trace  # noqa: E402
+from repro.cluster.runtime import (  # noqa: E402
+    LiveJob,
+    Runtime,
+    RuntimeMaster,
+    read_journal,
+    replay_trace,
+    spawn_worker_thread,
+    trace_accounting,
+)
 from repro.cluster.scenario import Scenario  # noqa: E402
 
 ART = pathlib.Path(__file__).resolve().parent / "artifacts"
@@ -106,6 +124,70 @@ def bench_runtime(cfg: dict) -> dict:
     }
 
 
+async def _join_threads(threads, timeout_s: float = 10.0) -> None:
+    # join worker threads off the event loop: a blocking join would stall the
+    # loop callbacks that actually flush the master's socket closes, so the
+    # workers would never see EOF and every join would burn its full timeout
+    loop = asyncio.get_running_loop()
+    for t in threads:
+        await loop.run_in_executor(None, t.join, timeout_s)
+
+
+def bench_recovery(cfg: dict) -> dict:
+    """Crash the master mid-run, recover from the journal, and report the
+    makespan inflation over the same workload run without a crash."""
+    n, scenario, jobs, _ = _workload(cfg)
+    tmp = pathlib.Path(tempfile.mkdtemp(prefix="runtime-bench-recovery-"))
+    plain_journal = str(tmp / "plain.jsonl")
+    crash_journal = str(tmp / "crash.jsonl")
+
+    plain = Runtime(n, scenario, journal=plain_journal).run(jobs, timeout_s=120.0)
+    plain_makespan = max(r.finish for r in plain.records)
+
+    async def crashed_run():
+        master = RuntimeMaster(n, scenario, journal=crash_journal)
+        port = await master.start()
+        threads = [spawn_worker_thread(master.host, port) for _ in range(n)]
+        await master.wait_for_workers()
+        run_task = asyncio.ensure_future(master.run(list(jobs), timeout_s=120.0))
+        await asyncio.sleep(0.5 * plain_makespan)
+        if run_task.done():  # workload beat the crash timer: report it as-is
+            report = run_task.result()
+        else:
+            run_task.cancel()
+            try:
+                await run_task
+            except asyncio.CancelledError:
+                pass
+            await master.crash()
+            await _join_threads(threads)
+            master = RuntimeMaster.recover(crash_journal)
+            port = await master.start()
+            threads = [spawn_worker_thread(master.host, port) for _ in range(n)]
+            report = await master.resume(timeout_s=120.0)
+        await master.close()
+        await _join_threads(threads)
+        return report
+
+    t0 = time.monotonic()
+    recovered = asyncio.run(crashed_run())
+    recovered_wall = time.monotonic() - t0
+    recovered_makespan = max(r.finish for r in recovered.records)
+
+    events = read_journal(crash_journal)
+    twin = replay_trace(events)
+    twin_exact = twin.accounting() == recovered.accounting() == trace_accounting(events)
+    return {
+        "plain_makespan_s": round(plain_makespan, 4),
+        "recovered_makespan_s": round(recovered_makespan, 4),
+        "recovery_overhead": round(recovered_makespan / plain_makespan, 4),
+        "recovered_wall_s": round(recovered_wall, 4),
+        "crash_exercised": any(e["ev"] == "recover" for e in events),
+        "twin_replay_exact": twin_exact,
+        "n_journal_events": len(events),
+    }
+
+
 def _cfg(smoke: bool) -> dict:
     if smoke:
         return {
@@ -141,6 +223,7 @@ def main() -> None:
     result = {
         "config": {"smoke": args.smoke, **_cfg(args.smoke)},
         "runtime": bench_runtime(_cfg(args.smoke)),
+        "recovery": bench_recovery(_cfg(args.smoke)),
     }
     args.out.parent.mkdir(parents=True, exist_ok=True)
     args.out.write_text(json.dumps(result, indent=2))
@@ -154,6 +237,8 @@ def main() -> None:
             f"FAIL: live/predicted makespan {run['live_over_predicted']} "
             f"exceeds --max-ratio {args.max_ratio}"
         )
+    if not result["recovery"]["twin_replay_exact"]:
+        raise SystemExit("FAIL: engine replay of the crashed-and-recovered journal is not exact")
 
 
 if __name__ == "__main__":

@@ -66,7 +66,7 @@ from .epoch_scan import (
     frontier_job_times_dynamic,
     simulate_epochs,
 )
-from .scenario import Scenario, Speculation
+from .scenario import FaultPlan, Retry, Scenario, Speculation
 from .scheduler import JobPlan, Scheduler, make_scheduler
 from .master import (
     ClusterEngine,
@@ -90,6 +90,8 @@ __all__ = [
     "stream",
     "vectorized",
     "workers",
+    "FaultPlan",
+    "Retry",
     "Scenario",
     "Speculation",
     "JobPlan",

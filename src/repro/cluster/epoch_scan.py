@@ -184,6 +184,11 @@ class EpochReport:
                 if self.n_speculative is not None
                 else np.zeros_like(self.n_replans)
             ),
+            # task-level payload failures exist on the Python engine and the
+            # live runtime only; the jax lanes report structural zeros so the
+            # accounting key set stays identical across backends
+            "n_task_failures": np.zeros_like(self.n_replans),
+            "n_retries": np.zeros_like(self.n_replans),
         }
 
 
@@ -227,6 +232,11 @@ class EpochStreamReport:
                 if self.n_speculative is not None
                 else np.zeros_like(self.n_replans)
             ),
+            # task-level payload failures exist on the Python engine and the
+            # live runtime only; the jax lanes report structural zeros so the
+            # accounting key set stays identical across backends
+            "n_task_failures": np.zeros_like(self.n_replans),
+            "n_retries": np.zeros_like(self.n_replans),
         }
 
 

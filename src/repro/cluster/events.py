@@ -22,6 +22,8 @@ __all__ = [
     "WORKER_FAIL",
     "WORKER_JOIN",
     "SPEC_CHECK",
+    "TASK_FAIL",
+    "RETRY",
     "EventQueue",
     "SimClock",
     "RngStreams",
@@ -33,6 +35,8 @@ BATCH_DONE = "batch_done"
 WORKER_FAIL = "worker_fail"
 WORKER_JOIN = "worker_join"
 SPEC_CHECK = "spec_check"  # speculative-backup heartbeat check (reactive replication)
+TASK_FAIL = "task_fail"  # a replica's payload raised (vs WORKER_FAIL: the worker died)
+RETRY = "retry"  # a failed replica's backoff expired; re-queue it through rescue
 
 
 class EventQueue:

@@ -38,7 +38,7 @@ from ..core.service_time import Empirical, ServiceTime
 from ..core.simulator import JobTimeStats, stats_from_samples
 from . import events as ev
 from .control import OnlineReplanner, SpeculativePolicy
-from .scenario import UNSET, Scenario, Speculation, resolve_scenario
+from .scenario import UNSET, Retry, Scenario, Speculation, resolve_scenario
 from .scheduler import JobPlan, Scheduler, make_scheduler
 from .workers import ChurnProcess, ChurnSchedule, Worker, WorkerPool, draw_batch_time
 
@@ -116,6 +116,8 @@ class EngineReport:
     final_n_batches: int
     epoch_times: tuple = ()  # applied churn-event times (epoch boundaries)
     n_speculative: int = 0  # reactive backup replicas launched
+    n_task_failures: int = 0  # replicas whose payload raised (vs the worker dying)
+    n_retries: int = 0  # failed replicas re-dispatched after backoff
 
     @property
     def compute_times(self) -> np.ndarray:
@@ -138,6 +140,8 @@ class EngineReport:
             "n_replicas_rescued": int(self.n_replicas_rescued),
             "n_replans": int(self.n_replans),
             "n_speculative": int(self.n_speculative),
+            "n_task_failures": int(self.n_task_failures),
+            "n_retries": int(self.n_retries),
         }
 
     def stats(self) -> JobTimeStats:
@@ -235,6 +239,9 @@ class ClusterEngine:
         controller: Optional[OnlineReplanner] = None,
         speculation: Optional[Speculation] = None,
         speculation_times: Optional[Sequence[float]] = None,
+        retry: Optional[Retry] = None,
+        task_fail_script: Optional[Sequence[int]] = None,
+        retry_times: Optional[Sequence[float]] = None,
         scheduler: "str | Scheduler" = "fifo_gang",
         workers_per_job: Optional[int] = None,
     ):
@@ -245,6 +252,7 @@ class ClusterEngine:
             churn=churn,
             churn_schedule=churn_schedule,
             speculation=speculation,
+            retry=retry,
             scheduler=scheduler,
             workers_per_job=workers_per_job,
         ).validate(n_workers=n_workers, backend="python", controller=controller)
@@ -252,6 +260,11 @@ class ClusterEngine:
             raise ValueError(
                 "speculation_times (scripted replay epochs) requires the "
                 "speculation=Speculation(...) policy they were recorded under"
+            )
+        if retry_times is not None and retry is None:
+            raise ValueError(
+                "retry_times (scripted retry stamps) requires the "
+                "retry=Retry(...) policy they were recorded under"
             )
         _scheduler = make_scheduler(scheduler)
         self.pool = WorkerPool(n_workers, speeds)
@@ -270,6 +283,19 @@ class ClusterEngine:
         self._spec_seq = 0
         self._spec_armed_t = math.inf
         self._n_spec = 0
+        # task-level failure semantics: which global dispatch indices raise
+        # mid-payload (scripted from a trace's task_fail events), and the
+        # recorded stamps at which failed replicas re-enter the rescue queue
+        self.retry = retry
+        self._task_fail_set = frozenset(int(i) for i in (task_fail_script or ()))
+        self._retry_script = tuple(retry_times) if retry_times is not None else None
+        self._dispatch_idx = 0
+        self._attempts: Dict[tuple, int] = {}  # (job_id, batch) -> payload failures
+        self._pending_retries: List[tuple] = []  # (release, seq, job_id, batch)
+        self._retry_seq = 0
+        self._retry_batches: Set[tuple] = set()  # rescue entries that are retries
+        self._n_task_failures = 0
+        self._n_retries = 0
         self.scheduler = _scheduler
         self.workers_per_job = None if workers_per_job is None else int(workers_per_job)
 
@@ -348,9 +374,16 @@ class ClusterEngine:
         worker.scheduled_end = now + duration
         self._load_w[worker.wid] += duration / worker.speed
         jexec.outstanding.setdefault(batch, set()).add(worker.wid)
+        # scripted task failures (trace replay): the k-th dispatch of the run
+        # raises mid-payload instead of completing -- identified by its global
+        # dispatch index, which live and replay agree on because dispatch
+        # order IS decision order on both sides
+        idx = self._dispatch_idx
+        self._dispatch_idx += 1
+        kind = ev.TASK_FAIL if idx in self._task_fail_set else ev.BATCH_DONE
         self.events.push(
             now + duration,
-            ev.BATCH_DONE,
+            kind,
             job_id=jexec.job.job_id,
             batch=batch,
             wid=worker.wid,
@@ -428,7 +461,7 @@ class ClusterEngine:
                 if jexec is None or batch in jexec.done:
                     continue
                 self._assign(free[0], jexec, batch)
-                self._n_rescued += 1
+                self._count_rescue(job_id, batch)
             return
         # Space sharing: serve the FIFO rescue queue without head-of-line
         # blocking across jobs (a blocked rescue must not starve another
@@ -456,8 +489,17 @@ class ClusterEngine:
                 jexec.alloc.add(worker.wid)
                 allocated.add(worker.wid)
             self._assign(worker, jexec, batch)
-            self._n_rescued += 1
+            self._count_rescue(job_id, batch)
         self.rescue = collections.deque(remaining)
+
+    def _count_rescue(self, job_id: int, batch: int) -> None:
+        """A served rescue entry is either a retry re-dispatch (the replica's
+        payload failed and its backoff expired) or a genuine churn rescue."""
+        if (job_id, batch) in self._retry_batches:
+            self._retry_batches.discard((job_id, batch))
+            self._n_retries += 1
+        else:
+            self._n_rescued += 1
 
     # -- speculative backups (reactive replication) --------------------------
 
@@ -631,9 +673,84 @@ class ClusterEngine:
         # drop rescues belonging to the finished job
         still_needed = [(j, b) for (j, b) in self.rescue if j != job.job_id]
         self.rescue = collections.deque(still_needed)
+        self._drop_retry_state(job.job_id)
         if self.controller is not None:
             # future dispatches read controller.current
             self.controller.maybe_replan(self.pool.n_alive())
+
+    def _drop_retry_state(self, job_id: int) -> None:
+        self._pending_retries = [e for e in self._pending_retries if e[2] != job_id]
+        self._retry_batches = {x for x in self._retry_batches if x[0] != job_id}
+
+    def _on_task_fail(self, job_id: int, batch: int, wid: int, epoch: int) -> None:
+        """A replica's payload raised: count the attempt, release the worker,
+        and either arm a backoff retry or -- budget exhausted with no sibling
+        running or pending -- abandon the job (record finish = inf)."""
+        worker = self.pool[wid]
+        if not worker.alive or worker.epoch != epoch or worker.assignment != (job_id, batch):
+            return  # stale: the replica was cancelled or the worker failed
+        self._n_task_failures += 1
+        self._release(worker)
+        jexec = self.active.get(job_id)
+        if jexec is not None:
+            jexec.outstanding[batch].discard(wid)
+            if batch not in jexec.done:
+                attempt = self._attempts.get((job_id, batch), 0) + 1
+                self._attempts[(job_id, batch)] = attempt
+                if self.retry is not None and attempt <= self.retry.max_attempts:
+                    self._retry_seq += 1
+                    self._pending_retries.append(
+                        (self.clock.now + self.retry.backoff(attempt), self._retry_seq,
+                         job_id, batch)
+                    )
+                elif not jexec.outstanding[batch] and not any(
+                    j == job_id and b == batch for _, _, j, b in self._pending_retries
+                ):
+                    self._abandon_job(jexec)
+        self._assign_rescues()
+        self._try_dispatch()
+
+    def _on_retry(self, scripted: bool = True) -> None:
+        """Scripted retry (trace replay): the earliest-armed pending retry
+        whose batch is still undone re-enters the rescue queue -- mirroring
+        the live master's backoff timers, which fire in release order and
+        no-op silently when the batch completed meanwhile."""
+        valid = [
+            e for e in self._pending_retries
+            if e[2] in self.active and e[3] not in self.active[e[2]].done
+        ]
+        if not valid:
+            raise RuntimeError(
+                "retry replay diverged: the trace recorded a retry at "
+                f"t={self.clock.now} but no failed replica is pending"
+            )
+        entry = min(valid)
+        self._pending_retries.remove(entry)
+        _, _, job_id, batch = entry
+        self._retry_batches.add((job_id, batch))
+        self.rescue.append((job_id, batch))
+        self._assign_rescues()
+        self._try_dispatch()
+
+    def _abandon_job(self, jexec: _JobExec) -> None:
+        """Retry budget exhausted with nothing in flight: the job can never
+        cover all batches -- record it unfinished and free its state (any
+        cross-batch stragglers keep running and release on completion)."""
+        job = jexec.job
+        self.records.append(
+            JobRecord(
+                job_id=job.job_id,
+                name=job.name,
+                arrival=job.arrival,
+                start=jexec.start,
+                finish=math.inf,
+                n_batches=jexec.n_batches,
+                replication=jexec.replication,
+            )
+        )
+        del self.active[job.job_id]
+        self.rescue = collections.deque((j, b) for (j, b) in self.rescue if j != job.job_id)
+        self._drop_retry_state(job.job_id)
 
     def _schedule_failure(self, worker: Worker) -> None:
         if self.churn is None:
@@ -713,6 +830,9 @@ class ClusterEngine:
             # engine re-derives which batch and which worker from the policy
             for t in self._spec_script:
                 self.events.push(t, ev.SPEC_CHECK, scripted=True)
+        if self._retry_script is not None:
+            for t in self._retry_script:
+                self.events.push(t, ev.RETRY, scripted=True)
         if self.churn_schedule is not None:
             # replay the explicit timeline: the k-th event of worker w expects
             # churn_epoch k (transitions are schedule-driven only, so the
@@ -748,6 +868,10 @@ class ClusterEngine:
                 self._on_worker_join(**payload)
             elif kind == ev.SPEC_CHECK:
                 self._on_spec_check(**payload)
+            elif kind == ev.TASK_FAIL:
+                self._on_task_fail(**payload)
+            elif kind == ev.RETRY:
+                self._on_retry(**payload)
             else:  # pragma: no cover - no other kinds are ever pushed
                 raise RuntimeError(f"unknown event kind {kind!r}")
             if self._spec is not None and self._spec_script is None:
@@ -802,6 +926,8 @@ class ClusterEngine:
             final_n_batches=last_b,
             epoch_times=tuple(self._epoch_times),
             n_speculative=self._n_spec,
+            n_task_failures=self._n_task_failures,
+            n_retries=self._n_retries,
         )
 
 

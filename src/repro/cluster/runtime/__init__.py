@@ -25,22 +25,39 @@ Scenario semantics come from the same frozen
 ``Runtime(n_workers, scenario=Scenario(n_batches=2, cancel_redundant=True))``
 executes what ``sample_job_times(scenario=...)`` predicts.
 
+Failure is a first-class input.  A serializable
+:class:`~repro.cluster.scenario.FaultPlan` on the scenario drives a
+deterministic fault injector (:mod:`.chaos`): scheduled worker kills,
+slowdowns, heartbeat stalls, injected payload exceptions, and seeded wire
+drop/dup/delay -- every delivered fault stamped on the trace grid so the
+twin replays the faulted run exactly.  A
+:class:`~repro.cluster.scenario.Retry` policy turns payload failures
+(``fail`` frames carrying tracebacks) into capped-exponential-backoff
+retries, then abandonment.  With ``journal=``, the recorder doubles as an
+fsync'd JSONL write-ahead log and :meth:`RuntimeMaster.recover` rebuilds a
+crashed master from it -- queued and in-flight jobs, leases, retry timers,
+accounting -- resuming with re-joined workers; crash plus recovery replay
+as one exact trace (``tests/test_chaos.py``).
+
 This subpackage is *not* imported by ``repro.cluster.__init__`` -- simulation
 users never pay for the service stack; ``import repro.cluster.runtime``
 explicitly.
 """
 
+from .chaos import FaultInjector
 from .master import LiveJob, LiveReport, Runtime, RuntimeMaster
-from .trace import TICK, TraceRecorder, replay_trace, trace_accounting
+from .trace import TICK, TraceRecorder, read_journal, replay_trace, trace_accounting
 from .worker import spawn_worker_subprocess, spawn_worker_thread, worker_loop
 
 __all__ = [
+    "FaultInjector",
     "LiveJob",
     "LiveReport",
     "Runtime",
     "RuntimeMaster",
     "TICK",
     "TraceRecorder",
+    "read_journal",
     "replay_trace",
     "trace_accounting",
     "spawn_worker_subprocess",

@@ -11,13 +11,22 @@ Message vocabulary (the only shapes either side sends):
 type       fields                                                  direction
 ========== ======================================================= =========
 register   pid                                                     w -> m
-welcome    wid, heartbeat_s                                        m -> w
+welcome    wid, heartbeat_s [, hb_seed -- heartbeat-jitter seed]   m -> w
 hb         wid [, job, batch, epoch, frac -- progress when busy]   w -> m
 task       job, batch, epoch, payload, costs, lease_s              m -> w
+           [, chaos_factor, chaos_raise -- injected slowdown /
+           mid-payload exception (chaos harness)]
 finish     wid, job, batch, epoch                                  w -> m
+fail       wid, job, batch, epoch, error -- the payload raised;    w -> m
+           ``error`` carries the traceback text
 cancel     job, batch, epoch                                       m -> w
 shutdown   --                                                      m -> w
 ========== ======================================================= =========
+
+The master's chaos layer (:mod:`repro.cluster.runtime.chaos`) injects wire
+faults *around* this framing -- dropping, duplicating, or delaying whole
+frames at the master's send/receive boundary -- so the framing itself stays
+byte-exact; a dropped frame is simply never processed / never written.
 """
 
 from __future__ import annotations

@@ -20,14 +20,29 @@ scenario   first event: the originating Scenario (t, n_workers,
            scenario = ``Scenario.to_dict()``) -- a trace file alone is
            replayable
 join       worker registered (t, wid)
-submit     job entered the queue (t, job, n_tasks, plan)
+submit     job entered the queue (t, job, n_tasks, plan, costs, payload,
+           skew -- enough to resume the job from a journal)
+job_start  job activated on the cluster (t, job, n_batches, replication,
+           cancel) -- stamped just before its gang's dispatches
 dispatch   replica placed on a worker (t, wid, job, batch, planned,
-           rescue, spec -- ``spec=True`` marks a speculative backup)
+           rescue, spec, retry -- ``spec=True`` marks a speculative
+           backup, ``retry=True`` a re-dispatch after a payload failure)
 finish     replica's finish processed (t, wid, job, batch)
 cancel     outstanding sibling reclaimed (t, wid, job, batch, sched_end)
-fail       worker declared dead (t, wid, cause: eof|heartbeat|lease)
+fail       worker declared dead (t, wid, cause:
+           eof|heartbeat|lease|crash -- ``crash`` marks workers lost
+           with the master, stamped by ``RuntimeMaster.recover``)
+task_fail  replica's payload raised (t, wid, job, batch, attempt, error)
+retry      a failed replica's backoff expired; it re-enters the rescue
+           queue (t, job, batch, attempt)
+job_fail   job abandoned -- retry budget exhausted with nothing in
+           flight (t, job, start, n_batches, replication)
 flush      replica still in flight at run end (t, wid, job, batch, sched_end)
 job_done   job completed (t, job, start, n_batches, replication)
+chaos      informational: a fault the injector delivered (t, kind, ...);
+           replay ignores it, recovery uses it to restore which faults
+           already fired
+recover    master rebuilt from the journal (t, n_active, n_queued)
 =========  =============================================================
 
 ``replay_trace`` rebuilds the identical workload -- jobs at their recorded
@@ -43,13 +58,16 @@ a real differential check of the two implementations, not a tautology.
 from __future__ import annotations
 
 import dataclasses
+import json
 import math
+import os
 import time
 from typing import Dict, List, Optional, Tuple
 
 __all__ = [
     "TICK",
     "TraceRecorder",
+    "read_journal",
     "replay_trace",
     "trace_accounting",
 ]
@@ -69,13 +87,27 @@ class TraceRecorder:
     ``stamp()`` reads the process monotonic clock relative to the recorder's
     birth, quantizes it to the grid, and enforces strict increase -- two
     events can never share a timestamp, so replay order is total.
+
+    ``journal`` names an append-only JSONL write-ahead log: every recorded
+    event is written and ``fsync``'d *at the decision point*, before the
+    decision's effects go on the wire, so a master crash never loses an
+    acknowledged state transition.  ``resume_events`` (recovery) seeds the
+    recorder with a previously journaled prefix: the clock continues from
+    the last journaled stamp (strict increase holds across the crash) and
+    the journal file is appended to, not truncated -- after recovery the one
+    file holds the crash *and* the recovery as a single replayable trace.
     """
 
-    def __init__(self):
-        self._t0 = time.monotonic()
-        self._last_g = 0
-        self._events: List[dict] = []
+    def __init__(self, journal: Optional[str] = None, resume_events=None):
+        self._events: List[dict] = list(resume_events) if resume_events else []
+        last = self._events[-1]["t"] if self._events else 0.0
+        self._last_g = int(round(last * _GRID))
+        self._t0 = time.monotonic() - last
         self.frozen = False
+        self.journal_path = journal
+        self._journal = None
+        if journal is not None:
+            self._journal = open(journal, "ab" if resume_events else "wb")
 
     def elapsed(self) -> float:
         """Raw (unquantized) seconds since the recorder was born."""
@@ -89,11 +121,44 @@ class TraceRecorder:
     def record(self, ev: str, t: float, **fields) -> None:
         if self.frozen:
             raise RuntimeError("trace is frozen; the run already finalized")
-        self._events.append({"ev": ev, "t": t, **fields})
+        event = {"ev": ev, "t": t, **fields}
+        self._events.append(event)
+        if self._journal is not None:
+            self._journal.write(json.dumps(event).encode("utf-8") + b"\n")
+            self._journal.flush()
+            os.fsync(self._journal.fileno())
+
+    def close_journal(self) -> None:
+        if self._journal is not None:
+            self._journal.close()
+            self._journal = None
 
     @property
     def events(self) -> Tuple[dict, ...]:
         return tuple(self._events)
+
+
+def read_journal(path: str) -> List[dict]:
+    """Load a JSONL trace journal, tolerating a torn final line.
+
+    A crash can interrupt the write of the last record; the fsync discipline
+    guarantees every *complete* line was a decision whose effects may have
+    reached the wire, so those are kept and a trailing partial line (no
+    terminating newline / invalid JSON) is discarded.
+    """
+    events: List[dict] = []
+    with open(path, "rb") as f:
+        data = f.read()
+    for i, line in enumerate(data.split(b"\n")):
+        if not line:
+            continue
+        try:
+            events.append(json.loads(line))
+        except json.JSONDecodeError:
+            if i == data.count(b"\n"):  # torn final line (crash mid-write)
+                break
+            raise
+    return events
 
 
 # --------------------------------------------------------------------------
@@ -115,12 +180,16 @@ def trace_accounting(events) -> dict:
     n_failures = 0
     n_rescued = 0
     n_spec = 0
+    n_task_failures = 0
+    n_retries = 0
     busy: Dict[int, dict] = {}  # wid -> its open dispatch event
     for e in events:
         kind = e["ev"]
         if kind == "dispatch":
             busy[e["wid"]] = e
-            if e["rescue"]:
+            if e.get("retry"):
+                n_retries += 1
+            elif e["rescue"]:
                 n_rescued += 1
             if e.get("spec"):
                 n_spec += 1
@@ -136,6 +205,10 @@ def trace_accounting(events) -> dict:
             d = busy.pop(e["wid"], None)
             if d is not None:
                 ws += e["t"] - d["t"]
+        elif kind == "task_fail":
+            n_task_failures += 1
+            d = busy.pop(e["wid"])
+            ws += e["t"] - d["t"]
         elif kind == "flush":
             d = busy.pop(e["wid"])
             ws += e["sched_end"] - d["t"]
@@ -146,6 +219,8 @@ def trace_accounting(events) -> dict:
         "n_replicas_rescued": n_rescued,
         "n_replans": 0,
         "n_speculative": n_spec,
+        "n_task_failures": n_task_failures,
+        "n_retries": n_retries,
     }
 
 
@@ -182,8 +257,9 @@ class _ScriptedService:
         return d
 
 
-def _scripted_durations(events) -> Tuple[float, ...]:
-    """Per-dispatch scripted durations, in dispatch order.
+def _scripted_durations(events) -> Tuple[Tuple[float, ...], Tuple[int, ...]]:
+    """Per-dispatch scripted durations (in dispatch order) + which global
+    dispatch indices failed their payload.
 
     finished   -> elapsed (finish stamp - dispatch stamp): the engine's
                   BATCH_DONE then lands exactly on the recorded finish stamp;
@@ -191,12 +267,16 @@ def _scripted_durations(events) -> Tuple[float, ...]:
                   engine's ``scheduled_end`` (and so its saved-seconds)
                   matches the live accounting, and the event pops strictly
                   after the winner's, where the epoch guard drops it;
+    task_fail  -> elapsed at the recorded failure stamp: the engine's
+                  TASK_FAIL event lands exactly there, charging the same
+                  busy time the live master did;
     failed     -> pushed past the failure stamp so the fail event wins the
                   race (worker-seconds charge only reads ``busy_since``);
     flushed    -> the recorded scheduled end (full planned duration), the
                   engine's end-of-run committed-time charge.
     """
     durations: List[float] = []
+    fail_idx: List[int] = []
     slot: Dict[int, int] = {}  # wid -> index into durations of its open dispatch
     start: Dict[int, float] = {}
     for e in events:
@@ -209,6 +289,10 @@ def _scripted_durations(events) -> Tuple[float, ...]:
             durations[slot.pop(e["wid"])] = e["t"] - start.pop(e["wid"])
         elif kind in ("cancel", "flush"):
             durations[slot.pop(e["wid"])] = e["sched_end"] - start.pop(e["wid"])
+        elif kind == "task_fail":
+            k = slot.pop(e["wid"])
+            fail_idx.append(k)
+            durations[k] = e["t"] - start.pop(e["wid"])
         elif kind == "fail":
             k = slot.pop(e["wid"], None)
             if k is not None:
@@ -216,7 +300,7 @@ def _scripted_durations(events) -> Tuple[float, ...]:
                 durations[k] = max(durations[k], e["t"] - t0 + TICK)
     if slot:  # pragma: no cover - the master always closes open dispatches
         raise RuntimeError(f"trace ended with open dispatches on workers {sorted(slot)}")
-    return tuple(durations)
+    return tuple(durations), tuple(fail_idx)
 
 
 def replay_trace(events, n_workers: Optional[int] = None, scenario=None):
@@ -239,7 +323,15 @@ def replay_trace(events, n_workers: Optional[int] = None, scenario=None):
     Speculative launches replay *scripted*: each live launch stamp becomes
     a ``speculation_times`` epoch, and the engine re-derives the target
     batch and worker under the same policy -- a divergence raises instead
-    of silently misaligning the schedule.
+    of silently misaligning the schedule.  Task failures replay the same
+    way: each ``task_fail`` event marks its global dispatch index as a
+    scripted payload failure, each ``retry`` stamp re-queues the pending
+    replica, and the engine re-derives attempts, backoff bookkeeping, and
+    abandonment under the same :class:`~repro.cluster.scenario.Retry`
+    policy.  ``chaos`` / ``recover`` events are informational: the faults'
+    *consequences* (churn, task failures, the crash's worker losses) are
+    already first-class events, so a chaos-and-crash run replays through
+    the same engine path as a clean one.
     """
     from ..master import ClusterEngine, Job
     from ..scenario import Scenario
@@ -259,7 +351,8 @@ def replay_trace(events, n_workers: Optional[int] = None, scenario=None):
                 "embedded scenario event"
             )
         n_workers = int(embedded["n_workers"])
-    dist = _ScriptedService(_scripted_durations(events))
+    durations, task_fail_idx = _scripted_durations(events)
+    dist = _ScriptedService(durations)
 
     jobs = []
     churn_times: List[float] = []
@@ -309,6 +402,12 @@ def replay_trace(events, n_workers: Optional[int] = None, scenario=None):
             "replay_trace: the trace stamps speculative launches but the "
             "scenario carries no Speculation policy"
         )
+    retry_times = tuple(e["t"] for e in events if e["ev"] == "retry")
+    if retry_times and sc.retry is None:
+        raise ValueError(
+            "replay_trace: the trace stamps retries but the scenario "
+            "carries no Retry policy"
+        )
     engine = ClusterEngine(
         n_workers,
         seed=0,  # the scripted service ignores the rng; nothing else draws
@@ -319,6 +418,9 @@ def replay_trace(events, n_workers: Optional[int] = None, scenario=None):
         speculation=sc.speculation,
         # scripted replay: launch exactly at the live stamps, never self-arm
         speculation_times=spec_times if sc.speculation is not None else None,
+        retry=sc.retry,
+        task_fail_script=task_fail_idx or None,
+        retry_times=retry_times if sc.retry is not None else None,
     )
     report = engine.run(jobs)
     if dist.cursor != len(dist.durations):

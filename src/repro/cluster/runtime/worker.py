@@ -23,17 +23,26 @@ mid-task.
 from __future__ import annotations
 
 import asyncio
+import atexit
+import ctypes
 import os
+import random
+import signal
 import subprocess
 import sys
 import threading
 import time
+import traceback
 
 import numpy as np
 
 from .protocol import read_msg, send_msg
 
 __all__ = ["run_payload", "spawn_worker_subprocess", "spawn_worker_thread", "worker_loop"]
+
+
+class PayloadError(RuntimeError):
+    """A task payload failed (organically or chaos-injected)."""
 
 
 async def run_payload(payload: str, costs, factor: float = 1.0) -> None:
@@ -56,18 +65,30 @@ async def run_payload(payload: str, costs, factor: float = 1.0) -> None:
     elif payload == "block":
         # deliberately hostile: blocks the loop, starving heartbeats
         time.sleep(float(sum(costs)) * factor)
+    elif payload == "raise":
+        # a broken task: burns ~30% of its nominal cost, then explodes --
+        # the organic path into the fail-frame / retry machinery
+        await asyncio.sleep(float(sum(costs)) * factor * 0.3)
+        raise PayloadError("payload exploded (kind='raise')")
     else:
         raise ValueError(f"unknown payload kind {payload!r}")
 
 
-async def _heartbeat(writer, wid: int, interval_s: float, state: dict) -> None:
+async def _heartbeat(
+    writer, wid: int, interval_s: float, state: dict, jitter_seed: int = 0
+) -> None:
     """Heartbeats double as progress reports: while a replica is running,
     each beat carries its (job, batch, epoch) and the fraction of the
     nominal cost elapsed -- the partial-progress evidence the master's
-    speculative policy requires before it backs a laggard up."""
+    speculative policy requires before it backs a laggard up.
+
+    Each sleep is jittered +-10% (seeded per worker) so a fleet of workers
+    reconnecting together -- e.g. right after master recovery -- does not
+    heartbeat in lockstep and thundering-herd the master's read loops."""
+    rng = random.Random((int(jitter_seed) << 20) ^ int(wid))
     try:
         while True:
-            await asyncio.sleep(interval_s)
+            await asyncio.sleep(interval_s * (0.9 + 0.2 * rng.random()))
             msg = {"type": "hb", "wid": wid}
             cur = state.get("current")
             if cur is not None:
@@ -90,13 +111,31 @@ async def worker_loop(host: str, port: int) -> None:
         return
     wid = int(welcome["wid"])
     state: dict = {"current": None, "t0": 0.0, "total": 0.0}
-    hb = asyncio.ensure_future(_heartbeat(writer, wid, float(welcome["heartbeat_s"]), state))
+    hb = asyncio.ensure_future(
+        _heartbeat(
+            writer,
+            wid,
+            float(welcome["heartbeat_s"]),
+            state,
+            int(welcome.get("hb_seed", 0)),
+        )
+    )
     current: dict | None = None
     task: asyncio.Task | None = None
 
+    def _task_factor(msg: dict) -> float:
+        # per-worker skew the master dispatches plus any chaos-injected
+        # slowdown riding on the task frame
+        return (1.0 + wid * float(msg.get("skew", 0.0))) * float(msg.get("chaos_factor", 1.0))
+
     async def execute(msg: dict) -> None:
         try:
-            factor = 1.0 + wid * float(msg.get("skew", 0.0))
+            factor = _task_factor(msg)
+            if msg.get("chaos_raise"):
+                # injected mid-payload failure: burn part of the nominal cost,
+                # then die exactly like a broken payload would
+                await asyncio.sleep(float(sum(msg["costs"])) * factor * 0.5)
+                raise PayloadError("chaos: injected payload failure")
             await run_payload(msg["payload"], msg["costs"], factor)
             await send_msg(
                 writer,
@@ -111,7 +150,23 @@ async def worker_loop(host: str, port: int) -> None:
         except asyncio.CancelledError:
             raise
         except Exception:
-            return  # broken payload or torn socket: no finish; the lease reaps it
+            # a broken payload is a first-class outcome, not something to
+            # swallow: report it with the traceback so the master can retry
+            # (or abandon) and the failure surfaces in LiveReport
+            try:
+                await send_msg(
+                    writer,
+                    {
+                        "type": "fail",
+                        "wid": wid,
+                        "job": msg["job"],
+                        "batch": msg["batch"],
+                        "epoch": msg["epoch"],
+                        "error": traceback.format_exc(limit=20),
+                    },
+                )
+            except Exception:
+                return  # torn socket: nothing to report to; the lease reaps it
         finally:
             if state.get("current") is msg:
                 state["current"] = None
@@ -122,11 +177,18 @@ async def worker_loop(host: str, port: int) -> None:
             if msg is None or msg["type"] == "shutdown":
                 break
             if msg["type"] == "task":
+                if (
+                    task is not None
+                    and not task.done()
+                    and current is not None
+                    and (current["job"], current["batch"], current["epoch"])
+                    == (msg["job"], msg["batch"], msg["epoch"])
+                ):
+                    continue  # duplicated dispatch frame (chaos): already running
                 current = msg
-                factor = 1.0 + wid * float(msg.get("skew", 0.0))
                 state["current"] = msg
                 state["t0"] = time.monotonic()
-                state["total"] = float(sum(msg["costs"])) * factor
+                state["total"] = float(sum(msg["costs"])) * _task_factor(msg)
                 task = asyncio.ensure_future(execute(msg))
             elif msg["type"] == "cancel":
                 if (
@@ -160,23 +222,64 @@ def spawn_worker_thread(host: str, port: int) -> threading.Thread:
     return t
 
 
+# children spawned by this process, reaped at interpreter exit if the normal
+# shutdown path never ran (the cross-platform fallback behind PDEATHSIG)
+_children: list = []
+_atexit_registered = False
+
+PR_SET_PDEATHSIG = 1  # linux/prctl.h
+
+
+def _pdeathsig_preexec() -> None:  # pragma: no cover - runs in the child
+    # die with the parent: if the master process is SIGKILLed (no atexit
+    # runs there), the kernel delivers SIGKILL to this child.  prctl clears
+    # the deathsig across setuid execve, not across fork/exec here.
+    try:
+        ctypes.CDLL("libc.so.6", use_errno=True).prctl(PR_SET_PDEATHSIG, signal.SIGKILL)
+    except OSError:
+        pass  # non-glibc platform: the atexit fallback still covers clean exits
+
+
+def _kill_orphans() -> None:
+    for proc in _children:
+        if proc.poll() is None:
+            try:
+                proc.kill()
+            except OSError:  # pragma: no cover - already gone
+                pass
+
+
 def spawn_worker_subprocess(host: str, port: int) -> subprocess.Popen:
     """A real worker process -- killable mid-task with ``proc.kill()``.
+
+    Child lifetime is tied to the spawning process: on Linux the child sets
+    ``PR_SET_PDEATHSIG`` so the kernel SIGKILLs it the instant its parent
+    dies (even via SIGKILL), and an ``atexit`` hook kills any survivors on
+    ordinary interpreter exit -- chaos runs that crash the master must not
+    leak worker processes.
 
     Note worker ids are assigned in *registration* order, which need not be
     spawn order: to kill a specific wid, look up its registered pid on the
     master (``master.workers[wid].pid``) rather than indexing the Popens.
     """
+    global _atexit_registered
     env = os.environ.copy()
     # make repro importable in the child even when it is not installed
     # (e.g. pytest's `pythonpath` ini only patches the parent's sys.path)
     here = os.path.abspath(__file__)
     pkg_root = os.path.dirname(os.path.dirname(os.path.dirname(os.path.dirname(here))))
     env["PYTHONPATH"] = pkg_root + os.pathsep + env.get("PYTHONPATH", "")
-    return subprocess.Popen(
+    preexec = _pdeathsig_preexec if sys.platform.startswith("linux") else None
+    proc = subprocess.Popen(
         [sys.executable, "-m", "repro.cluster.runtime", host, str(port)],
         env=env,
+        preexec_fn=preexec,
     )
+    _children.append(proc)
+    if not _atexit_registered:
+        atexit.register(_kill_orphans)
+        _atexit_registered = True
+    return proc
 
 
 def main(argv) -> None:

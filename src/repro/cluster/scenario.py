@@ -38,7 +38,7 @@ if TYPE_CHECKING:  # pragma: no cover - annotation-only (avoids an import cycle
     # with epoch_scan, which routes its validation through this module)
     from .epoch_scan import ReplanConfig
 
-__all__ = ["Scenario", "Speculation", "UNSET", "resolve_scenario"]
+__all__ = ["FaultPlan", "Retry", "Scenario", "Speculation", "UNSET", "resolve_scenario"]
 
 
 class _Unset:
@@ -118,6 +118,130 @@ class Speculation:
 
 
 @dataclasses.dataclass(frozen=True)
+class Retry:
+    """Task-level failure semantics: retry a failed replica with backoff.
+
+    A worker whose payload raises sends a ``fail`` frame (live runtime) /
+    fires a ``TASK_FAIL`` event (engine replay).  The master releases the
+    worker, counts the attempt, and -- while the batch's attempt count is
+    ``<= max_attempts`` -- re-queues the replica after a capped exponential
+    backoff (``min(backoff_s * 2**(k-1), max_backoff_s)`` for attempt ``k``),
+    serving it through the rescue queue.  Once the budget is exhausted and no
+    sibling replica is still running or pending, the job is *abandoned*: a
+    ``job_fail`` event is stamped and its record finishes at ``inf``.
+
+    Supported by the Python engine (trace replay) and the live runtime;
+    rejected on ``backend="jax"``.
+    """
+
+    max_attempts: int = 2
+    backoff_s: float = 0.05
+    max_backoff_s: float = 1.0
+
+    def __post_init__(self):
+        if self.max_attempts < 1:
+            raise ValueError(f"Retry.max_attempts: must be >= 1, got {self.max_attempts}")
+        if not (self.backoff_s >= 0.0):
+            raise ValueError(f"Retry.backoff_s: must be >= 0, got {self.backoff_s}")
+        if not (self.max_backoff_s >= self.backoff_s):
+            raise ValueError(
+                f"Retry.max_backoff_s: must be >= backoff_s, got {self.max_backoff_s}"
+            )
+
+    def backoff(self, attempt: int) -> float:
+        """Delay before re-queueing attempt ``attempt`` (1-based)."""
+        return min(self.backoff_s * (2.0 ** max(attempt - 1, 0)), self.max_backoff_s)
+
+
+def _freeze_rows(name: str, rows, width: int) -> Tuple[tuple, ...]:
+    out = []
+    for row in rows:
+        row = tuple(row)
+        if len(row) != width:
+            raise ValueError(f"FaultPlan.{name}: entries must have {width} fields, got {row!r}")
+        out.append(row)
+    return tuple(out)
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    """A deterministic chaos schedule for the live runtime.
+
+    Every fault decision is made master-side by one seeded injector
+    (:class:`repro.cluster.runtime.chaos.FaultInjector`) and stamped on the
+    binary trace grid as an informational ``chaos`` event, so a faulted run
+    stays bit-exactly replayable and crash-recovery can restore which faults
+    were already delivered.
+
+    * ``kills`` -- ``(wid, at_s)``: the master tears down the worker's
+      connection at elapsed time ``at_s`` (the worker observes EOF and
+      exits; the master detects the torn connection exactly as it would a
+      real crash).
+    * ``slowdowns`` -- ``(wid, at_s, factor)``: tasks dispatched to ``wid``
+      at or after ``at_s`` run ``factor``x slower (the task frame carries
+      the factor; compounding entries multiply).
+    * ``hb_stalls`` -- ``(wid, at_s, duration_s)``: the master drops the
+      worker's inbound heartbeats in the window, provoking missed-heartbeat
+      detection without killing anything.
+    * ``payload_errors`` -- ``(job, batch, n_raises)``: the first
+      ``n_raises`` dispatches of that replica raise mid-payload (exercising
+      the ``fail``-frame path and :class:`Retry`).
+    * ``drop_p`` / ``dup_p`` / ``delay_p`` -- per-frame wire-fault
+      probabilities (drop, duplicate, or delay by ``delay_s``), decided by a
+      counter-seeded hash so each frame's fate is a pure function of
+      ``(seed, direction, frame index)``.
+
+    Live runtime only; rejected on ``backend="python"`` / ``"jax"`` (the
+    engine sees the *consequences* -- churn, task failures -- via the trace).
+    """
+
+    seed: int = 0
+    kills: Tuple[Tuple[int, float], ...] = ()
+    slowdowns: Tuple[Tuple[int, float, float], ...] = ()
+    hb_stalls: Tuple[Tuple[int, float, float], ...] = ()
+    payload_errors: Tuple[Tuple[int, int, int], ...] = ()
+    drop_p: float = 0.0
+    dup_p: float = 0.0
+    delay_p: float = 0.0
+    delay_s: float = 0.02
+
+    def __post_init__(self):
+        # coerce nested lists (e.g. from from_dict) so the dataclass stays
+        # hashable, then validate shape and ranges once, here
+        object.__setattr__(self, "kills", _freeze_rows("kills", self.kills, 2))
+        object.__setattr__(self, "slowdowns", _freeze_rows("slowdowns", self.slowdowns, 3))
+        object.__setattr__(self, "hb_stalls", _freeze_rows("hb_stalls", self.hb_stalls, 3))
+        object.__setattr__(
+            self, "payload_errors", _freeze_rows("payload_errors", self.payload_errors, 3)
+        )
+        for wid, at in self.kills:
+            if int(wid) < 0 or not (at >= 0.0):
+                raise ValueError(f"FaultPlan.kills: bad entry {(wid, at)!r}")
+        for wid, at, factor in self.slowdowns:
+            if int(wid) < 0 or not (at >= 0.0) or not (factor > 0.0):
+                raise ValueError(f"FaultPlan.slowdowns: bad entry {(wid, at, factor)!r}")
+        for wid, at, dur in self.hb_stalls:
+            if int(wid) < 0 or not (at >= 0.0) or not (dur > 0.0):
+                raise ValueError(f"FaultPlan.hb_stalls: bad entry {(wid, at, dur)!r}")
+        for job, batch, k in self.payload_errors:
+            if int(job) < 0 or int(batch) < 0 or int(k) < 1:
+                raise ValueError(f"FaultPlan.payload_errors: bad entry {(job, batch, k)!r}")
+        for name in ("drop_p", "dup_p", "delay_p"):
+            p = getattr(self, name)
+            if not (0.0 <= p <= 1.0):
+                raise ValueError(f"FaultPlan.{name}: must lie in [0, 1], got {p}")
+        if self.drop_p + self.dup_p + self.delay_p > 1.0:
+            raise ValueError("FaultPlan: drop_p + dup_p + delay_p must be <= 1")
+        if not (self.delay_s >= 0.0):
+            raise ValueError(f"FaultPlan.delay_s: must be >= 0, got {self.delay_s}")
+
+    @property
+    def max_wid(self) -> int:
+        wids = [int(w) for w, *_ in (*self.kills, *self.slowdowns, *self.hb_stalls)]
+        return max(wids) if wids else -1
+
+
+@dataclasses.dataclass(frozen=True)
 class Scenario:
     """Everything that defines a straggler-mitigation scenario, in one object.
 
@@ -149,6 +273,11 @@ class Scenario:
     churn_pairs_per_worker: Optional[int] = None
     replan: Optional[ReplanConfig] = None
     speculation: Optional[Speculation] = None
+    # task-level failure semantics (payload exception -> backoff retry ->
+    # abandon); Python engine (replay) + live runtime
+    retry: Optional[Retry] = None
+    # deterministic chaos schedule; live runtime only
+    faults: Optional[FaultPlan] = None
     scheduler: Union[str, Scheduler] = "fifo_gang"
     workers_per_job: Optional[int] = None
     job_plans: Optional[Tuple[Optional[JobPlan], ...]] = None
@@ -291,6 +420,29 @@ class Scenario:
                     "backend='python' only (the jax lane implements the gang "
                     "regime)"
                 )
+        if self.retry is not None:
+            if not isinstance(self.retry, Retry):
+                raise ValueError(f"Scenario.retry: expected a Retry, got {type(self.retry)}")
+            if backend == "jax":
+                raise ValueError(
+                    "Scenario.retry: task-failure retry runs on the Python "
+                    "engine (trace replay) and the live runtime only; the jax "
+                    "lanes have no task-failure notion"
+                )
+        if self.faults is not None:
+            if not isinstance(self.faults, FaultPlan):
+                raise ValueError(f"Scenario.faults: expected a FaultPlan, got {type(self.faults)}")
+            if backend in ("python", "jax"):
+                raise ValueError(
+                    "Scenario.faults: chaos fault injection drives the live "
+                    "runtime only (backend='live'); simulations see its "
+                    "consequences through the recorded trace"
+                )
+            if n is not None and self.faults.max_wid >= int(n):
+                raise ValueError(
+                    f"Scenario.faults: worker ids must lie in [0, {n}), "
+                    f"got {self.faults.max_wid}"
+                )
         if not isinstance(self.scheduler, Scheduler) and self.scheduler not in SCHEDULERS:
             raise ValueError(
                 f"Scenario.scheduler: unknown scheduler {self.scheduler!r} "
@@ -333,7 +485,7 @@ class Scenario:
             )
         if self.devices < 1:
             raise ValueError(f"Scenario.devices: devices must be >= 1, got {self.devices}")
-        if backend == "python":
+        if backend in ("python", "live"):
             if self.dtype != "float32":
                 raise ValueError(
                     "Scenario.dtype: float64 lanes are a jax epoch-scan knob "
@@ -377,6 +529,7 @@ class Scenario:
             "churn_schedule": self.churn_schedule,
             "controller": controller,
             "speculation": self.speculation,
+            "retry": self.retry,
             "scheduler": self.scheduler,
             "workers_per_job": self.workers_per_job,
         }
@@ -479,7 +632,7 @@ def _encode_field(name: str, v):
             {k: (list(x) if isinstance(x, tuple) else x) for k, x in dataclasses.asdict(v).items()}
         )
         return out
-    if name in ("churn", "churn_schedule", "replan", "speculation"):
+    if name in ("churn", "churn_schedule", "replan", "speculation", "retry", "faults"):
         return {k: (list(x) if isinstance(x, tuple) else x) for k, x in dataclasses.asdict(v).items()}
     if name == "scheduler":
         if isinstance(v, Scheduler):
@@ -520,6 +673,10 @@ def _decode_field(name: str, v):
         return ReplanConfig(**v)
     if name == "speculation":
         return Speculation(**v)
+    if name == "retry":
+        return Retry(**v)
+    if name == "faults":
+        return FaultPlan(**v)
     if name == "job_plans":
         return tuple(None if p is None else JobPlan(**p) for p in v)
     if name == "speeds":

@@ -1,0 +1,317 @@
+"""Chaos harness e2e: FaultPlan-injected faults, payload-failure retries, a
+master crash with durable-journal recovery -- and after all of it, the one
+journal still replays through the DES engine bit-for-bit.
+
+The acceptance shape (per seed): a scheduled worker kill + a worker slowdown
++ an injected payload exception land during a two-job run whose master
+journals every decision; mid-run the master "crashes" (torn sockets, no
+cleanup), ``RuntimeMaster.recover`` rebuilds it from the journal, fresh
+workers re-join the recovered wids, ``resume()`` finishes the jobs -- and the
+full journal (crash and recovery as one trace) replays exactly: identical
+accounting counters and identical per-job records.
+"""
+
+import asyncio
+import json
+import os
+
+import pytest
+
+from repro.cluster import FaultPlan, Retry, Scenario
+from repro.cluster.runtime import (
+    LiveJob,
+    Runtime,
+    RuntimeMaster,
+    read_journal,
+    replay_trace,
+    spawn_worker_thread,
+    trace_accounting,
+)
+
+pytestmark = pytest.mark.timeout(180)
+
+# CI's chaos leg (and local soak runs) widen the sweep via CHAOS_SEEDS=<n>
+SEEDS = list(range(max(5, int(os.environ.get("CHAOS_SEEDS", "5")))))
+
+
+async def join_threads(threads, timeout_s=10.0):
+    """Join worker threads off the event loop: a blocking ``Thread.join`` on
+    the loop thread would stall the callbacks that flush the master's socket
+    closes, so workers would never see EOF and every join would time out."""
+    loop = asyncio.get_running_loop()
+    for t in threads:
+        await loop.run_in_executor(None, t.join, timeout_s)
+
+
+def record_tuple(rec):
+    return (
+        rec.job_id,
+        rec.name,
+        rec.arrival,
+        rec.start,
+        rec.finish,
+        rec.n_batches,
+        rec.replication,
+    )
+
+
+def assert_exact_twin(events, report):
+    """Fold, replay, and live counters all agree exactly; job records match."""
+    acct = trace_accounting(events)
+    assert acct == report.accounting()
+    eng = replay_trace(events)
+    assert eng.accounting() == acct
+    live = sorted(report.records, key=lambda r: r.job_id)
+    twin = sorted(eng.records, key=lambda r: r.job_id)
+    assert len(live) == len(twin)
+    for lr, er in zip(live, twin):
+        assert record_tuple(lr) == record_tuple(er)
+    return eng
+
+
+# --------------------------------------------------------------------------
+# the acceptance scenario: kill + slowdown + payload raise + crash + recover
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_chaos_kill_retry_crash_recover_exact_twin(tmp_path, seed):
+    journal = str(tmp_path / f"chaos-{seed}.jsonl")
+    sc = Scenario(
+        n_batches=3,
+        retry=Retry(max_attempts=2, backoff_s=0.05, max_backoff_s=0.2),
+        faults=FaultPlan(
+            seed=seed,
+            kills=((seed % 3, 0.35),),  # tear one worker's socket mid-job-0
+            slowdowns=(((seed + 1) % 3, 0.0, 2.0),),  # one worker runs at half speed
+            payload_errors=((0, 1, 1),),  # job 0 batch 1: first dispatch raises
+        ),
+    )
+    kw = dict(heartbeat_s=0.05, heartbeat_timeout_s=2.0, lease_floor_s=30.0)
+
+    async def phase_one():
+        master = RuntimeMaster(3, sc, journal=journal, **kw)
+        port = await master.start()
+        threads = [spawn_worker_thread(master.host, port) for _ in range(3)]
+        await master.wait_for_workers()
+        jobs = [
+            LiveJob(job_id=0, costs=(0.5, 0.5, 0.5), name="chaotic"),
+            LiveJob(job_id=1, costs=(0.6, 0.6, 0.6), arrival=0.05, name="later"),
+        ]
+        run_task = asyncio.ensure_future(master.run(jobs, timeout_s=60.0))
+        # crash once job 1 is genuinely in flight: queued + in-flight state,
+        # delivered faults, and consumed retries all cross the crash boundary
+        while not any(e["ev"] == "dispatch" and e["job"] == 1 for e in master.recorder.events):
+            await asyncio.sleep(0.01)
+        await asyncio.sleep(0.05)
+        run_task.cancel()
+        try:
+            await run_task
+        except asyncio.CancelledError:
+            pass
+        await master.crash()
+        await join_threads(threads, 5.0)
+
+    async def phase_two():
+        master = RuntimeMaster.recover(journal, **kw)
+        port = await master.start()
+        threads = [spawn_worker_thread(master.host, port) for _ in range(3)]
+        try:
+            report = await master.resume(timeout_s=60.0)
+        finally:
+            await master.close()
+            await join_threads(threads, 5.0)
+        return report
+
+    asyncio.run(phase_one())
+    mid = read_journal(journal)  # what survived the crash, before recovery
+    assert mid[0]["ev"] == "scenario"
+    assert not any(e["ev"] == "recover" for e in mid)
+
+    report = asyncio.run(phase_two())
+
+    # the journal IS the trace: one file covers crash + recovery
+    events = read_journal(journal)
+    assert events == json.loads(json.dumps(list(report.trace)))
+
+    # both jobs completed despite kill + payload raise + crash
+    assert [r.job_id for r in sorted(report.records, key=lambda r: r.job_id)] == [0, 1]
+    assert all(r.finish < float("inf") for r in report.records)
+
+    # every injected fault left its mark
+    chaos_kinds = {e["kind"] for e in events if e["ev"] == "chaos"}
+    assert "kill" in chaos_kinds and "raise" in chaos_kinds
+    fail_causes = [e["cause"] for e in events if e["ev"] == "fail"]
+    assert "eof" in fail_causes  # the chaos kill, detected as a torn socket
+    assert "crash" in fail_causes  # workers lost with the master
+    assert report.n_task_failures >= 1  # the injected payload raise
+    assert report.n_retries >= 1  # its backoff-released re-dispatch
+    assert any(e["ev"] == "task_fail" for e in events)
+    assert any(e["ev"] == "retry" for e in events)
+    assert sum(1 for e in events if e["ev"] == "recover") == 1
+    assert "PayloadError" in report.task_errors[0][3]
+
+    # the tentpole claim: bit-exact accounting and records through the twin
+    assert_exact_twin(events, report)
+
+
+# --------------------------------------------------------------------------
+# wire faults: drop/dup/delay under a respawning supervisor, still exact
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_wire_chaos_with_supervisor_replays_exactly(seed):
+    """Frames dropped, duplicated, and delayed at the master's send/receive
+    boundary.  A dropped task or finish frame eventually blows the replica's
+    lease, the master declares the worker dead, and a supervisor (one
+    replacement per observed failure) re-joins capacity -- so the run always
+    makes progress, whatever the fault dice rolled.  The trace, chaos scars
+    and all, must still replay exactly."""
+    sc = Scenario(
+        n_batches=2,
+        retry=Retry(max_attempts=3, backoff_s=0.05, max_backoff_s=0.2),
+        faults=FaultPlan(seed=seed, drop_p=0.15, dup_p=0.10, delay_p=0.10, delay_s=0.02),
+    )
+
+    async def run():
+        master = RuntimeMaster(
+            2, sc, heartbeat_s=0.05, heartbeat_timeout_s=1.0, lease_factor=4.0, lease_floor_s=1.0
+        )
+        port = await master.start()
+        threads = [spawn_worker_thread(master.host, port) for _ in range(2)]
+        await master.wait_for_workers()
+
+        async def supervise():
+            handled = 0
+            while not master._finalized:
+                await asyncio.sleep(0.05)
+                fails = sum(1 for e in master.recorder.events if e["ev"] == "fail")
+                while handled < fails:
+                    handled += 1
+                    threads.append(spawn_worker_thread(master.host, port))
+
+        sup = asyncio.ensure_future(supervise())
+        try:
+            report = await master.run(
+                [LiveJob(job_id=0, costs=(0.2, 0.2, 0.2, 0.2), name="wired")],
+                timeout_s=90.0,
+            )
+        finally:
+            sup.cancel()
+            await master.close()
+            await join_threads(threads, 5.0)
+        return report
+
+    report = asyncio.run(run())
+    assert len(report.records) == 1
+    assert report.records[0].finish < float("inf")
+    # the seeds exercise the wire layer for real
+    assert any(e["ev"] == "chaos" for e in report.trace)
+    assert_exact_twin(report.trace, report)
+
+
+# --------------------------------------------------------------------------
+# retry semantics without chaos: deterministic budget exhaustion
+# --------------------------------------------------------------------------
+
+
+def test_retry_budget_exhausted_abandons_exactly():
+    """One worker, one batch, a payload that always raises: dispatch, fail,
+    backoff, retry -- max_attempts times -- then the job is abandoned with
+    finish=inf.  Counters are exact and the trace replays exactly."""
+    sc = Scenario(n_batches=1, retry=Retry(max_attempts=2, backoff_s=0.05))
+    report = Runtime(1, sc).run(
+        [LiveJob(job_id=0, costs=(0.1,), payload="raise", name="doomed")], timeout_s=60.0
+    )
+    assert report.n_task_failures == 3  # initial attempt + 2 retries, all raise
+    assert report.n_retries == 2
+    assert len(report.records) == 1
+    assert report.records[0].finish == float("inf")
+    retries = [e for e in report.trace if e["ev"] == "retry"]
+    assert [e["attempt"] for e in retries] == [1, 2]
+    assert any(e["ev"] == "job_fail" for e in report.trace)
+    # each backoff respected its floor
+    fails = [e for e in report.trace if e["ev"] == "task_fail"]
+    for f, r in zip(fails, retries):
+        assert r["t"] - f["t"] >= 0.05 - 1e-9
+    assert_exact_twin(report.trace, report)
+
+
+# --------------------------------------------------------------------------
+# journal plumbing: durability, torn tails, serialization round-trips
+# --------------------------------------------------------------------------
+
+
+def test_journal_equals_trace_and_survives_torn_tail(tmp_path):
+    path = str(tmp_path / "run.jsonl")
+    sc = Scenario(n_batches=2)
+    report = Runtime(2, sc, journal=path).run(
+        [LiveJob(job_id=0, costs=(0.05, 0.05), name="journaled")], timeout_s=30.0
+    )
+    events = read_journal(path)
+    assert events == json.loads(json.dumps(list(report.trace)))
+    assert_exact_twin(events, report)
+    # a crash can tear the final line mid-write: the complete prefix survives
+    with open(path, "ab") as f:
+        f.write(b'{"ev": "disp')  # no newline, invalid JSON
+    assert read_journal(path) == events
+    # mid-file corruption is NOT silently skipped
+    with open(path, "wb") as f:
+        f.write(b'{"ev": "join", "t": 1.0}\n???garbage???\n{"ev": "flush", "t": 2.0}\n')
+    with pytest.raises(json.JSONDecodeError):
+        read_journal(path)
+
+
+def test_faultplan_and_retry_serialize_and_validate():
+    sc = Scenario(
+        n_batches=2,
+        retry=Retry(max_attempts=3, backoff_s=0.01, max_backoff_s=0.5),
+        faults=FaultPlan(
+            seed=7,
+            kills=((1, 0.2),),
+            slowdowns=((0, 0.0, 3.0),),
+            hb_stalls=((1, 0.1, 0.4),),
+            payload_errors=((0, 0, 2),),
+            drop_p=0.05,
+            dup_p=0.05,
+            delay_p=0.05,
+            delay_s=0.01,
+        ),
+    )
+    assert Scenario.from_dict(json.loads(json.dumps(sc.to_dict()))) == sc
+    # simulation backends reject the live-only knobs at the shared gate
+    with pytest.raises(ValueError, match="faults"):
+        Scenario(faults=FaultPlan(seed=1)).validate(n_workers=2, backend="python")
+    with pytest.raises(ValueError, match="retry"):
+        Scenario(retry=Retry()).validate(n_workers=2, backend="jax")
+    # a fault plan naming an out-of-range wid is caught before anything runs
+    with pytest.raises(ValueError, match="worker ids"):
+        Scenario(faults=FaultPlan(seed=0, kills=((5, 0.1),))).validate(
+            n_workers=2, backend="live"
+        )
+    # the backoff schedule: exponential, capped
+    r = Retry(max_attempts=4, backoff_s=0.1, max_backoff_s=0.35)
+    assert [r.backoff(k) for k in (1, 2, 3, 4)] == [0.1, 0.2, 0.35, 0.35]
+
+
+def test_recovered_master_refuses_run_and_fresh_refuses_resume(tmp_path):
+    path = str(tmp_path / "run.jsonl")
+    sc = Scenario(n_batches=1)
+    Runtime(1, sc, journal=path).run([LiveJob(job_id=0, costs=(0.02,))], timeout_s=30.0)
+
+    async def check():
+        fresh = RuntimeMaster(1, sc)
+        with pytest.raises(RuntimeError, match="resume"):
+            await fresh.resume()
+        recovered = RuntimeMaster.recover(path)
+        with pytest.raises(RuntimeError, match="resume"):
+            await recovered.run([])
+        # the journaled run had completed: resume finalizes immediately
+        report = await recovered.resume(timeout_s=5.0)
+        await recovered.close()
+        return report
+
+    report = asyncio.run(check())
+    assert len(report.records) == 1
+    assert report.records[0].finish < float("inf")

@@ -79,6 +79,8 @@ def test_churn_schedule_replay_and_epoch_fields():
         "n_replicas_rescued",
         "n_replans",
         "n_speculative",
+        "n_task_failures",
+        "n_retries",
     }
 
 

@@ -11,7 +11,10 @@ import asyncio
 import json
 import os
 import signal
+import socket
 import struct
+import subprocess
+import sys
 import time
 import types
 
@@ -309,6 +312,37 @@ def test_subprocess_rejoin_serves_rescue_and_replays_exactly():
 
 
 # --------------------------------------------------------------------------
+# payload failures surface (no silent swallowing) and abandon without Retry
+# --------------------------------------------------------------------------
+
+
+def test_raising_payload_surfaces_in_live_report():
+    """A payload that raises must not be swallowed: the worker sends a fail
+    frame with the traceback, the master stamps ``task_fail``, and -- with no
+    Retry policy -- the job is abandoned (finish=inf) rather than hanging.
+    The faulted trace still replays exactly."""
+    sc = Scenario(n_batches=2)
+    report = Runtime(2, sc).run(
+        [LiveJob(job_id=0, costs=(0.08, 0.06), payload="raise")], timeout_s=30.0
+    )
+    # the first fail frame abandons the job and finalizes the run; the
+    # sibling batch's later frame (if any) lands after the freeze
+    assert report.n_task_failures == 1
+    assert report.n_retries == 0
+    assert len(report.task_errors) == 1
+    job_id, batch, wid, err = report.task_errors[0]
+    assert job_id == 0
+    assert "PayloadError" in err and "payload exploded" in err
+    fails = [e for e in report.trace if e["ev"] == "task_fail"]
+    assert len(fails) == 1 and fails[0]["attempt"] == 1
+    assert "PayloadError" in fails[0]["error"]
+    assert any(e["ev"] == "job_fail" for e in report.trace)
+    assert len(report.records) == 1
+    assert report.records[0].finish == float("inf")
+    assert_exact_twin(report, 2, sc)
+
+
+# --------------------------------------------------------------------------
 # failure detection: missed heartbeats fire within the configured window
 # --------------------------------------------------------------------------
 
@@ -353,9 +387,11 @@ def test_heartbeat_timeout_detection_within_window():
     for wid, f in fails.items():
         assert f["cause"] == "heartbeat"
         latency = f["t"] - dispatches[wid]["t"]
-        # no earlier than the window (modulo the heartbeat sent just before
-        # dispatch), and promptly after it (watchdog period = timeout/4)
-        assert latency >= timeout_s - 0.06
+        # no earlier than the window (modulo one heartbeat interval -- up to
+        # 1.1 x heartbeat_s with the seeded +-10% jitter -- sent just before
+        # the payload starts blocking), and promptly after it (watchdog
+        # period = timeout/4)
+        assert latency >= timeout_s - 0.07
         assert latency <= timeout_s + 1.0
 
 
@@ -413,7 +449,7 @@ def test_trace_accounting_hand_built():
     def ev(kind, t, **fields):
         return {"ev": kind, "t": t, **fields}
 
-    t = [i * TICK for i in range(1, 9)]
+    t = [i * TICK for i in range(1, 12)]
     events = [
         ev("dispatch", t[0], wid=0, job=0, batch=0, planned=5 * TICK, rescue=False),
         ev("dispatch", t[1], wid=1, job=0, batch=0, planned=5 * TICK, rescue=False),
@@ -423,15 +459,29 @@ def test_trace_accounting_hand_built():
         ev("fail", t[5], wid=2, cause="heartbeat"),
         ev("dispatch", t[6], wid=0, job=1, batch=0, planned=5 * TICK, rescue=True),
         ev("flush", t[7], wid=0, job=1, batch=0, sched_end=t[6] + 5 * TICK),
+        # a payload failure closes its dispatch at the failure stamp; the
+        # backoff-released re-dispatch counts as a retry, not a rescue
+        ev("dispatch", t[8], wid=1, job=2, batch=0, planned=5 * TICK, rescue=False),
+        ev("task_fail", t[9], wid=1, job=2, batch=0, attempt=1, error="boom"),
+        ev("retry", t[9] + TICK / 2, job=2, batch=0, attempt=1),
+        ev("dispatch", t[10], wid=1, job=2, batch=0, planned=5 * TICK, rescue=True, retry=True),
+        ev("finish", t[10] + 4 * TICK, wid=1, job=2, batch=0),
     ]
     acct = trace_accounting(events)
     assert acct == {
-        "worker_seconds": (t[2] - t[0]) + (t[3] - t[1]) + (t[5] - t[4]) + 5 * TICK,
+        "worker_seconds": (t[2] - t[0])
+        + (t[3] - t[1])
+        + (t[5] - t[4])
+        + 5 * TICK
+        + (t[9] - t[8])
+        + 4 * TICK,
         "cancelled_seconds_saved": (t[1] + 5 * TICK) - t[3],
         "n_worker_failures": 1,
         "n_replicas_rescued": 2,
         "n_replans": 0,
         "n_speculative": 0,
+        "n_task_failures": 1,
+        "n_retries": 1,
     }
 
 
@@ -469,6 +519,36 @@ def test_protocol_roundtrip_and_frame_guards():
         send_nowait(sink, {"type": "x", "blob": "a" * (MAX_FRAME + 1)})
 
 
+def test_protocol_split_header_and_coalesced_frames():
+    """Framing survives arbitrary TCP segmentation: a read split mid-way
+    through the 4-byte header, and two frames coalesced into one segment."""
+
+    def encode(obj):
+        data = json.dumps(obj, separators=(",", ":")).encode()
+        return struct.pack(">I", len(data)) + data
+
+    async def run():
+        frame = encode({"type": "hb", "wid": 1})
+        reader = asyncio.StreamReader()
+        pending = asyncio.ensure_future(read_msg(reader))
+        reader.feed_data(frame[:2])  # half the length header
+        await asyncio.sleep(0.01)
+        assert not pending.done()  # must wait for the rest, not misparse
+        reader.feed_data(frame[2:7])  # rest of header + part of the body
+        await asyncio.sleep(0.01)
+        assert not pending.done()
+        reader.feed_data(frame[7:])
+        assert await pending == {"type": "hb", "wid": 1}
+        # two frames delivered in one segment parse as two messages
+        reader.feed_data(encode({"type": "finish", "wid": 0}) + encode({"type": "hb", "wid": 2}))
+        assert await read_msg(reader) == {"type": "finish", "wid": 0}
+        assert await read_msg(reader) == {"type": "hb", "wid": 2}
+        reader.feed_eof()
+        assert await read_msg(reader) is None
+
+    asyncio.run(run())
+
+
 def test_protocol_rejects_untyped_and_oversized_frames():
     async def run():
         reader = asyncio.StreamReader()
@@ -487,3 +567,95 @@ def test_protocol_rejects_untyped_and_oversized_frames():
         assert await read_msg(reader3) is None
 
     asyncio.run(run())
+
+
+# --------------------------------------------------------------------------
+# worker-subprocess orphan prevention (PDEATHSIG + atexit fallback)
+# --------------------------------------------------------------------------
+
+
+def _dead_or_zombie(pid: int) -> bool:
+    try:
+        os.kill(pid, 0)
+    except ProcessLookupError:
+        return True
+    try:
+        with open(f"/proc/{pid}/stat") as f:
+            return f.read().rsplit(")", 1)[1].split()[0] == "Z"
+    except (FileNotFoundError, IndexError):  # pragma: no cover - non-procfs
+        return True
+
+
+def test_spawn_worker_subprocess_atexit_fallback_kills_orphans():
+    """Spawned workers are tracked, and the atexit hook kills survivors --
+    the cross-platform guarantee behind PDEATHSIG."""
+    from repro.cluster.runtime import worker as worker_mod
+
+    lst = socket.socket()
+    lst.settimeout(20.0)
+    lst.bind(("127.0.0.1", 0))
+    lst.listen(4)
+    port = lst.getsockname()[1]
+    proc = worker_mod.spawn_worker_subprocess("127.0.0.1", port)
+    conn = None
+    try:
+        assert proc in worker_mod._children
+        conn, _ = lst.accept()  # the worker is up, blocked awaiting a welcome
+        assert proc.poll() is None
+        worker_mod._kill_orphans()
+        proc.wait(timeout=10.0)
+        assert proc.poll() is not None
+    finally:
+        if conn is not None:
+            conn.close()
+        lst.close()
+        if proc.poll() is None:
+            proc.kill()
+
+
+@pytest.mark.skipif(not sys.platform.startswith("linux"), reason="PR_SET_PDEATHSIG is linux-only")
+@pytest.mark.timeout(120)
+def test_pdeathsig_reaps_worker_when_parent_is_sigkilled():
+    """SIGKILL the process that spawned a worker (no atexit runs there): the
+    kernel's PDEATHSIG must kill the worker anyway -- chaos runs that crash
+    the master must not leak worker processes."""
+    lst = socket.socket()
+    lst.settimeout(30.0)
+    lst.bind(("127.0.0.1", 0))
+    lst.listen(4)
+    port = lst.getsockname()[1]
+    script = (
+        "import time\n"
+        "from repro.cluster.runtime.worker import spawn_worker_subprocess\n"
+        f"p = spawn_worker_subprocess('127.0.0.1', {port})\n"
+        "print(p.pid, flush=True)\n"
+        "time.sleep(120)\n"
+    )
+    pkg_root = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
+    env = os.environ.copy()
+    env["PYTHONPATH"] = pkg_root + os.pathsep + env.get("PYTHONPATH", "")
+    parent = subprocess.Popen([sys.executable, "-c", script], stdout=subprocess.PIPE, env=env)
+    conn = None
+    worker_pid = None
+    try:
+        worker_pid = int(parent.stdout.readline())
+        conn, _ = lst.accept()  # the worker is genuinely up before the kill
+        os.kill(parent.pid, signal.SIGKILL)
+        parent.wait(timeout=10.0)
+        deadline = time.monotonic() + 15.0
+        while time.monotonic() < deadline:
+            if _dead_or_zombie(worker_pid):
+                break
+            time.sleep(0.05)
+        else:
+            pytest.fail(f"worker {worker_pid} survived its parent's SIGKILL")
+    finally:
+        if conn is not None:
+            conn.close()
+        lst.close()
+        for pid in (parent.pid, worker_pid):
+            if pid:
+                try:
+                    os.kill(pid, signal.SIGKILL)
+                except (ProcessLookupError, PermissionError):
+                    pass

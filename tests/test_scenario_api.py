@@ -377,6 +377,7 @@ def test_to_engine_kwargs_requires_workers():
         "scheduler",
         "workers_per_job",
         "speculation",
+        "retry",
     }
 
 
