@@ -33,7 +33,15 @@ vary with the runner).  Two properties are load-bearing and fail the build:
      warm -- stays below an absolute ceiling, and ``trace_scale.peak_rss_mb``
      stays below the committed RSS ceiling; a path that re-materializes
      per-job outputs blows through both), and
-  8. master crash-recovery stays cheap on the live runtime (``--runtime``
+  8. the tail-SLO planner keeps the paper's headline trade-off alive
+     (``slo.all_feasible`` -- every parametric tail family still has a
+     feasible (B, r, scheduler) candidate at the committed targets -- and
+     ``slo.pareto_mean_vs_tail_diverge`` -- on the heavy Pareto family the
+     mean-optimal candidate must keep differing from the cheapest
+     p99-feasible one; losing either means the planner or the streaming
+     quantile state silently broke -- and ``slo.sweep_seconds_warm`` stays
+     below an absolute ceiling), and
+  9. master crash-recovery stays cheap on the live runtime (``--runtime``
      takes ``runtime_bench.py``'s JSON and gates
      ``recovery.recovery_overhead`` -- the crashed-and-journal-recovered
      makespan over the uninterrupted one -- below a ceiling, and requires
@@ -51,6 +59,7 @@ without editing the workflow:
   BENCH_MIN_SPEC_SPEEDUP         floor on speculation.pareto_speculative_speedup (1.1)
   BENCH_MAX_TRACE_SWEEP_SECONDS  ceiling on trace_scale.sweep_seconds_warm (9.0)
   BENCH_MAX_TRACE_PEAK_RSS_MB    ceiling on trace_scale.peak_rss_mb (2048)
+  BENCH_MAX_SLO_SWEEP_SECONDS    ceiling on slo.sweep_seconds_warm (5.0)
   BENCH_MAX_RECOVERY_OVERHEAD    ceiling on recovery.recovery_overhead (3.0)
 """
 from __future__ import annotations
@@ -70,6 +79,7 @@ DEFAULT_MAX_SPACE_RESPONSE_RATIO = 0.85
 DEFAULT_MIN_SPEC_SPEEDUP = 1.1
 DEFAULT_MAX_TRACE_SWEEP_SECONDS = 9.0
 DEFAULT_MAX_TRACE_PEAK_RSS_MB = 2048.0
+DEFAULT_MAX_SLO_SWEEP_SECONDS = 5.0
 DEFAULT_MAX_RECOVERY_OVERHEAD = 3.0
 
 
@@ -113,6 +123,7 @@ def check(
     min_spec_speedup: float = DEFAULT_MIN_SPEC_SPEEDUP,
     max_trace_sweep_seconds: float = DEFAULT_MAX_TRACE_SWEEP_SECONDS,
     max_trace_peak_rss_mb: float = DEFAULT_MAX_TRACE_PEAK_RSS_MB,
+    max_slo_sweep_seconds: float = DEFAULT_MAX_SLO_SWEEP_SECONDS,
 ) -> list:
     """Return a list of human-readable failure strings (empty = gate passes)."""
     failures = []
@@ -219,6 +230,39 @@ def check(
                 f"the stream path must stay O(slab), not O(jobs)"
             )
 
+    cur_sl = current.get("slo", {})
+    base_sl = baseline.get("slo", {})
+    if not cur_sl or not base_sl:
+        failures.append("slo section missing from current or baseline")
+    else:
+        if not cur_sl.get("all_feasible"):
+            infeasible = [
+                name
+                for name, v in cur_sl.items()
+                if isinstance(v, dict) and not v.get("feasible", True)
+            ]
+            failures.append(
+                f"tail-SLO planner lost feasibility: no (B, r, scheduler) "
+                f"candidate meets the committed p99 targets for "
+                f"{infeasible or 'unknown families'} (baseline had all "
+                f"families feasible)"
+            )
+        if not cur_sl.get("pareto_mean_vs_tail_diverge"):
+            failures.append(
+                "tail-SLO planner stopped reproducing the mean-optimal != "
+                "tail-optimal trade-off on the heavy Pareto family: the "
+                "cheapest p99-feasible candidate now coincides with the "
+                "mean-optimal one (baseline kept them distinct)"
+            )
+        sl_warm = cur_sl.get("sweep_seconds_warm")
+        if sl_warm is None or sl_warm > max_slo_sweep_seconds:
+            failures.append(
+                f"tail-SLO grid sweep slowed down: slo.sweep_seconds_warm "
+                f"{sl_warm if sl_warm is None else format(sl_warm, '.2f')}s "
+                f"> ceiling {max_slo_sweep_seconds:.2f}s (baseline recorded "
+                f"{base_sl.get('sweep_seconds_warm', float('nan')):.2f}s)"
+            )
+
     return failures
 
 
@@ -263,6 +307,9 @@ def main() -> int:
     max_trace_rss = float(
         os.environ.get("BENCH_MAX_TRACE_PEAK_RSS_MB", DEFAULT_MAX_TRACE_PEAK_RSS_MB)
     )
+    max_slo_sweep = float(
+        os.environ.get("BENCH_MAX_SLO_SWEEP_SECONDS", DEFAULT_MAX_SLO_SWEEP_SECONDS)
+    )
 
     max_recovery = float(
         os.environ.get("BENCH_MAX_RECOVERY_OVERHEAD", DEFAULT_MAX_RECOVERY_OVERHEAD)
@@ -271,7 +318,7 @@ def main() -> int:
     failures = check(
         current, baseline, min_jax_speedup, heavy_tolerance, min_jax_dynamic,
         max_dynamic_cold, min_jax_space, max_space_ratio, min_spec,
-        max_trace_sweep, max_trace_rss,
+        max_trace_sweep, max_trace_rss, max_slo_sweep,
     )
     runtime = json.loads(args.runtime.read_text()) if args.runtime else None
     if runtime is not None:
@@ -345,6 +392,23 @@ def main() -> int:
             f"ceiling {max_trace_sweep:.1f}s); peak RSS "
             f"{cur_tr.get('peak_rss_mb', float('nan')):.0f} MB "
             f"(ceiling {max_trace_rss:.0f} MB)"
+        )
+
+    cur_sl = current.get("slo", {})
+    base_sl = baseline.get("slo", {})
+    if cur_sl and base_sl:
+        best = (cur_sl.get("pareto_heavy") or {}).get("best") or {}
+        mean_opt = (cur_sl.get("pareto_heavy") or {}).get("mean_optimal") or {}
+        print(
+            f"tail-SLO planner: feasible on {cur_sl.get('feasible_frac', 0):.0%} "
+            f"of the grid, all families feasible: {cur_sl.get('all_feasible')}; "
+            f"pareto best (sched={best.get('scheduler')}, "
+            f"w={best.get('workers_per_job')}, B={best.get('B')}, "
+            f"r={best.get('r')}) vs mean-opt (sched={mean_opt.get('scheduler')}, "
+            f"w={mean_opt.get('workers_per_job')}, B={mean_opt.get('B')}, "
+            f"r={mean_opt.get('r')}); sweep "
+            f"{cur_sl.get('sweep_seconds_warm', float('nan')):.2f}s warm "
+            f"(ceiling {max_slo_sweep:.1f}s)"
         )
 
     if runtime is not None:

@@ -33,6 +33,13 @@ Six scenarios on the synthetic Google-trace jobs (and parametric tails):
     (family x budget x scheduler) grid, gated on whole-grid warm wall time
     (single-digit seconds) and process peak RSS (the streaming-aggregation
     memory ceiling).
+  * ``slo``          -- tail-SLO planning (``RedundancyPlanner.plan_slo``):
+    cheapest feasible (B, r, scheduler) meeting a p99 response target under
+    Poisson arrivals, per parametric tail family, on the streaming-quantile
+    kernel.  Records the cheapest-feasible vs mean-optimal candidates and
+    whether they differ; the regression gate keys on the Pareto row keeping
+    the mean-optimal != tail-optimal divergence alive and on all families
+    staying feasible.
   * ``space_sharing`` -- the space-sharing scheduler: mean response-time
     ratio of ``packed`` (narrow concurrent jobs on disjoint subsets) vs the
     ``fifo_gang`` baseline on one saturated workload, plus the jax-vs-python
@@ -110,6 +117,9 @@ def _cfg(smoke: bool) -> dict:
             "trace_slab": 1024,
             "trace_pool": 6,
             "trace_pools": 96,
+            "slo_workers": 8,
+            "slo_jobs": 600,
+            "slo_reps": 2,
         }
     return {
         "n_workers": 20,
@@ -127,6 +137,9 @@ def _cfg(smoke: bool) -> dict:
         "trace_slab": 1024,
         "trace_pool": 6,
         "trace_pools": 2304,
+        "slo_workers": 8,
+        "slo_jobs": 2000,
+        "slo_reps": 4,
     }
 
 
@@ -573,6 +586,89 @@ def bench_trace_scale(cfg: dict, seed: int = 0) -> dict:
     }
 
 
+def bench_slo(cfg: dict, seed: int = 0) -> dict:
+    """Tail-SLO planning: cheapest feasible (B, r, scheduler) per tail family.
+
+    Runs ``RedundancyPlanner.plan_slo`` over the (scheduler x pool-width x B)
+    grid for the three parametric tails and records, per family, the cheapest
+    feasible candidate, the mean-optimal candidate, and whether they differ --
+    the paper's "mean-optimal is not tail-optimal" observation, kept live as
+    a gated benchmark fact (the gate keys on the Pareto row).
+    """
+    from repro.cluster import SLO
+
+    n = cfg["slo_workers"]
+    planner = RedundancyPlanner(n)
+    rate = 0.05
+    # p99 response targets sized so each family is feasible at the committed
+    # smoke scale but tight enough that heavy tails need planning to meet it
+    dists = {
+        "exponential": (Exponential(1.0), 12.0),
+        "shifted_exp": (ShiftedExponential(0.3, 1.0), 15.0),
+        "pareto_heavy": (Pareto(1.0, 1.5), 60.0),
+    }
+
+    def sweep() -> dict:
+        return {
+            name: planner.plan_slo(
+                [dist],
+                SLO(quantile=0.99, target_s=target, arrival_rate=rate),
+                n_jobs=cfg["slo_jobs"],
+                n_reps=cfg["slo_reps"],
+                seed=seed,
+                schedulers=("fifo_gang", "packed"),
+            )
+            for name, (dist, target) in dists.items()
+        }
+
+    jax.clear_caches()
+    t0 = time.time()
+    plans = sweep()
+    cold = time.time() - t0
+    t0 = time.time()
+    plans = sweep()
+    warm = time.time() - t0
+
+    def _cand(c) -> dict:
+        return {
+            "scheduler": c.scheduler,
+            "workers_per_job": c.workers_per_job,
+            "B": c.n_batches,
+            "r": c.replication,
+            "feasible": c.feasible,
+            "cost_worker_seconds": c.cost_worker_seconds,
+            "mean_response": c.mean_response,
+            "achieved_p99": c.achieved[0],
+        }
+
+    def _key(c) -> tuple:
+        return (c.scheduler, c.workers_per_job, c.n_batches, c.replication)
+
+    out: dict = {"n_workers": n, "arrival_rate": rate, "quantile": 0.99}
+    feas_total = cand_total = 0
+    for name, plan in plans.items():
+        mean_opt = min(plan.candidates, key=lambda c: c.mean_response)
+        n_feas = sum(c.feasible for c in plan.candidates)
+        feas_total += n_feas
+        cand_total += len(plan.candidates)
+        out[name] = {
+            "target_p99_s": dists[name][1],
+            "feasible": plan.feasible,
+            "n_candidates": len(plan.candidates),
+            "n_feasible": n_feas,
+            "best": None if plan.best is None else _cand(plan.best),
+            "mean_optimal": _cand(mean_opt),
+            "mean_vs_tail_diverge": plan.best is not None
+            and _key(plan.best) != _key(mean_opt),
+        }
+    out["feasible_frac"] = feas_total / max(cand_total, 1)
+    out["all_feasible"] = all(out[name]["feasible"] for name in dists)
+    out["pareto_mean_vs_tail_diverge"] = out["pareto_heavy"]["mean_vs_tail_diverge"]
+    out["sweep_seconds_cold"] = cold
+    out["sweep_seconds_warm"] = warm
+    return out
+
+
 def run_all(smoke: bool = True, seed: int = 0) -> list:
     """CSV rows for the benchmark aggregator (smoke sizes by default)."""
     cfg = _cfg(smoke)
@@ -667,6 +763,16 @@ def run_all(smoke: bool = True, seed: int = 0) -> list:
             f"rss {tr['peak_rss_mb']:.0f}MB)",
         )
     )
+    t0 = time.time()
+    sl = bench_slo(cfg, seed)
+    rows.append(
+        (
+            "cluster_slo",
+            (time.time() - t0) * 1e6 / max(cfg["slo_jobs"], 1),
+            f"p99 plans feasible {sl['feasible_frac']:.0%} of grid, "
+            f"pareto mean!=tail: {sl['pareto_mean_vs_tail_diverge']}",
+        )
+    )
     return rows
 
 
@@ -695,6 +801,7 @@ def main() -> None:
         "space_sharing": bench_space_sharing(cfg, args.seed),
         "speculation": bench_speculation(cfg, args.seed),
         "trace_scale": bench_trace_scale(cfg, args.seed),
+        "slo": bench_slo(cfg, args.seed),
     }
     if args.backend in ("python", "both"):
         result["redundancy"] = bench_redundancy(cfg, args.seed, backend="python")

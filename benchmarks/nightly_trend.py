@@ -6,7 +6,10 @@ downloaded artifacts, or just the fresh run) into a compact markdown table
 of the load-bearing series -- the jax speed edges (static + dynamic + space
 sweeps), the packed-vs-gang response ratio, the dynamic cold start, the
 trace-scale cluster-day sweep (warm seconds + peak RSS), the heavy-tail
-redundancy speedup, and the speculative-vs-planned Pareto speedups.  Rows are labelled by the run id carried in the artifact path
+redundancy speedup, the speculative-vs-planned Pareto speedups, and the
+tail-SLO feasibility frontier (fraction of the (B, r, scheduler) grid that
+meets the committed p99 targets, plus the cost of the cheapest feasible
+Pareto candidate).  Rows are labelled by the run id carried in the artifact path
 (``gh run download`` lands each artifact in its own directory) and sorted
 naturally, so the table reads chronologically.
 
@@ -84,8 +87,9 @@ def trend_table(rows: list[tuple[str, dict]]) -> str:
         "| run | static edge (min..max) | dynamic edge (min..max) "
         "| space edge (min..max) | packed/gang resp | dynamic cold (s) "
         "| peak RSS (MB) | trace warm (s) | trace RSS (MB) "
-        "| heavy-tail speedup | spec pareto (react/hybrid) |\n"
-        "|---|---|---|---|---|---|---|---|---|---|---|"
+        "| heavy-tail speedup | spec pareto (react/hybrid) "
+        "| slo feasible | slo pareto cost (w-s) |\n"
+        "|---|---|---|---|---|---|---|---|---|---|---|---|---|"
     )
     lines = [header]
     for name, d in rows:
@@ -94,13 +98,14 @@ def trend_table(rows: list[tuple[str, dict]]) -> str:
         sp = _get(d, "space_sharing") or {}
         sk = _get(d, "speculation") or {}
         tr = _get(d, "trace_scale") or {}
+        sl = _get(d, "slo") or {}
         heavy = _get(d, "redundancy", "_summary", "max_heavy_speedup")
 
         def fmt(v, spec=".1f", suffix=""):
             return format(v, spec) + suffix if isinstance(v, (int, float)) else "-"
 
         lines.append(
-            "| {} | {}..{} | {}..{} | {}..{} | {} | {} | {} | {} | {} | {} | {}/{} |".format(
+            "| {} | {}..{} | {}..{} | {}..{} | {} | {} | {} | {} | {} | {} | {}/{} | {} | {} |".format(
                 name,
                 fmt(b.get("min_speedup_warm"), ".0f", "x"),
                 fmt(b.get("max_speedup_warm"), ".0f", "x"),
@@ -116,6 +121,8 @@ def trend_table(rows: list[tuple[str, dict]]) -> str:
                 fmt(heavy, ".2f", "x"),
                 fmt(sk.get("pareto_speculative_speedup"), ".2f", "x"),
                 fmt(sk.get("pareto_hybrid_speedup"), ".2f", "x"),
+                fmt(sl.get("feasible_frac"), ".0%"),
+                fmt(_get(sl, "pareto_heavy", "best", "cost_worker_seconds"), ".0f"),
             )
         )
     return "\n".join(lines)
@@ -134,6 +141,9 @@ _SERIES = [
     ("heavy-tail speedup", ("redundancy", "_summary", "max_heavy_speedup")),
     ("spec pareto (react)", ("speculation", "pareto_speculative_speedup")),
     ("spec pareto (hybrid)", ("speculation", "pareto_hybrid_speedup")),
+    ("slo feasible frac", ("slo", "feasible_frac")),
+    ("slo pareto cost (w-s)", ("slo", "pareto_heavy", "best", "cost_worker_seconds")),
+    ("slo sweep warm (s)", ("slo", "sweep_seconds_warm")),
 ]
 
 

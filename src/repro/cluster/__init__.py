@@ -66,7 +66,7 @@ from .epoch_scan import (
     frontier_job_times_dynamic,
     simulate_epochs,
 )
-from .scenario import FaultPlan, Retry, Scenario, Speculation
+from .scenario import SLO, FaultPlan, Retry, Scenario, Speculation
 from .scheduler import JobPlan, Scheduler, make_scheduler
 from .master import (
     ClusterEngine,
@@ -76,7 +76,14 @@ from .master import (
     jobs_from_traces,
     sample_job_times,
 )
-from .stream import StreamFullReport, StreamStats, epoch_stream_stats, fold_stream_stats, simulate_stream
+from .stream import (
+    STREAM_QUANTILE_RTOL,
+    StreamFullReport,
+    StreamStats,
+    epoch_stream_stats,
+    fold_stream_stats,
+    simulate_stream,
+)
 from .vectorized import FifoReport, frontier_job_times, simulate_fifo
 from .workers import ChurnProcess, ChurnSchedule, Worker, WorkerPool, sample_churn_schedule
 
@@ -92,8 +99,10 @@ __all__ = [
     "workers",
     "FaultPlan",
     "Retry",
+    "SLO",
     "Scenario",
     "Speculation",
+    "STREAM_QUANTILE_RTOL",
     "JobPlan",
     "Scheduler",
     "make_scheduler",

@@ -48,15 +48,18 @@ class SpeculativePolicy:
         self.cfg = cfg
 
     def median(self, obs: Sequence[float]) -> Optional[float]:
+        """Running median of observed task times, or None below min_observations."""
         if len(obs) < self.cfg.min_observations:
             return None
         s = sorted(obs)
         return s[(len(s) - 1) // 2]
 
     def lagging(self, elapsed: float, median: float) -> bool:
+        """Whether a task ``elapsed`` seconds in counts as a laggard."""
         return elapsed > self.cfg.theta * median
 
     def next_epoch(self, crossing: float, now: float) -> float:
+        """First check-epoch boundary after both ``crossing`` and ``now``."""
         iv = self.cfg.interval
         k = max(math.floor(crossing / iv), math.floor(now / iv)) + 1
         return k * iv
@@ -143,6 +146,7 @@ class OnlineReplanner:
             self._since_refit += 1
 
     def observe_many(self, task_times, n_competitors: int = 1) -> None:
+        """Feed a batch of task times into :meth:`observe`."""
         for t in np.asarray(task_times, dtype=np.float64).ravel():
             self.observe(float(t), n_competitors)
 

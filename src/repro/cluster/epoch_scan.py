@@ -1,4 +1,4 @@
-"""jax epoch-scan engine: churn, heterogeneous speeds, rescue, and replanning.
+"""The jax epoch-scan engine: churn, heterogeneous speeds, rescue, and replanning.
 
 This module closes the vectorization gap left by :mod:`repro.cluster.vectorized`
 (which covers the static case): it replays the *dynamic* semantics of the
@@ -115,6 +115,7 @@ class ReplanConfig:
     blend: float = 0.5
 
     def to_controller(self, n_workers: int):
+        """Materialize this config as an :class:`~repro.cluster.control.OnlineReplanner`."""
         from .control import OnlineReplanner
 
         return OnlineReplanner(
@@ -157,18 +158,22 @@ class EpochReport:
 
     @property
     def compute_times(self) -> np.ndarray:
+        """Per-(rep, job) compute time: finish minus start."""
         return self.finishes - self.starts
 
     @property
     def response_times(self) -> np.ndarray:
+        """Per-(rep, job) response time: finish minus arrival."""
         return self.finishes - self.arrivals[None, :]
 
     @property
     def queue_waits(self) -> np.ndarray:
+        """Per-(rep, job) queueing delay: start minus arrival."""
         return self.starts - self.arrivals[None, :]
 
     @property
     def final_n_batches(self) -> np.ndarray:
+        """The B each rep's replanner ended the run on."""
         return self.n_batches_used[:, -1]
 
     def accounting(self) -> dict:

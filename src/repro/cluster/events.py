@@ -47,13 +47,16 @@ class EventQueue:
         self._seq = itertools.count()
 
     def push(self, time: float, kind: str, **payload) -> None:
+        """Schedule an event; FIFO-stable among equal timestamps."""
         heapq.heappush(self._heap, (float(time), next(self._seq), kind, payload))
 
     def pop(self) -> tuple:
+        """Remove and return the earliest ``(time, kind, payload)``."""
         time, _, kind, payload = heapq.heappop(self._heap)
         return time, kind, payload
 
     def peek_time(self) -> float:
+        """Timestamp of the earliest pending event."""
         return self._heap[0][0]
 
     def __len__(self) -> int:
@@ -70,6 +73,7 @@ class SimClock:
         self.now = 0.0
 
     def advance(self, t: float) -> None:
+        """Move simulated time forward to ``t`` (never backwards)."""
         if t < self.now - 1e-9:
             raise RuntimeError(f"clock moved backwards: {self.now} -> {t}")
         self.now = max(self.now, float(t))
@@ -89,6 +93,7 @@ class RngStreams:
         self._streams: dict = {}
 
     def get(self, name: str) -> np.random.Generator:
+        """The named substream, created on first use (order-independent)."""
         if name not in self._streams:
             key = zlib.crc32(name.encode("utf-8"))
             ss = np.random.SeedSequence(entropy=self.seed, spawn_key=(key,))

@@ -84,14 +84,17 @@ class JobRecord:
 
     @property
     def compute_time(self) -> float:
+        """Finish minus start: time the job spent executing."""
         return self.finish - self.start
 
     @property
     def response_time(self) -> float:
+        """Finish minus arrival: queueing delay plus compute."""
         return self.finish - self.arrival
 
     @property
     def queue_wait(self) -> float:
+        """Start minus arrival: time spent waiting for workers."""
         return self.start - self.arrival
 
 
@@ -121,14 +124,17 @@ class EngineReport:
 
     @property
     def compute_times(self) -> np.ndarray:
+        """Compute time per completed job, record order."""
         return np.array([r.compute_time for r in self.records])
 
     @property
     def response_times(self) -> np.ndarray:
+        """Response time per completed job, record order."""
         return np.array([r.response_time for r in self.records])
 
     @property
     def n_epochs(self) -> int:
+        """Number of dispatch epochs the run went through."""
         return len(self.epoch_times) + 1
 
     def accounting(self) -> dict:
@@ -145,6 +151,7 @@ class EngineReport:
         }
 
     def stats(self) -> JobTimeStats:
+        """Summary statistics over the finite compute times."""
         t = self.compute_times
         t = t[np.isfinite(t)]
         return stats_from_samples(t) if t.size else JobTimeStats.empty()

@@ -57,7 +57,8 @@ class FaultInjector:
 
     def wire(self, direction: str) -> str:
         """Fate of the next frame in ``direction`` ('in' master<-worker,
-        'out' master->worker): pass | drop | dup | delay."""
+        'out' master->worker): pass | drop | dup | delay.
+        """
         k = self._counts[direction]
         self._counts[direction] = k + 1
         p = self.plan
@@ -76,7 +77,8 @@ class FaultInjector:
 
     def due_kills(self, elapsed: float) -> List[int]:
         """Wids whose scheduled kill time has passed and not yet fired.
-        Callers mark delivery with :meth:`mark_killed`."""
+        Callers mark delivery with :meth:`mark_killed`.
+        """
         return [
             int(wid)
             for wid, at in self.plan.kills
@@ -84,6 +86,7 @@ class FaultInjector:
         ]
 
     def mark_killed(self, wid: int) -> None:
+        """Note that the scheduled kill for ``wid`` has been delivered."""
         self._killed.add(int(wid))
 
     def slow_factor(self, wid: int, elapsed: float) -> float:
@@ -103,7 +106,8 @@ class FaultInjector:
 
     def stall_needs_stamp(self, window: int) -> bool:
         """Stamp each stall window once (at first dropped heartbeat), not per
-        frame -- the journal records the fault, not every suppressed hb."""
+        frame -- the journal records the fault, not every suppressed hb.
+        """
         if window in self._stalls_stamped:
             return False
         self._stalls_stamped.add(window)
@@ -112,7 +116,8 @@ class FaultInjector:
     def payload_raise(self, job: int, batch: int) -> bool:
         """Whether this dispatch of (job, batch) should raise mid-payload.
         Counts deliveries, so the first ``n_raises`` dispatches fail and
-        later ones run clean."""
+        later ones run clean.
+        """
         for j, b, n in self.plan.payload_errors:
             if int(j) == int(job) and int(b) == int(batch):
                 done = self._raises.get((job, batch), 0)
@@ -125,7 +130,8 @@ class FaultInjector:
 
     def restore(self, chaos_events: Iterable[dict]) -> None:
         """Rebuild delivered-fault state from journaled ``chaos`` events so a
-        recovered master does not re-deliver scheduled faults."""
+        recovered master does not re-deliver scheduled faults.
+        """
         for e in chaos_events:
             kind = e.get("kind")
             if kind == "kill":

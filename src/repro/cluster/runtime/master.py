@@ -73,9 +73,11 @@ class LiveJob:
 
     @property
     def n_tasks(self) -> int:
+        """How many tasks this job carries."""
         return len(self.costs)
 
     def batch_costs(self, batch: int, n_batches: int) -> Tuple[float, ...]:
+        """Costs of the tasks landing in ``batch`` under a round-robin split into B."""
         return tuple(self.costs[batch::n_batches])
 
 
@@ -284,6 +286,7 @@ class RuntimeMaster:
     # -- lifecycle -----------------------------------------------------------
 
     async def start(self) -> int:
+        """Bind the socket, arm the background loops, return the bound port."""
         self._server = await asyncio.start_server(self._handle_conn, self.host, self._port_req)
         self.port = self._server.sockets[0].getsockname()[1]
         self._watchdog_task = asyncio.ensure_future(self._watchdog())
@@ -294,6 +297,7 @@ class RuntimeMaster:
         return self.port
 
     async def wait_for_workers(self, timeout_s: float = 30.0) -> None:
+        """Block until every expected worker has joined."""
         await asyncio.wait_for(self._all_joined.wait(), timeout_s)
 
     async def run(self, jobs: Sequence[LiveJob], timeout_s: float = 120.0) -> LiveReport:
@@ -318,7 +322,8 @@ class RuntimeMaster:
         """Finish a recovered run: re-arm the backoff timers that were in
         flight at the crash and wait for the journaled jobs to complete.
         Call after ``start()`` (workers re-join the recovered wids and pick
-        up the rescue backlog the crash left behind)."""
+        up the rescue backlog the crash left behind).
+        """
         if not self._recovered:
             raise RuntimeError("resume() only applies to RuntimeMaster.recover() masters")
         if self._ran:
@@ -348,6 +353,7 @@ class RuntimeMaster:
         )
 
     async def close(self) -> None:
+        """Orderly shutdown: cancel loops, wave workers off, close the journal."""
         for t in (self._watchdog_task, self._spec_task, self._chaos_task):
             if t is not None:
                 t.cancel()
@@ -368,7 +374,8 @@ class RuntimeMaster:
         """Die abruptly, as a real master crash would: no shutdown frames, no
         finalize, no flush accounting -- just torn sockets and a journal that
         ends mid-run.  The chaos harness's stand-in for ``kill -9`` on the
-        master process; :meth:`recover` rebuilds from the journal."""
+        master process; :meth:`recover` rebuilds from the journal.
+        """
         self._crashed = True
         self._pending_retries.clear()  # armed timers no-op via membership check
         for t in (self._watchdog_task, self._spec_task, self._chaos_task):
@@ -1310,9 +1317,11 @@ class Runtime:
         self.journal = journal
 
     def run(self, jobs: Sequence[LiveJob], timeout_s: float = 120.0) -> LiveReport:
+        """Synchronous wrapper around :meth:`run_async`."""
         return asyncio.run(self.run_async(jobs, timeout_s=timeout_s))
 
     async def run_async(self, jobs: Sequence[LiveJob], timeout_s: float = 120.0) -> LiveReport:
+        """Start a master, spawn/await the workers, run ``jobs``, tear down."""
         master = RuntimeMaster(
             self.n_workers,
             self.scenario,

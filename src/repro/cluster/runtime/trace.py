@@ -114,11 +114,13 @@ class TraceRecorder:
         return time.monotonic() - self._t0
 
     def stamp(self) -> float:
+        """Quantized, strictly increasing timestamp for the next event."""
         g = int(self.elapsed() * _GRID)
         self._last_g = max(g, self._last_g + 1)
         return self._last_g / _GRID
 
     def record(self, ev: str, t: float, **fields) -> None:
+        """Append one event, write-ahead journaling it when enabled."""
         if self.frozen:
             raise RuntimeError("trace is frozen; the run already finalized")
         event = {"ev": ev, "t": t, **fields}
@@ -129,12 +131,14 @@ class TraceRecorder:
             os.fsync(self._journal.fileno())
 
     def close_journal(self) -> None:
+        """Close the write-ahead journal file, if one is open."""
         if self._journal is not None:
             self._journal.close()
             self._journal = None
 
     @property
     def events(self) -> Tuple[dict, ...]:
+        """Everything recorded so far, in stamp order."""
         return tuple(self._events)
 
 

@@ -283,6 +283,7 @@ def spawn_worker_subprocess(host: str, port: int) -> subprocess.Popen:
 
 
 def main(argv) -> None:
+    """CLI entry point: ``python -m repro.cluster.runtime HOST PORT``."""
     if len(argv) != 3:
         raise SystemExit("usage: python -m repro.cluster.runtime HOST PORT")
     asyncio.run(worker_loop(argv[1], int(argv[2])))

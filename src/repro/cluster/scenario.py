@@ -38,7 +38,15 @@ if TYPE_CHECKING:  # pragma: no cover - annotation-only (avoids an import cycle
     # with epoch_scan, which routes its validation through this module)
     from .epoch_scan import ReplanConfig
 
-__all__ = ["FaultPlan", "Retry", "Scenario", "Speculation", "UNSET", "resolve_scenario"]
+__all__ = [
+    "FaultPlan",
+    "Retry",
+    "SLO",
+    "Scenario",
+    "Speculation",
+    "UNSET",
+    "resolve_scenario",
+]
 
 
 class _Unset:
@@ -153,6 +161,48 @@ class Retry:
         return min(self.backoff_s * (2.0 ** max(attempt - 1, 0)), self.max_backoff_s)
 
 
+@dataclasses.dataclass(frozen=True)
+class SLO:
+    """A tail response-time objective: ``P[response <= target_s] >= quantile``.
+
+    The paper's second core result is that the replication level minimizing
+    *mean* compute time is not the one minimizing tail response -- an SLO
+    makes that trade-off an explicit planning input instead of a blend
+    weight.  ``quantile`` is the tail level (0.99 for p99, 0.999 for p999),
+    ``target_s`` the response-time bound it must meet, and ``arrival_rate``
+    the offered load (jobs/second, Poisson) the target must hold under.
+    ``job_class`` restricts the objective to one workload class (a source
+    trace-job name under :class:`~repro.core.traces.TraceStream` streaming);
+    ``None`` applies it to the pooled response distribution.
+
+    Consumed by :meth:`repro.core.planner.RedundancyPlanner.plan_slo`, which
+    sweeps (B, r, scheduler) candidates and returns the cheapest feasible
+    one in worker-seconds (or an explicit infeasible verdict).
+
+    Example (validates on construction)::
+
+        >>> SLO(quantile=0.99, target_s=30.0, arrival_rate=0.5)
+        SLO(quantile=0.99, target_s=30.0, arrival_rate=0.5, job_class=None)
+    """
+
+    quantile: float = 0.99
+    target_s: float = 1.0
+    arrival_rate: float = 1.0
+    job_class: Optional[str] = None
+
+    def __post_init__(self):
+        if not (0.0 < self.quantile < 1.0):
+            raise ValueError(
+                f"SLO.quantile: must lie in (0, 1), got {self.quantile}"
+            )
+        if not (self.target_s > 0.0):
+            raise ValueError(f"SLO.target_s: must be > 0, got {self.target_s}")
+        if not (self.arrival_rate > 0.0):
+            raise ValueError(
+                f"SLO.arrival_rate: must be > 0, got {self.arrival_rate}"
+            )
+
+
 def _freeze_rows(name: str, rows, width: int) -> Tuple[tuple, ...]:
     out = []
     for row in rows:
@@ -237,6 +287,7 @@ class FaultPlan:
 
     @property
     def max_wid(self) -> int:
+        """Highest worker id any scheduled fault names (-1 when none do)."""
         wids = [int(w) for w, *_ in (*self.kills, *self.slowdowns, *self.hb_stalls)]
         return max(wids) if wids else -1
 
@@ -256,6 +307,16 @@ class Scenario:
 
     Frozen and hashable, so a Scenario can key caches and ride inside jit
     bucketing the way :class:`~repro.cluster.epoch_scan.ReplanConfig` does.
+
+    Example (the routing predicates pick the execution lane)::
+
+        >>> sc = Scenario(scheduler="packed", workers_per_job=4)
+        >>> sc.is_space
+        True
+        >>> sc.is_dynamic
+        False
+        >>> sc.replace(speeds=(1.0, 0.5)).is_dynamic
+        True
     """
 
     dist: Optional[object] = None  # ServiceTime; kept loose to avoid core import cycle
@@ -278,6 +339,8 @@ class Scenario:
     retry: Optional[Retry] = None
     # deterministic chaos schedule; live runtime only
     faults: Optional[FaultPlan] = None
+    # tail response-time objective; consumed by RedundancyPlanner.plan_slo
+    slo: Optional[SLO] = None
     scheduler: Union[str, Scheduler] = "fifo_gang"
     workers_per_job: Optional[int] = None
     job_plans: Optional[Tuple[Optional[JobPlan], ...]] = None
@@ -303,13 +366,15 @@ class Scenario:
 
     @property
     def scheduler_name(self) -> str:
+        """The scheduler's registry name, whether set by name or instance."""
         return self.scheduler if isinstance(self.scheduler, str) else self.scheduler.name
 
     @property
     def is_space(self) -> bool:
         """Whether any space-sharing knob routes this scenario off the
         legacy single-gang lane (shared predicate with
-        :func:`repro.cluster.scheduler.is_space`)."""
+        :func:`repro.cluster.scheduler.is_space`).
+        """
         from .scheduler import is_space
 
         return is_space(self.scheduler_name, self.workers_per_job, self.job_plans)
@@ -443,6 +508,11 @@ class Scenario:
                     f"Scenario.faults: worker ids must lie in [0, {n}), "
                     f"got {self.faults.max_wid}"
                 )
+        if self.slo is not None and not isinstance(self.slo, SLO):
+            # SLO value constraints live in SLO.__post_init__; job_class is
+            # resolved against the workload by plan_slo (unknown names raise
+            # there, where the class list exists)
+            raise ValueError(f"Scenario.slo: expected an SLO, got {type(self.slo)}")
         if not isinstance(self.scheduler, Scheduler) and self.scheduler not in SCHEDULERS:
             raise ValueError(
                 f"Scenario.scheduler: unknown scheduler {self.scheduler!r} "
@@ -537,7 +607,8 @@ class Scenario:
     def to_scan_cfg(self) -> dict:
         """Keyword set for the jax epoch scan
         (:func:`~repro.cluster.epoch_scan.simulate_epochs` /
-        :func:`~repro.cluster.epoch_scan.frontier_job_times_dynamic`)."""
+        :func:`~repro.cluster.epoch_scan.frontier_job_times_dynamic`).
+        """
         return {
             "cancel_redundant": self.cancel_redundant,
             "size_dependent": self.size_dependent,
@@ -565,7 +636,8 @@ class Scenario:
 
     def replace(self, **changes) -> "Scenario":
         """A modified copy: ``sc.replace(cancel_redundant=True)`` -- the
-        ergonomic way to derive scenario variants from a base spec."""
+        ergonomic way to derive scenario variants from a base spec.
+        """
         return dataclasses.replace(self, **changes)
 
     # -- serialization (Scenario v2 JSON) ------------------------------------
@@ -580,6 +652,7 @@ class Scenario:
     # not approximate -- the property the trace-embeds rely on.
 
     def to_dict(self) -> dict:
+        """JSON-ready flat dict of the fields plus ``"version": 2``."""
         out = {"version": 2}
         for f in dataclasses.fields(self):
             out[f.name] = _encode_field(f.name, getattr(self, f.name))
@@ -591,6 +664,7 @@ class Scenario:
 
     @classmethod
     def from_dict(cls, d: dict) -> "Scenario":
+        """Decode :meth:`to_dict` output; unknown fields or versions raise."""
         d = dict(d)
         version = d.pop("version", None)
         if version != 2:
@@ -603,6 +677,7 @@ class Scenario:
 
     @classmethod
     def from_json(cls, s: str) -> "Scenario":
+        """Decode a :meth:`to_json` string."""
         return cls.from_dict(json.loads(s))
 
 
@@ -632,7 +707,7 @@ def _encode_field(name: str, v):
             {k: (list(x) if isinstance(x, tuple) else x) for k, x in dataclasses.asdict(v).items()}
         )
         return out
-    if name in ("churn", "churn_schedule", "replan", "speculation", "retry", "faults"):
+    if name in ("churn", "churn_schedule", "replan", "speculation", "retry", "faults", "slo"):
         return {k: (list(x) if isinstance(x, tuple) else x) for k, x in dataclasses.asdict(v).items()}
     if name == "scheduler":
         if isinstance(v, Scheduler):
@@ -677,6 +752,8 @@ def _decode_field(name: str, v):
         return Retry(**v)
     if name == "faults":
         return FaultPlan(**v)
+    if name == "slo":
+        return SLO(**v)
     if name == "job_plans":
         return tuple(None if p is None else JobPlan(**p) for p in v)
     if name == "speeds":
@@ -719,5 +796,6 @@ def resolve_scenario(
 
 def scenario_from_kwargs(**kwargs) -> Scenario:
     """Build a Scenario from loose kwargs without the deprecation warning
-    (internal plumbing for modules that still speak the kwarg dialect)."""
+    (internal plumbing for modules that still speak the kwarg dialect).
+    """
     return Scenario(**{k: v for k, v in kwargs.items() if v is not UNSET})

@@ -99,6 +99,7 @@ class Scheduler:
     space_sharing: bool = True
 
     def select(self, k: int, free: Sequence, load: Sequence[float]) -> List:
+        """Pick ``k`` of the ``free`` workers for the next job."""
         raise NotImplementedError
 
 
@@ -109,6 +110,7 @@ class FifoGangScheduler(Scheduler):
     space_sharing = False
 
     def select(self, k: int, free: Sequence, load: Sequence[float]) -> List:
+        """Pick ``k`` of the ``free`` workers for the next job."""
         return list(free[:k])
 
 
@@ -119,6 +121,7 @@ class PackedScheduler(Scheduler):
     space_sharing = True
 
     def select(self, k: int, free: Sequence, load: Sequence[float]) -> List:
+        """Pick ``k`` of the ``free`` workers for the next job."""
         return list(free[:k])  # free lists are wid-ordered
 
 
@@ -129,6 +132,7 @@ class BalancedScheduler(Scheduler):
     space_sharing = True
 
     def select(self, k: int, free: Sequence, load: Sequence[float]) -> List:
+        """Pick ``k`` of the ``free`` workers for the next job."""
         return sorted(free, key=lambda w: (load[w.wid], w.wid))[:k]
 
 

@@ -45,6 +45,7 @@ from .scenario import Scenario
 from .vectorized import (
     STREAM_HIST_BINS,
     STREAM_HIST_EDGES,
+    STREAM_QUANTILE_RTOL,
     _stream_slab,
     stream_acc_init,
 )
@@ -55,6 +56,7 @@ __all__ = [
     "simulate_stream",
     "fold_stream_stats",
     "epoch_stream_stats",
+    "STREAM_QUANTILE_RTOL",
 ]
 
 _ACC_FIELDS = (
@@ -68,6 +70,8 @@ _ACC_FIELDS = (
     "saved_sum",
     "hist",
 )
+
+_CLASS_FIELDS = ("class_count", "class_resp_sum", "class_hist")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -92,43 +96,82 @@ class StreamStats:
     busy_sum: np.ndarray  # (S,) charged worker-seconds
     saved_sum: np.ndarray  # (S,) cancelled-seconds-saved
     hist: np.ndarray  # (S, STREAM_HIST_BINS) response histogram
+    class_count: np.ndarray | None = None  # (S, C) per-class completed jobs
+    class_resp_sum: np.ndarray | None = None  # (S, C) per-class response sums
+    class_hist: np.ndarray | None = None  # (S, C, STREAM_HIST_BINS)
+    classes: tuple | None = None  # (C,) class names (source trace jobs)
 
     @classmethod
-    def from_device(cls, acc: dict) -> "StreamStats":
-        return cls(**{k: np.asarray(acc[k]) for k in _ACC_FIELDS})
+    def from_device(cls, acc: dict, classes: tuple | None = None) -> "StreamStats":
+        """Pull a device accumulator dict back to host-side numpy arrays."""
+        kw = {k: np.asarray(acc[k]) for k in _ACC_FIELDS}
+        if "class_hist" in acc:
+            kw.update({k: np.asarray(acc[k]) for k in _CLASS_FIELDS})
+            kw["classes"] = classes
+        return cls(**kw)
 
     @property
     def mean_response(self) -> np.ndarray:
+        """Per-rep mean response time, ``resp_sum / count``."""
         return self.resp_sum / np.maximum(self.count, 1)
 
     @property
     def std_response(self) -> np.ndarray:
+        """Per-rep response-time standard deviation from the moment sums."""
         m = self.mean_response
         var = self.resp_sq / np.maximum(self.count, 1) - m * m
         return np.sqrt(np.maximum(var, 0.0))
 
     @property
     def worker_seconds(self) -> np.ndarray:
+        """Per-rep charged worker-seconds (alias of ``busy_sum``)."""
         return self.busy_sum
 
     @property
     def cancelled_seconds_saved(self) -> np.ndarray:
+        """Per-rep worker-seconds saved by replica cancellation."""
         return self.saved_sum
 
-    def quantile(self, q: float) -> float:
+    def _class_index(self, job_class) -> int:
+        if isinstance(job_class, str):
+            if self.classes is None or job_class not in self.classes:
+                raise KeyError(
+                    f"unknown job class {job_class!r}; classes={self.classes}"
+                )
+            return self.classes.index(job_class)
+        return int(job_class)
+
+    def quantile(self, q: float, job_class=None) -> float:
         """Pooled response quantile from the histogram (bin upper edge).
 
-        Resolution is one log bin (adjacent edges differ by ~18%); the exact
-        extremes are ``resp_min`` / ``resp_max``.
+        The estimator returns the *upper* edge of the bin holding the k-th
+        order statistic (``k = ceil(q * total)``), so for responses inside
+        the grid it never understates the true quantile and overstates it by
+        at most one log bin:
+        ``r <= quantile(q) <= r * (1 + STREAM_QUANTILE_RTOL)`` (~18%).  The
+        exact extremes are ``resp_min`` / ``resp_max``.
+
+        ``job_class`` (a source-trace name or index) restricts the quantile
+        to that class's responses; it needs the per-class state carried by
+        :func:`simulate_stream` and overflow past the last edge returns
+        ``inf`` (conservative: a would-be-feasible SLO is never reported
+        feasible because of histogram saturation).
         """
-        h = self.hist.sum(axis=0)
+        if job_class is None:
+            h = self.hist.sum(axis=0)
+        else:
+            if self.class_hist is None:
+                raise ValueError("per-class quantile needs per-class stream state")
+            h = self.class_hist[:, self._class_index(job_class), :].sum(axis=0)
         total = int(h.sum())
         if total == 0:
             return float("nan")
         k = int(np.ceil(float(q) * total))
         idx = int(np.searchsorted(np.cumsum(h), max(k, 1)))
         if idx >= STREAM_HIST_EDGES.size:
-            return float(self.resp_max.max())
+            if job_class is None:
+                return float(self.resp_max.max())
+            return float("inf")  # saturated class histogram: no upper bound
         return float(STREAM_HIST_EDGES[idx])
 
     def summary(self) -> dict:
@@ -147,6 +190,30 @@ class StreamStats:
                 self.saved_sum.sum() / self.count.shape[0]
             ),
         }
+
+    def class_summary(self) -> dict:
+        """Per-class scalar summary: ``{name: {n_jobs_done, mean, p50..p999}}``.
+
+        Needs the per-class state :func:`simulate_stream` carries; raises if
+        the stats were produced without it (e.g. the epoch-scan stream lane).
+        """
+        if self.class_hist is None:
+            raise ValueError("class_summary needs per-class stream state")
+        names = self.classes or tuple(range(self.class_hist.shape[1]))
+        out = {}
+        for i, name in enumerate(names):
+            total = int(self.class_count[:, i].sum())
+            out[name] = {
+                "n_jobs_done": total,
+                "mean_response": float(
+                    self.class_resp_sum[:, i].sum() / max(total, 1)
+                ),
+                "p50_response": self.quantile(0.50, job_class=i),
+                "p95_response": self.quantile(0.95, job_class=i),
+                "p99_response": self.quantile(0.99, job_class=i),
+                "p999_response": self.quantile(0.999, job_class=i),
+            }
+        return out
 
 
 @dataclasses.dataclass(frozen=True)
@@ -170,18 +237,23 @@ class StreamFullReport:
 
     @property
     def starts(self) -> np.ndarray:
+        """Per-(rep, job) start time: arrival plus queue wait."""
         return self.arrivals[None, :] + np.asarray(self.waits, dtype=np.float64)
 
     @property
     def finishes(self) -> np.ndarray:
+        """Per-(rep, job) finish time: start plus job time."""
         return self.starts + np.asarray(self.t_job, dtype=np.float64)
 
     @property
     def response_times(self) -> np.ndarray:
+        """Per-(rep, job) response time: finish minus arrival."""
         return self.finishes - self.arrivals[None, :]
 
 
-def fold_stream_stats(waits, t_job, busy_j, planned_j, saved_j) -> StreamStats:
+def fold_stream_stats(
+    waits, t_job, busy_j, planned_j, saved_j, class_ids=None, classes=None
+) -> StreamStats:
     """The host reference fold: materialized arrays -> StreamStats.
 
     Replays exactly the accumulator updates the device scan performs -- same
@@ -189,6 +261,10 @@ def fold_stream_stats(waits, t_job, busy_j, planned_j, saved_j) -> StreamStats:
     edges -- as a sequential numpy loop.  This is what "streaming equals
     materialized bit for bit" means operationally: this fold of the full
     outputs must equal the device's carried accumulators exactly.
+
+    ``class_ids`` (a (J,) int array, with ``classes`` the tuple of class
+    names) additionally folds the per-class state the device carries when
+    classes are threaded through :func:`simulate_stream`.
     """
     waits = np.asarray(waits)
     t_job = np.asarray(t_job)
@@ -204,6 +280,14 @@ def fold_stream_stats(waits, t_job, busy_j, planned_j, saved_j) -> StreamStats:
     busy_sum = np.zeros(s, dtype=dt)
     saved_sum = np.zeros(s, dtype=dt)
     hist = np.zeros((s, STREAM_HIST_BINS), dtype=np.int32)
+    cls = None
+    class_count = class_resp_sum = class_hist = None
+    if class_ids is not None:
+        cls = np.asarray(class_ids, dtype=np.int64)
+        n_cls = len(classes) if classes is not None else int(cls.max()) + 1
+        class_count = np.zeros((s, n_cls), dtype=np.int32)
+        class_resp_sum = np.zeros((s, n_cls), dtype=dt)
+        class_hist = np.zeros((s, n_cls, STREAM_HIST_BINS), dtype=np.int32)
     rows = np.arange(s)
     for j in range(n):
         resp = waits[:, j] + t_job[:, j]
@@ -215,7 +299,12 @@ def fold_stream_stats(waits, t_job, busy_j, planned_j, saved_j) -> StreamStats:
         comp_sum += t_job[:, j]
         busy_sum += np.asarray(busy_j)[:, j].astype(dt, copy=False)
         saved_sum += np.asarray(saved_j)[:, j].astype(dt, copy=False)
-        hist[rows, np.searchsorted(edges, resp, side="right")] += 1
+        bins = np.searchsorted(edges, resp, side="right")
+        hist[rows, bins] += 1
+        if cls is not None:
+            class_count[rows, cls[j]] += 1
+            class_resp_sum[:, cls[j]] += resp
+            class_hist[rows, cls[j], bins] += 1
     return StreamStats(
         count=count,
         resp_sum=resp_sum,
@@ -226,6 +315,10 @@ def fold_stream_stats(waits, t_job, busy_j, planned_j, saved_j) -> StreamStats:
         busy_sum=busy_sum,
         saved_sum=saved_sum,
         hist=hist,
+        class_count=class_count,
+        class_resp_sum=class_resp_sum,
+        class_hist=class_hist,
+        classes=tuple(classes) if classes is not None else None,
     )
 
 
@@ -374,7 +467,9 @@ def simulate_stream(
     edges = jnp.asarray(STREAM_HIST_EDGES, dtype=dt)
     rel_free = jnp.full((n_reps, gangs), -float(stream.arrivals[0]), dtype=dt)
     load = jnp.zeros((n_reps, gangs), dtype=dt)
-    acc = stream_acc_init(n_reps, dt)
+    classes = tuple(src.name for src in stream.sources)
+    n_classes = len(classes)
+    acc = stream_acc_init(n_reps, dt, n_classes)
     full_parts: list = []
     for lo, hi in stream.slabs(j_pad):
         k = hi - lo
@@ -391,6 +486,7 @@ def simulate_stream(
             jnp.asarray(np.pad(scales_all[lo:hi], pad, constant_values=1.0), dtype=dt),
             jnp.asarray(np.pad(diffs[lo:hi], pad), dtype=dt),
             jnp.asarray(np.arange(j_pad) < k),
+            jnp.asarray(np.pad(stream.job_ids[lo:hi], pad), dtype=jnp.int32),
             rel_free,
             load,
             acc,
@@ -401,10 +497,11 @@ def simulate_stream(
             cancel_redundant=bool(sc.cancel_redundant),
             balanced=balanced,
             collect=collect,
+            n_classes=n_classes,
         )
         if collect:
             full_parts.append(tuple(np.asarray(o)[:, :k] for o in outs))
-    stats = StreamStats.from_device(acc)
+    stats = StreamStats.from_device(acc, classes=classes)
     if not collect:
         return stats
     waits, t_job, busy_j, planned_j, saved_j = (

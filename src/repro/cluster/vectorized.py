@@ -183,14 +183,17 @@ class FifoReport:
 
     @property
     def compute_times(self) -> np.ndarray:
+        """Per-(rep, job) compute time: finish minus start."""
         return self.finishes - self.starts
 
     @property
     def response_times(self) -> np.ndarray:
+        """Per-(rep, job) response time: finish minus arrival."""
         return self.finishes - self.arrivals[None, :]
 
     @property
     def queue_waits(self) -> np.ndarray:
+        """Per-(rep, job) queueing delay: start minus arrival."""
         return self.starts - self.arrivals[None, :]
 
 
@@ -370,11 +373,23 @@ def simulate_fifo(
 STREAM_HIST_EDGES = np.logspace(-3.0, 6.0, 128)
 STREAM_HIST_BINS = STREAM_HIST_EDGES.size + 1
 
+# Committed accuracy of histogram quantiles: the estimator returns the upper
+# edge of the bin holding the k-th order statistic, so for any response in
+# [edges[0], edges[-1]] the true quantile r satisfies
+# ``r <= estimate <= r * (1 + STREAM_QUANTILE_RTOL)`` -- one log bin, never
+# an underestimate.  Tests pin this bound against the materialized f64 fold.
+STREAM_QUANTILE_RTOL = float(STREAM_HIST_EDGES[1] / STREAM_HIST_EDGES[0]) - 1.0
 
-def stream_acc_init(n_reps: int, dtype) -> dict:
-    """Zeroed accumulator carry for :func:`_stream_slab` (one row per rep)."""
+
+def stream_acc_init(n_reps: int, dtype, n_classes: int = 0) -> dict:
+    """Zeroed accumulator carry for :func:`_stream_slab` (one row per rep).
+
+    With ``n_classes > 0`` the carry also holds per-class response state
+    (count / response sum / histogram), keyed by the job's source-trace
+    index -- the on-device substrate of per-class SLO quantiles.
+    """
     z = jnp.zeros(n_reps, dtype=dtype)
-    return {
+    acc = {
         "count": jnp.zeros(n_reps, dtype=jnp.int32),
         "resp_sum": z,
         "resp_sq": z,
@@ -385,17 +400,27 @@ def stream_acc_init(n_reps: int, dtype) -> dict:
         "saved_sum": z,
         "hist": jnp.zeros((n_reps, STREAM_HIST_BINS), dtype=jnp.int32),
     }
+    if n_classes:
+        acc["class_count"] = jnp.zeros((n_reps, n_classes), dtype=jnp.int32)
+        acc["class_resp_sum"] = jnp.zeros((n_reps, n_classes), dtype=dtype)
+        acc["class_hist"] = jnp.zeros(
+            (n_reps, n_classes, STREAM_HIST_BINS), dtype=jnp.int32
+        )
+    return acc
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("b", "r", "n_gangs", "cancel_redundant", "balanced", "collect"),
+    static_argnames=(
+        "b", "r", "n_gangs", "cancel_redundant", "balanced", "collect", "n_classes",
+    ),
 )
 def _stream_slab(
     draws: jax.Array,  # (S, J, b, r) unscaled service draws
     scales: jax.Array,  # (J,) per-job batch-size scale
     gaps: jax.Array,  # (J,) inter-arrival deltas (gap[j] = a[j+1] - a[j])
     mask: jax.Array,  # (J,) bool: real job vs slab padding
+    cls: jax.Array,  # (J,) int32 job-class ids (ignored when n_classes == 0)
     rel_free: jax.Array,  # (S, G) pool free-times relative to current arrival
     load: jax.Array,  # (S, G) cumulative placed load (balanced tie-break)
     acc: dict,  # accumulator carry, see stream_acc_init
@@ -407,6 +432,7 @@ def _stream_slab(
     cancel_redundant: bool,
     balanced: bool,
     collect: bool,
+    n_classes: int = 0,
 ):
     """One slab of the multi-gang streaming FIFO scan.
 
@@ -433,7 +459,7 @@ def _stream_slab(
 
     def step(carry, inp):
         rel_free, load, acc = carry
-        t, h, w, pl, v, gap, m = inp  # (S,) each; gap/m scalar
+        t, h, w, pl, v, gap, m, c = inp  # (S,) each; gap/m/c scalar
         feas = jnp.min(rel_free, axis=1)  # (S,) earliest any pool frees
         elig = rel_free <= feas[:, None]
         key = jnp.where(elig, load if balanced else gidx[None, :], jnp.inf)
@@ -452,7 +478,8 @@ def _stream_slab(
         # the select is hoisted), breaking bit-equality with the fma-free
         # host reference fold
         resp2 = jnp.maximum(resp * resp, 0.0)
-        acc = {
+        rows = jnp.arange(resp.shape[0])
+        nxt = {
             "count": acc["count"] + one,
             "resp_sum": acc["resp_sum"] + jnp.where(m, resp, 0.0),
             "resp_sq": acc["resp_sq"] + jnp.where(m, resp2, 0.0),
@@ -461,14 +488,20 @@ def _stream_slab(
             "comp_sum": acc["comp_sum"] + jnp.where(m, t, 0.0),
             "busy_sum": acc["busy_sum"] + jnp.where(m, w, 0.0),
             "saved_sum": acc["saved_sum"] + jnp.where(m, v, 0.0),
-            "hist": acc["hist"].at[jnp.arange(resp.shape[0]), bins].add(one),
+            "hist": acc["hist"].at[rows, bins].add(one),
         }
-        return (rel_free, load, acc), (wait if collect else 0.0)
+        if n_classes:
+            nxt["class_count"] = acc["class_count"].at[rows, c].add(one)
+            nxt["class_resp_sum"] = acc["class_resp_sum"].at[rows, c].add(
+                jnp.where(m, resp, 0.0)
+            )
+            nxt["class_hist"] = acc["class_hist"].at[rows, c, bins].add(one)
+        return (rel_free, load, nxt), (wait if collect else 0.0)
 
     (rel_free, load, acc), waits = jax.lax.scan(
         step,
         (rel_free, load, acc),
-        (t_job.T, hold.T, busy.T, planned.T, saved.T, gaps, mask),
+        (t_job.T, hold.T, busy.T, planned.T, saved.T, gaps, mask, cls),
     )
     if collect:
         return rel_free, load, acc, (waits.T, t_job, busy, planned, saved)

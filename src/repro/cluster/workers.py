@@ -49,6 +49,7 @@ class Worker:
 
     @property
     def free(self) -> bool:
+        """Alive and not currently assigned a replica."""
         return self.alive and self.assignment is None
 
 
@@ -72,9 +73,11 @@ class WorkerPool:
         return len(self.workers)
 
     def free_workers(self) -> list:
+        """Workers currently free, in wid order."""
         return [w for w in self.workers if w.free]
 
     def n_alive(self) -> int:
+        """How many workers are currently alive."""
         return sum(1 for w in self.workers if w.alive)
 
 
@@ -91,11 +94,13 @@ class ChurnProcess:
     mean_downtime: float = 0.0
 
     def next_failure(self, rng: np.random.Generator) -> float:
+        """Draw the time until this worker's next failure."""
         if self.fail_rate <= 0.0:
             return math.inf
         return float(rng.exponential(1.0 / self.fail_rate))
 
     def downtime(self, rng: np.random.Generator) -> float:
+        """Draw how long a failed worker stays away before rejoining."""
         if self.mean_downtime <= 0.0:
             return math.inf
         return float(rng.exponential(self.mean_downtime))

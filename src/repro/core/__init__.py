@@ -15,12 +15,19 @@ an online replanner that refits the service-time model from observed task
 times (``RedundancyPlanner.plan_cluster`` scores candidates on that engine).
 """
 from . import analysis, assignment, batching, coupon, simulator, traces
-from .planner import RedundancyPlan, RedundancyPlanner, fit_service_time, plan_sweep
+from .planner import (
+    RedundancyPlan,
+    RedundancyPlanner,
+    SLOCandidate,
+    SLOPlan,
+    fit_service_time,
+    plan_sweep,
+)
 
 # re-exported after core's own submodules are bound: cluster's modules import
 # those submodules directly, so this back-edge stays cycle-safe either way
 # the packages are first imported
-from ..cluster.scenario import Scenario
+from ..cluster.scenario import SLO, Scenario
 from .service_time import (
     Empirical,
     Exponential,
@@ -39,6 +46,9 @@ __all__ = [
     "traces",
     "RedundancyPlan",
     "RedundancyPlanner",
+    "SLO",
+    "SLOCandidate",
+    "SLOPlan",
     "Scenario",
     "fit_service_time",
     "plan_sweep",

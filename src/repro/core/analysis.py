@@ -257,6 +257,7 @@ def mean_T(dist: ServiceTime, n: int, b: int) -> float:
 
 
 def cov_T(dist: ServiceTime, n: int, b: int) -> float:
+    """Closed-form CoV of job time T(n, b) for the parametric families."""
     if isinstance(dist, Exponential):
         return exp_cov_T(b)
     if isinstance(dist, ShiftedExponential):

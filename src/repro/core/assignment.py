@@ -46,12 +46,13 @@ def majorizes(v: np.ndarray, w: np.ndarray) -> bool:
 
 
 def is_balanced(counts: np.ndarray) -> bool:
+    """Whether every batch landed on the same number of workers."""
     counts = np.asarray(counts)
     return bool(counts.min() == counts.max())
 
 
 def assignment_from_counts(counts: np.ndarray) -> np.ndarray:
-    """worker -> batch id map realizing a host-count vector."""
+    """Worker -> batch id map realizing a host-count vector."""
     out = np.concatenate([np.full(c, i, dtype=np.int64) for i, c in enumerate(counts)])
     return out
 

@@ -39,6 +39,7 @@ def _check(n_tasks: int, n_batches: int) -> int:
 
 
 def membership_from_batches(batches: list, n_tasks: int) -> np.ndarray:
+    """Boolean (worker, task) membership matrix from per-worker batch sets."""
     m = np.zeros((len(batches), n_tasks), dtype=bool)
     for w, batch in enumerate(batches):
         m[w, list(batch)] = True

@@ -20,6 +20,7 @@ import numpy as np
 
 
 def log_binom(n: int, k: int) -> float:
+    """Log of the binomial coefficient C(n, k), via lgamma."""
     return math.lgamma(n + 1) - math.lgamma(k + 1) - math.lgamma(n - k + 1)
 
 

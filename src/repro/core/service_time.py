@@ -38,20 +38,23 @@ class ServiceTime:
     """Base class: a positive random variable with a CCDF and samplers."""
 
     def ccdf(self, t: ArrayLike) -> ArrayLike:
+        """Survival function ``P[tau > t]``."""
         raise NotImplementedError
 
     def mean(self) -> float:
+        """Expected service time ``E[tau]``."""
         raise NotImplementedError
 
     def var(self) -> float:
+        """Service-time variance ``Var[tau]``."""
         raise NotImplementedError
 
     def sample(self, key: jax.Array, shape: tuple) -> jax.Array:
-        """jax sampler (traceable)."""
+        """Draw ``shape`` service times on device (jit-traceable)."""
         raise NotImplementedError
 
     def sample_np(self, rng: np.random.Generator, shape: tuple) -> np.ndarray:
-        """numpy sampler (host-side planning)."""
+        """Draw ``shape`` service times on host (planning paths)."""
         raise NotImplementedError
 
     def scaled_by(self, s: float) -> "ServiceTime":
@@ -59,93 +62,118 @@ class ServiceTime:
         raise NotImplementedError
 
     def cov(self) -> float:
+        """Coefficient of variation ``sqrt(Var)/E`` -- the §V spread metric."""
         m = self.mean()
         return math.sqrt(self.var()) / m
 
 
 @dataclasses.dataclass(frozen=True)
 class Exponential(ServiceTime):
+    """Exponential service times ``Exp(mu)`` -- the paper's light-tail model."""
+
     mu: float  # rate
 
     def ccdf(self, t):
+        """Survival function ``P[tau > t]``."""
         xp = jnp if isinstance(t, jax.Array) else np
         t = xp.asarray(t)
         return xp.where(t >= 0.0, xp.exp(-self.mu * t), 1.0)
 
     def mean(self):
+        """Expected service time ``E[tau]``."""
         return 1.0 / self.mu
 
     def var(self):
+        """Service-time variance ``Var[tau]``."""
         return 1.0 / self.mu**2
 
     def sample(self, key, shape):
+        """Draw ``shape`` service times on device (jit-traceable)."""
         return jax.random.exponential(key, shape) / self.mu
 
     def sample_np(self, rng, shape):
+        """Draw ``shape`` service times on host (planning paths)."""
         return rng.exponential(scale=1.0 / self.mu, size=shape)
 
     def scaled_by(self, s):
+        """Distribution of ``s * tau`` (size-dependent batch model, §VI)."""
         # s * Exp(mu) ~ Exp(mu / s)
         return Exponential(mu=self.mu / s)
 
 
 @dataclasses.dataclass(frozen=True)
 class ShiftedExponential(ServiceTime):
+    """Shifted exponential ``delta + Exp(mu)``: a hard floor plus memoryless tail."""
+
     delta: float  # minimum service time (shift)
     mu: float  # rate of the random part
 
     def ccdf(self, t):
+        """Survival function ``P[tau > t]``."""
         xp = jnp if isinstance(t, jax.Array) else np
         t = xp.asarray(t)
         return xp.where(t >= self.delta, xp.exp(-self.mu * (t - self.delta)), 1.0)
 
     def mean(self):
+        """Expected service time ``E[tau]``."""
         return self.delta + 1.0 / self.mu
 
     def var(self):
+        """Service-time variance ``Var[tau]``."""
         return 1.0 / self.mu**2
 
     def sample(self, key, shape):
+        """Draw ``shape`` service times on device (jit-traceable)."""
         return self.delta + jax.random.exponential(key, shape) / self.mu
 
     def sample_np(self, rng, shape):
+        """Draw ``shape`` service times on host (planning paths)."""
         return self.delta + rng.exponential(scale=1.0 / self.mu, size=shape)
 
     def scaled_by(self, s):
+        """Distribution of ``s * tau`` (size-dependent batch model, §VI)."""
         # s * SExp(delta, mu) ~ SExp(s * delta, mu / s)
         return ShiftedExponential(delta=self.delta * s, mu=self.mu / s)
 
 
 @dataclasses.dataclass(frozen=True)
 class Pareto(ServiceTime):
+    """Pareto service times -- the paper's heavy-tail straggler model."""
+
     sigma: float  # scale (minimum value)
     alpha: float  # shape (tail index); mean finite iff alpha > 1
 
     def ccdf(self, t):
+        """Survival function ``P[tau > t]``."""
         xp = jnp if isinstance(t, jax.Array) else np
         t = xp.asarray(t)
         return xp.where(t >= self.sigma, (t / self.sigma) ** (-self.alpha), 1.0)
 
     def mean(self):
+        """Expected service time ``E[tau]``."""
         if self.alpha <= 1.0:
             return math.inf
         return self.alpha * self.sigma / (self.alpha - 1.0)
 
     def var(self):
+        """Service-time variance ``Var[tau]``."""
         if self.alpha <= 2.0:
             return math.inf
         a = self.alpha
         return self.sigma**2 * a / ((a - 1.0) ** 2 * (a - 2.0))
 
     def sample(self, key, shape):
+        """Draw ``shape`` service times on device (jit-traceable)."""
         u = jax.random.uniform(key, shape, minval=jnp.finfo(jnp.float32).tiny, maxval=1.0)
         return self.sigma * u ** (-1.0 / self.alpha)
 
     def sample_np(self, rng, shape):
+        """Draw ``shape`` service times on host (planning paths)."""
         u = rng.uniform(low=np.finfo(np.float64).tiny, high=1.0, size=shape)
         return self.sigma * u ** (-1.0 / self.alpha)
 
     def scaled_by(self, s):
+        """Distribution of ``s * tau`` (size-dependent batch model, §VI)."""
         # s * Pareto(sigma, alpha) ~ Pareto(s * sigma, alpha)  (alpha unchanged)
         return Pareto(sigma=self.sigma * s, alpha=self.alpha)
 
@@ -165,27 +193,33 @@ class Empirical(ServiceTime):
         return np.asarray(self.samples, dtype=np.float64)
 
     def ccdf(self, t):
+        """Survival function ``P[tau > t]``."""
         s = self._arr()
         t = np.asarray(t, dtype=np.float64)
         # P(X > t) estimated from the empirical distribution.
         return (s[None, ...] > np.expand_dims(t, -1)).mean(axis=-1)
 
     def mean(self):
+        """Expected service time ``E[tau]``."""
         return float(self._arr().mean())
 
     def var(self):
+        """Service-time variance ``Var[tau]``."""
         return float(self._arr().var())
 
     def sample(self, key, shape):
+        """Draw ``shape`` service times on device (jit-traceable)."""
         s = jnp.asarray(self._arr())
         idx = jax.random.randint(key, shape, 0, s.shape[0])
         return s[idx]
 
     def sample_np(self, rng, shape):
+        """Draw ``shape`` service times on host (planning paths)."""
         s = self._arr()
         return rng.choice(s, size=shape, replace=True)
 
     def scaled_by(self, s):
+        """Distribution of ``s * tau`` (size-dependent batch model, §VI)."""
         return Empirical(samples=tuple(float(x) * s for x in self.samples))
 
 

@@ -32,6 +32,8 @@ __all__ = [
 
 @dataclasses.dataclass(frozen=True)
 class JobTimeStats:
+    """Summary statistics of a job-time sample (mean, spread, tail quantiles)."""
+
     mean: float
     std: float
     cov: float  # coefficient of variation -- the paper's predictability metric
@@ -42,10 +44,12 @@ class JobTimeStats:
 
     @staticmethod
     def empty() -> "JobTimeStats":
+        """The all-NaN stats object for an empty sample."""
         return JobTimeStats(np.nan, np.nan, np.nan, np.nan, np.nan, np.nan, 0)
 
 
 def stats_from_samples(samples: np.ndarray) -> JobTimeStats:
+    """Fold a sample of job times into :class:`JobTimeStats`."""
     s = np.asarray(samples, dtype=np.float64)
     m = float(s.mean())
     sd = float(s.std())

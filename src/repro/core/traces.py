@@ -27,6 +27,7 @@ __all__ = [
     "STREAM_VERSION",
     "synthetic_google_jobs",
     "synthetic_cluster_day",
+    "poisson_stream",
     "save_jobs",
     "load_jobs",
     "tail_family",
@@ -35,12 +36,15 @@ __all__ = [
 
 @dataclasses.dataclass(frozen=True)
 class TraceJob:
+    """One trace-derived job: a named bag of per-task service times."""
+
     name: str
     family: str  # 'exponential' | 'heavy'
     task_times: np.ndarray  # per-task service times (seconds)
 
     @property
     def n_tasks(self) -> int:
+        """How many tasks the trace recorded for this job."""
         return int(self.task_times.size)
 
 
@@ -143,6 +147,7 @@ class TraceStream:
 
     @property
     def n_jobs(self) -> int:
+        """Stream length in jobs."""
         return int(self.arrivals.size)
 
     @property
@@ -209,6 +214,38 @@ def synthetic_cluster_day(
     return TraceStream(arrivals=arrivals, job_ids=job_ids, sources=sources, seed=seed)
 
 
+def poisson_stream(
+    sources,
+    arrival_rate: float,
+    n_jobs: int,
+    seed: int = 0,
+) -> TraceStream:
+    """A Poisson-arrival :class:`TraceStream` over the given source jobs.
+
+    Inter-arrival gaps are iid Exponential(``arrival_rate``) and each
+    arrival resamples one source job chosen uniformly -- the offered-load
+    model :meth:`repro.core.planner.RedundancyPlanner.plan_slo` evaluates
+    SLO candidates under.  Fully determined by ``(seed, STREAM_VERSION)``
+    and the sources, like every stream.
+
+    ``sources`` are :class:`TraceJob` objects; wrap a parametric
+    service-time model via its sampled task times, e.g.
+    ``TraceJob("exp", "exponential", dist.sample_np(rng, (4000,)))``.
+    """
+    sources = tuple(sources)
+    if not sources:
+        raise ValueError("poisson_stream needs at least one source TraceJob")
+    if not (arrival_rate > 0.0):
+        raise ValueError(f"arrival_rate must be > 0, got {arrival_rate}")
+    rng = np.random.default_rng(
+        np.random.SeedSequence((int(seed), STREAM_VERSION, 0x510))
+    )
+    gaps = rng.exponential(scale=1.0 / float(arrival_rate), size=int(n_jobs))
+    arrivals = np.cumsum(gaps)
+    job_ids = rng.integers(0, len(sources), size=int(n_jobs))
+    return TraceStream(arrivals=arrivals, job_ids=job_ids, sources=sources, seed=seed)
+
+
 def tail_family(task_times: np.ndarray) -> str:
     """Classify exponential vs heavy tail from the empirical log-CCDF.
 
@@ -239,6 +276,7 @@ def tail_family(task_times: np.ndarray) -> str:
 
 
 def save_jobs(jobs: List[TraceJob], path: str | pathlib.Path) -> None:
+    """Write jobs as a compressed ``.npz`` plus a ``.json`` family sidecar."""
     path = pathlib.Path(path)
     path.parent.mkdir(parents=True, exist_ok=True)
     arrays = {j.name: j.task_times for j in jobs}
@@ -248,6 +286,7 @@ def save_jobs(jobs: List[TraceJob], path: str | pathlib.Path) -> None:
 
 
 def load_jobs(path: str | pathlib.Path) -> List[TraceJob]:
+    """Read back what :func:`save_jobs` wrote."""
     path = pathlib.Path(path)
     data = np.load(path.with_suffix(".npz"))
     meta: Dict[str, str] = json.loads(path.with_suffix(".json").read_text())

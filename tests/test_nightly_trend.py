@@ -52,11 +52,15 @@ def test_multi_file_mode_renders_one_row_per_run_in_order():
     assert " -..- " in body[2] and "12.50x" in body[2]
     # the speculation column: values where the section exists, dashes before
     assert "1.31x/1.88x" in body[1]
-    assert body[2].rstrip().endswith("| -/- |")
+    assert "| -/- |" in body[2]
     assert "1.42x/1.95x" in body[3]
     # the trace-scale columns: only run-120 carries the section
     assert "| 2.31 | 273 |" in body[3]
     assert "| - | - |" in body[0] and "| - | - |" in body[2]
+    # the SLO columns: only run-120 carries the section; older rows end in
+    # dashes, not a crash
+    assert body[3].rstrip().endswith("| 87% | 5821 |")
+    assert body[2].rstrip().endswith("| -/- | - | - |")
 
 
 def test_mixed_dir_and_file_args(tmp_path):
